@@ -1,0 +1,54 @@
+"""Shared benchmark substrate: cached trace population + fitted models."""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.core import traces
+from repro.core.predictors.models import (LatencySensitivityModel,
+                                          UntouchedMemoryModel)
+
+HORIZON = 10 * 86400
+
+
+@functools.lru_cache(maxsize=None)
+def population(seed: int = 0) -> traces.Population:
+    return traces.Population(seed=seed)
+
+
+@functools.lru_cache(maxsize=None)
+def train_vms(n: int = 2000, seed: int = 1):
+    return tuple(population().sample_vms(n, HORIZON, seed=seed))
+
+
+@functools.lru_cache(maxsize=None)
+def test_vms(n: int = 2000, seed: int = 2):
+    return tuple(population().sample_vms(n, HORIZON, seed=seed,
+                                         start_id=10 ** 6))
+
+
+@functools.lru_cache(maxsize=None)
+def li_model(pdm: float = 0.05, latency: int = 182):
+    vms = list(train_vms())
+    return LatencySensitivityModel(pdm=pdm).fit(
+        traces.pmu_matrix(vms), traces.slowdowns(vms, latency))
+
+
+@functools.lru_cache(maxsize=None)
+def history():
+    return traces.build_history(list(train_vms()))
+
+
+@functools.lru_cache(maxsize=None)
+def um_model(tau: float = 0.05):
+    vms = list(train_vms())
+    return UntouchedMemoryModel(tau).fit(
+        traces.metadata_features(vms, history()),
+        np.array([v.untouched for v in vms]))
+
+
+def claim(results: dict, name: str, ok: bool, detail: str):
+    results.setdefault("claims", []).append(
+        {"claim": name, "ok": bool(ok), "detail": detail})
+    print(f"  [{'PASS' if ok else 'FAIL'}] {name}: {detail}")

@@ -1,0 +1,62 @@
+"""Figs 15+16: zNUMA traffic containment and slowdown vs spilled fraction.
+
+Fig 15 analogue: the decode engine with a correctly-sized local tier sends
+~0% of KV reads to the pool.  Fig 16 analogue: undersizing the local tier
+(overpredicted untouched memory) spills KV pages to the pool; the tier
+model turns the measured pool-traffic fraction into a slowdown.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.configs.registry import get_smoke
+from repro.core.latency_model import TierModel
+from repro.models.model_zoo import build_model
+from repro.serving.engine import DecodeEngine, paged_kv_config
+from repro.serving.scheduler import Request
+
+
+def _run_engine(model, params, cfg, num_local, pdm=2.0):
+    eng = DecodeEngine(model, params,
+                       paged_kv_config(cfg, page_size=4,
+                                       num_local=num_local, num_pool=64),
+                       max_batch=2, pdm=pdm)
+    rng = np.random.default_rng(3)
+    for r in range(2):
+        eng.submit(Request(req_id=r, prompt_len=16, max_new_tokens=8),
+                   rng.integers(0, cfg.vocab_size, 16))
+    stats = eng.run(60)
+    return float(np.mean(stats.pool_traffic_fracs or [0.0]))
+
+
+def run(quick: bool = True) -> dict:
+    print("== Fig 15/16: zNUMA traffic + spill slowdown ==")
+    cfg = get_smoke("qwen2-1.5b")
+    model = build_model(cfg)
+    params = jax.tree.map(lambda a: a.astype(jnp.float32),
+                          model.init_params(jax.random.key(0)))
+    res = {}
+    # Fig 15: correct sizing -> no pool traffic
+    traffic_ok = _run_engine(model, params, cfg, num_local=16)
+    print(f"  correctly-sized local tier: pool traffic = {traffic_ok:.4f}")
+    common.claim(res, "zNUMA contains traffic (<0.5%, paper 0.06-0.38%)",
+                 traffic_ok < 0.005, f"{traffic_ok:.4f}")
+    # Fig 16: spill sweep
+    tier = TierModel()
+    rows = []
+    for num_local in (12, 8, 4, 2):
+        frac = _run_engine(model, params, cfg, num_local=num_local)
+        slow = tier.slowdown_factor(frac) - 1.0
+        rows.append((num_local, frac, slow))
+        print(f"  local={num_local:2d} pages: spilled={frac:5.2f} "
+              f"modeled slowdown={slow * 100:5.1f}%")
+    res["rows"] = rows
+    common.claim(res, "slowdown grows monotonically with spill (Fig 16)",
+                 all(a[2] <= b[2] + 1e-9 for a, b in zip(rows, rows[1:])),
+                 str([round(r[2], 3) for r in rows]))
+    common.claim(res, "full spill reaches ~>30% slowdown band",
+                 rows[-1][2] > 0.3, f"{rows[-1][2]:.2f}")
+    return res

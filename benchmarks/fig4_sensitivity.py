@@ -1,0 +1,34 @@
+"""Figs 4+5: slowdown distribution of 158 workloads at 182%/222% latency."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import traces
+
+
+def run(quick: bool = True) -> dict:
+    print("== Fig 4/5: workload sensitivity to pool latency ==")
+    # the paper's population is 158 workloads; sample the same count
+    vms = common.population().sample_vms(158 if quick else 1580,
+                                         86400, seed=9, start_id=5 * 10**6)
+    res = {}
+    paper = {182: (0.26, 0.43, 0.21), 222: (0.23, 0.37, 0.37)}
+    for lat in (182, 222):
+        s = traces.slowdowns(list(vms), lat)
+        lt1, lt5, gt25 = (float((s < .01).mean()),
+                          float((s < .05).mean()),
+                          float((s > .25).mean()))
+        res[lat] = {"lt1": lt1, "lt5": lt5, "gt25": gt25}
+        p = paper[lat]
+        print(f"  {lat}%: <1%={lt1:.2f} (paper {p[0]}), <5%={lt5:.2f} "
+              f"(paper {p[1]}), >25%={gt25:.2f} (paper {p[2]})")
+        common.claim(res, f"{lat}% bands within 0.08 of paper",
+                     abs(lt1 - p[0]) < 0.08 and abs(lt5 - p[1]) < 0.08
+                     and abs(gt25 - p[2]) < 0.08,
+                     f"{lt1:.2f}/{lt5:.2f}/{gt25:.2f}")
+    s182 = traces.slowdowns(list(vms), 182)
+    s222 = traces.slowdowns(list(vms), 222)
+    common.claim(res, "222% magnifies 182% monotonically",
+                 bool((s222 >= s182 - 1e-9).all()), "per-workload check")
+    return res

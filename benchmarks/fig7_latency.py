@@ -1,0 +1,28 @@
+"""Figs 7+8: pool access latency vs pool size; EMC vs switch-only."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import latency_model as lm
+
+
+def run(quick: bool = True) -> dict:
+    print("== Fig 7/8: CXL pool latency model ==")
+    res = {"rows": []}
+    for s in (8, 16, 32, 64):
+        pond = lm.pond_latency_ns(s)
+        sw = lm.switch_only_latency_ns(s)
+        add = lm.added_latency_ns(s)
+        res["rows"].append((s, pond, sw, add))
+        print(f"  {s:3d} sockets: pond={pond:5.0f}ns (+{add:3.0f}) "
+              f"switch-only={sw:5.0f}ns  ({lm.latency_increase_pct(s):.0f}%"
+              f" of NUMA-local)")
+    common.claim(res, "8-16 socket pools add 70-90ns (paper §4.1)",
+                 lm.added_latency_ns(8) == 70 and
+                 lm.added_latency_ns(16) == 90, "70/90ns")
+    common.claim(res, ">180ns for rack-scale (32+) pools",
+                 lm.added_latency_ns(32) > 180,
+                 f"{lm.added_latency_ns(32):.0f}ns")
+    red = 1 - lm.pond_latency_ns(8) / lm.switch_only_latency_ns(8)
+    common.claim(res, "EMC-first design ~1/3 below switch-only (Fig 8)",
+                 0.25 < red < 0.45, f"reduction={red:.2f}")
+    return res

@@ -1,0 +1,59 @@
+"""Kernel allclose + (CPU-wall informational) microbench for the two
+Pallas kernels against their jnp oracles."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.paged_attention import ops as pa_ops
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def run(quick: bool = True) -> dict:
+    print("== kernels: allclose sweeps + microbench ==")
+    rng = np.random.default_rng(0)
+    res = {}
+    shapes = [(1, 128, 8, 2, 64), (2, 256, 4, 4, 64)]
+    max_err = 0.0
+    for (b, s, hq, hkv, d) in shapes:
+        q = jnp.asarray(rng.normal(size=(b, s, hq, d)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(b, s, hkv, d)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(b, s, hkv, d)).astype(np.float32))
+        out = fa_ops.flash_attention(q, k, v, causal=True)
+        ref = attention_ref(q, k, v, causal=True)
+        max_err = max(max_err, float(jnp.abs(out - ref).max()))
+    print(f"  flash attention max err over {len(shapes)} shapes: "
+          f"{max_err:.2e}")
+    common.claim(res, "flash kernel path allclose to oracle",
+                 max_err < 5e-5, f"{max_err:.2e}")
+    b, hq, hkv, d, npg, page, pps = 4, 8, 2, 64, 64, 16, 8
+    q = jnp.asarray(rng.normal(size=(b, hq, d)).astype(np.float32))
+    kp = jnp.asarray(rng.normal(size=(hkv, npg, page, d)).astype(np.float32))
+    vp = jnp.asarray(rng.normal(size=(hkv, npg, page, d)).astype(np.float32))
+    tbl = jnp.asarray(rng.integers(0, npg, (b, pps)), jnp.int32)
+    lens = jnp.asarray(rng.integers(8, pps * page, (b,)), jnp.int32)
+    out = pa_ops.paged_attention(q, kp, vp, tbl, lens)
+    ref = paged_attention_ref(q, kp, vp, tbl, lens, scale=d ** -0.5)
+    err = float(jnp.abs(out - ref).max())
+    print(f"  paged attention err: {err:.2e}")
+    common.claim(res, "paged kernel path allclose to oracle", err < 5e-5,
+                 f"{err:.2e}")
+    # informational: CPU wall time of the jitted flash path
+    q = jnp.asarray(rng.normal(size=(1, 1024, 8, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 1024, 2, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 1024, 2, 64)).astype(np.float32))
+    f = jax.jit(lambda q, k, v: fa_ops.flash_attention(q, k, v, causal=True))
+    f(q, k, v).block_until_ready()
+    t0 = time.time()
+    for _ in range(3):
+        f(q, k, v).block_until_ready()
+    dt = (time.time() - t0) / 3
+    print(f"  flash 1x1024x8x64 CPU wall: {dt * 1e3:.1f} ms (informational)")
+    res["flash_1k_ms"] = dt * 1e3
+    return res

@@ -1,0 +1,97 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSON artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report [--outdir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def _load(outdir, mesh):
+    d = os.path.join(outdir, mesh)
+    rows = []
+    if not os.path.isdir(d):
+        return rows
+    for f in sorted(os.listdir(d)):
+        rows.append(json.load(open(os.path.join(d, f))))
+    return rows
+
+
+def dryrun_table(outdir: str) -> str:
+    lines = ["| arch | shape | mesh | status | GB/dev | fits 16GiB | "
+             "compile s |", "|---|---|---|---|---|---|---|"]
+    for mesh in ("single", "multi"):
+        for r in _load(outdir, mesh):
+            if r["status"] == "ok":
+                m = r["memory"]
+                lines.append(
+                    f"| {r['arch']} | {r['shape']} | {mesh} | ok | "
+                    f"{m['device_total_bytes'] / 2 ** 30:.2f} | "
+                    f"{'yes' if m['fits_16GiB'] else 'NO'} | "
+                    f"{r['t_compile_s']} |")
+            else:
+                why = (r.get("skip_reason") or
+                       str(r.get("error", ""))[:60])
+                lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | "
+                             f"{r['status']} | — | — | {why} |")
+    return "\n".join(lines)
+
+
+def roofline_table(outdir: str) -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | useful (6ND/HLO) | MODEL_FLOPS (global) |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in _load(outdir, "single"):
+        if r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        uf = rl.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.2e} | "
+            f"{rl['memory_s']:.2e} | {rl['collective_s']:.2e} | "
+            f"**{rl['dominant']}** | "
+            f"{uf and round(min(uf, 9.99), 3)} | "
+            f"{rl['model_flops_global']:.2e} |")
+    return "\n".join(lines)
+
+
+def collective_mix(outdir: str) -> str:
+    lines = ["| arch | shape | all-reduce GiB | all-gather GiB | "
+             "a2a GiB | rs GiB | permute GiB |",
+             "|---|---|---|---|---|---|---|"]
+    for r in _load(outdir, "single"):
+        if r["status"] != "ok":
+            continue
+        bc = r["hlo_counts"]["by_collective"]
+        gib = lambda k: bc.get(k, 0.0) / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {gib('all-reduce'):.2f} | "
+            f"{gib('all-gather'):.2f} | {gib('all-to-all'):.2f} | "
+            f"{gib('reduce-scatter'):.2f} | "
+            f"{gib('collective-permute'):.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    ap.add_argument("--what", default="all",
+                    choices=["all", "dryrun", "roofline", "collectives"])
+    args = ap.parse_args()
+    if args.what in ("all", "dryrun"):
+        print("### Dry-run matrix\n")
+        print(dryrun_table(args.outdir))
+        print()
+    if args.what in ("all", "roofline"):
+        print("### Roofline terms (single pod, per device per step)\n")
+        print(roofline_table(args.outdir))
+        print()
+    if args.what in ("all", "collectives"):
+        print("### Collective mix (single pod, wire GiB/device/step)\n")
+        print(collective_mix(args.outdir))
+
+
+if __name__ == "__main__":
+    main()

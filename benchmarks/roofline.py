@@ -1,0 +1,30 @@
+"""§Roofline: per (arch x shape x mesh) terms from the dry-run artifacts."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def run(quick: bool = True) -> dict:
+    print("== Roofline table (from experiments/dryrun) ==")
+    base = "experiments/dryrun"
+    rows = []
+    for mesh in ("single", "multi"):
+        d = os.path.join(base, mesh)
+        if not os.path.isdir(d):
+            continue
+        for f in sorted(os.listdir(d)):
+            r = json.load(open(os.path.join(d, f)))
+            if r.get("status") != "ok":
+                continue
+            rows.append(r)
+    ok = [r for r in rows if r["mesh"] == "single"]
+    print(f"  {len(ok)} single-pod cells compiled "
+          f"(+{len(rows) - len(ok)} multi-pod)")
+    for r in ok:
+        rl = r["roofline"]
+        print(f"  {r['arch']:24s} {r['shape']:12s} dom={rl['dominant']:10s}"
+              f" compute={rl['compute_s']:.2e}s coll={rl['collective_s']:.2e}s"
+              f" useful={rl['useful_flops_ratio'] and round(rl['useful_flops_ratio'], 3)}")
+    res = {"cells": len(rows)}
+    return res

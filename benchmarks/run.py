@@ -1,0 +1,66 @@
+"""Benchmark runner: one module per paper figure/table + roofline report.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.fig2_stranding",
+    "benchmarks.fig3_poolsize",
+    "benchmarks.fig4_sensitivity",
+    "benchmarks.fig7_latency",
+    "benchmarks.fig16_spill",
+    "benchmarks.fig17_li_model",
+    "benchmarks.fig18_um_model",
+    "benchmarks.fig20_combined",
+    "benchmarks.fig21_e2e",
+    "benchmarks.kernel_bench",
+    "benchmarks.roofline",
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    out = {}
+    n_pass = n_fail = 0
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(name)
+            res = mod.run(quick=not args.full)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            res = {"error": str(e),
+                   "claims": [{"claim": f"{name} runs", "ok": False,
+                               "detail": str(e)}]}
+        out[name] = res
+        for c in res.get("claims", []):
+            n_pass += c["ok"]
+            n_fail += not c["ok"]
+        print(f"  ({time.time() - t0:.0f}s)\n")
+    os.makedirs("experiments", exist_ok=True)
+    def default(o):
+        try:
+            return float(o)
+        except Exception:
+            return str(o)
+    with open("experiments/benchmarks.json", "w") as f:
+        json.dump(out, f, indent=1, default=default)
+    print(f"=== paper-claim checks: {n_pass} PASS / {n_fail} FAIL ===")
+    print("results -> experiments/benchmarks.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Paper Fig 21 in miniature: DRAM savings of Pond vs static vs all-local.
+
+  PYTHONPATH=src python examples/cluster_savings.py
+"""
+from benchmarks import fig21_e2e
+
+
+def main():
+    fig21_e2e.run(quick=True)
+
+
+if __name__ == "__main__":
+    main()

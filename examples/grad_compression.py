@@ -1,0 +1,51 @@
+"""Cross-pod int8 gradient all-reduce: wire-byte reduction measured from
+the compiled HLO (the distributed-optimization trick of DESIGN.md §5).
+
+  PYTHONPATH=src python examples/grad_compression.py
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax                                    # noqa: E402
+import jax.numpy as jnp                       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.launch import hlo_analysis         # noqa: E402
+from repro.optim.compress import QTensor      # noqa: E402
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    g_spec = NamedSharding(mesh, P("data", None))
+    grads = jax.ShapeDtypeStruct((1024, 512), jnp.float32)
+
+    def sync_fp32(g):
+        return jax.shard_map(
+            lambda x: jax.lax.pmean(x, "pod"), mesh=mesh,
+            in_specs=P("data", None), out_specs=P("data", None),
+            check_vma=False)(g)
+
+    def sync_int8(g):
+        def local(x):
+            q = QTensor.quantize(x)
+            # wire carries the int8 payload (+tiny fp32 scales): all-gather
+            # then reduce locally — ~4x less cross-pod traffic than fp32
+            datas = jax.lax.all_gather(q.data, "pod")        # int8 wire
+            scales = jax.lax.all_gather(q.scale, "pod")      # fp32, small
+            deq = jnp.mean(datas.astype(jnp.float32) * scales, axis=0)
+            return deq.reshape(-1)[: x.size].reshape(x.shape)
+        return jax.shard_map(local, mesh=mesh, in_specs=P("data", None),
+                             out_specs=P("data", None),
+                             check_vma=False)(g)
+
+    for name, fn in (("fp32", sync_fp32), ("int8", sync_int8)):
+        co = jax.jit(fn, in_shardings=g_spec,
+                     out_shardings=g_spec).lower(grads).compile()
+        c = hlo_analysis.analyze(co.as_text(), 8)
+        print(f"{name}: cross-pod collective wire bytes/device = "
+              f"{c.collective_bytes:,.0f}")
+
+
+if __name__ == "__main__":
+    main()

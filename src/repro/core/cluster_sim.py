@@ -1,0 +1,325 @@
+"""Cluster stranding & pooling simulator (Pond §3.1, §6.5; Figs 2, 3, 21).
+
+Two analyses over the same synthetic traces (core/traces.py):
+
+* ``stranding_analysis``  — fixed per-server DRAM; replay arrivals with a
+  cores+memory bin-packer; stranded memory = free DRAM on servers whose
+  cores are exhausted (Fig 2a: grows with scheduled-core fraction).
+
+* ``savings_analysis``    — placement fixed (cores-only bin-packing, as the
+  paper replays trace placements), memory policy varied:
+     - all-local (baseline provisioning),
+     - static x% pool for every VM (strawman),
+     - Pond (control plane with LI + UM predictions + QoS mitigation).
+  Required DRAM = sum of per-server local peaks + per-pool-group peaks;
+  savings vs baseline (Fig 3 / Fig 21).  Pool groups span ``pool_sockets``
+  sockets (2 sockets per server).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import defaultdict
+
+import numpy as np
+
+from repro.core import traces
+from repro.core.control_plane import ControlPlane
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    n_servers: int = 32
+    cores_per_server: int = 64          # 2 sockets
+    gb_per_core: float = 6.0            # provisioned DRAM/core (stranding)
+    pool_sockets: int = 16              # sockets per pool group
+    min_vm_cores: int = 2
+
+    @property
+    def servers_per_group(self) -> int:
+        return max(1, self.pool_sockets // 2)
+
+    @property
+    def n_groups(self) -> int:
+        return math.ceil(self.n_servers / self.servers_per_group)
+
+
+# ---------------------------------------------------------------------------
+def arrivals_for_util(cfg: ClusterConfig, target_util: float,
+                      horizon_s: float, mean_cores: float = 9.3,
+                      mean_life_s: float = 1.9e4) -> int:
+    """VM count that drives the cluster to ~target core utilization."""
+    total_cores = cfg.n_servers * cfg.cores_per_server
+    return int(target_util * total_cores * horizon_s
+               / (mean_cores * mean_life_s))
+
+
+def place_by_cores(vms, cfg: ClusterConfig):
+    """Best-fit-by-cores placement (memory never constrains — the paper
+    replays VM-to-server placements and varies only the memory policy).
+    Returns {vm_id: server} and the rejected list."""
+    events = []
+    for vm in vms:
+        events.append((vm.arrival, 0, vm))
+        events.append((vm.departure, 1, vm))
+    events.sort(key=lambda e: (e[0], e[1]))
+    free_cores = np.full(cfg.n_servers, cfg.cores_per_server, float)
+    placement, rejected = {}, []
+    for t, kind, vm in events:
+        if kind == 1:
+            s = placement.get(vm.vm_id)
+            if s is not None:
+                free_cores[s] += vm.cores
+            continue
+        fits = np.flatnonzero(free_cores >= vm.cores)
+        if len(fits) == 0:
+            rejected.append(vm.vm_id)
+            continue
+        s = fits[np.argmin(free_cores[fits])]      # best fit
+        free_cores[s] -= vm.cores
+        placement[vm.vm_id] = int(s)
+    return placement, rejected
+
+
+# ------------------------------------------------------------ stranding ----
+def stranding_analysis(vms, cfg: ClusterConfig, n_snapshots: int = 200):
+    """Fig 2a: (scheduled-core-frac bucket) -> stranded-memory fraction."""
+    placement, _ = place_by_cores(vms, cfg)
+    events = []
+    for vm in vms:
+        if vm.vm_id not in placement:
+            continue
+        s = placement[vm.vm_id]
+        events.append((vm.arrival, s, vm.cores, vm.mem_gb))
+        events.append((vm.departure, s, -vm.cores, -vm.mem_gb))
+    events.sort(key=lambda e: e[0])
+    horizon = max(e[0] for e in events)
+    snaps = np.linspace(horizon * 0.05, horizon * 0.95, n_snapshots)
+    cores_used = np.zeros(cfg.n_servers)
+    mem_used = np.zeros(cfg.n_servers)
+    server_gb = cfg.cores_per_server * cfg.gb_per_core
+    out = []          # (core_frac, stranded_frac) per snapshot
+    ei = 0
+    for t in snaps:
+        while ei < len(events) and events[ei][0] <= t:
+            _, s, dc, dm = events[ei]
+            cores_used[s] += dc
+            mem_used[s] += min(dm, server_gb - mem_used[s]) if dm > 0 else dm
+            ei += 1
+        core_frac = cores_used.sum() / (cfg.n_servers * cfg.cores_per_server)
+        # stranded: free memory on servers that cannot host the smallest VM
+        full = (cfg.cores_per_server - cores_used) < cfg.min_vm_cores
+        stranded = np.sum(np.maximum(server_gb - mem_used, 0.0) * full)
+        out.append((core_frac, stranded / (cfg.n_servers * server_gb)))
+    return np.array(out)
+
+
+def stranding_by_bucket(snapshots: np.ndarray, edges=None):
+    edges = edges if edges is not None else \
+        np.array([0.0, 0.55, 0.65, 0.75, 0.85, 0.95, 1.01])
+    rows = []
+    for lo, hi in zip(edges[:-1], edges[1:]):
+        m = (snapshots[:, 0] >= lo) & (snapshots[:, 0] < hi)
+        if m.sum():
+            vals = snapshots[m, 1]
+            rows.append(((lo + hi) / 2, float(np.mean(vals)),
+                         float(np.percentile(vals, 95))))
+    return rows
+
+
+# -------------------------------------------------------------- savings ----
+@dataclasses.dataclass
+class PolicyResult:
+    """Provisioning found by feasibility search, mirroring the paper's
+    simulator: servers ship UNIFORM DRAM; the scheduler is memory-aware
+    (a VM that does not fit on its best-fit server is moved to another);
+    required DRAM is the least uniform (server_gb, pool_gb) that schedules
+    the trace with <= reject_tol rejections (§6.1 "the simulator moves the
+    VMs to another server")."""
+    name: str
+    server_gb: float           # uniform per-server local DRAM
+    pool_group_gb: float       # pool DRAM per group
+    baseline_server_gb: float
+    n_servers: int
+    n_groups: int
+    mispredictions: float
+    mitigations: int
+    reject_rate: float
+
+    @property
+    def total_gb(self) -> float:
+        return self.n_servers * self.server_gb + \
+            self.n_groups * self.pool_group_gb
+
+    @property
+    def baseline_gb(self) -> float:
+        return self.n_servers * self.baseline_server_gb
+
+    @property
+    def savings(self) -> float:
+        return 1.0 - self.total_gb / self.baseline_gb
+
+
+@dataclasses.dataclass
+class VMDecision:
+    local_gb: float
+    pool_gb: float
+    fully_pooled: bool
+    t_migrate: float | None    # QoS mitigation moves pool->local at this t
+
+
+def policy_decisions(vms, policy: str,
+                     control_plane: ControlPlane | None = None,
+                     static_pool_frac: float = 0.15,
+                     latency: int = 182, pdm: float = 0.05,
+                     spill_harm_prob: float = 0.25):
+    """Per-VM memory split + misprediction accounting (placement-free)."""
+    decisions, mispred = [], 0.0
+    slows = traces.slowdowns(vms, latency)
+    for i, vm in enumerate(vms):
+        t_mig = None
+        if policy == "local":
+            local_gb, pool_gb, fully = vm.mem_gb, 0.0, False
+        elif policy == "static":
+            pool_gb = math.floor(vm.mem_gb * static_pool_frac)
+            local_gb, fully = vm.mem_gb - pool_gb, False
+        elif policy == "pond":
+            local_gb, pool_gb, fully, _ = control_plane.decide(vm)
+            h = list(control_plane.history.get(vm.customer, []))
+            h.append(vm.untouched)
+            control_plane.history[vm.customer] = h
+            if pool_gb > 0:
+                spilled = fully or pool_gb > vm.untouched * vm.mem_gb + 1e-9
+                mit = control_plane.monitor.check(
+                    vm.vm_id, vm.pmu, spilled, pool_gb, vm.arrival + 60.0)
+                if mit is not None:
+                    t_mig = mit.at
+        else:
+            raise ValueError(policy)
+        if fully:
+            mispred += 1.0 if slows[i] > pdm else 0.0
+        elif pool_gb > vm.untouched * vm.mem_gb + 1e-9:
+            mispred += spill_harm_prob if slows[i] > pdm else 0.0
+        decisions.append(VMDecision(local_gb, pool_gb, fully, t_mig))
+    return decisions, mispred / max(len(vms), 1)
+
+
+def replay_reject_rate(vms, decisions, cfg: ClusterConfig,
+                       server_gb: float, pool_gb: float) -> float:
+    """Memory-aware replay: best-fit by cores among servers whose free
+    local memory fits; pool checked per group.  Returns reject fraction."""
+    events = []
+    for vm, dec in zip(vms, decisions):
+        events.append((vm.arrival, 0, vm, dec))
+        if dec.t_migrate is not None:
+            events.append((dec.t_migrate, 2, vm, dec))
+        events.append((vm.departure, 1, vm, dec))
+    events.sort(key=lambda e: (e[0], e[1]))
+    free_cores = np.full(cfg.n_servers, float(cfg.cores_per_server))
+    free_mem = np.full(cfg.n_servers, float(server_gb))
+    free_pool = np.full(cfg.n_groups, float(pool_gb))
+    group_of = np.arange(cfg.n_servers) // cfg.servers_per_group
+    placed: dict[int, int] = {}
+    migrated: set[int] = set()
+    rejects = 0
+    for t, kind, vm, dec in events:
+        if kind == 1:                                  # departure
+            s = placed.pop(vm.vm_id, None)
+            if s is None:
+                continue
+            free_cores[s] += vm.cores
+            if vm.vm_id in migrated:
+                free_mem[s] += vm.mem_gb
+                migrated.discard(vm.vm_id)
+            else:
+                free_mem[s] += dec.local_gb
+                free_pool[group_of[s]] += dec.pool_gb
+            continue
+        if kind == 2:                                  # QoS migration
+            s = placed.get(vm.vm_id)
+            if s is None:
+                continue
+            if free_mem[s] >= dec.pool_gb:             # host has local room
+                free_mem[s] -= dec.pool_gb
+                free_pool[group_of[s]] += dec.pool_gb
+                migrated.add(vm.vm_id)
+            continue
+        ok = (free_cores >= vm.cores) & (free_mem >= dec.local_gb) & \
+            (free_pool[group_of] >= dec.pool_gb)
+        cand = np.flatnonzero(ok)
+        if len(cand):
+            s = int(cand[np.argmin(free_cores[cand])])
+            free_cores[s] -= vm.cores
+            free_mem[s] -= dec.local_gb
+            free_pool[group_of[s]] -= dec.pool_gb
+            placed[vm.vm_id] = s
+            continue
+        # pool short -> control-plane fallback: start the VM all-local
+        # (§4.3: VM starts never block on the pool)
+        ok = (free_cores >= vm.cores) & (free_mem >= vm.mem_gb)
+        cand = np.flatnonzero(ok)
+        if len(cand):
+            s = int(cand[np.argmin(free_cores[cand])])
+            free_cores[s] -= vm.cores
+            free_mem[s] -= vm.mem_gb
+            placed[vm.vm_id] = s
+            migrated.add(vm.vm_id)       # departs as all-local
+            continue
+        rejects += 1
+    return rejects / max(len(vms), 1)
+
+
+def _search_min(f, lo: float, hi: float, tol_frac: float = 0.02) -> float:
+    """Least x in [lo, hi] with f(x) True (f monotone)."""
+    if not f(hi):
+        return hi
+    while (hi - lo) > tol_frac * max(hi, 1.0):
+        mid = 0.5 * (lo + hi)
+        if f(mid):
+            hi = mid
+        else:
+            lo = mid
+    return hi
+
+
+def savings_analysis(vms, cfg: ClusterConfig, policy: str,
+                     control_plane: ControlPlane | None = None,
+                     static_pool_frac: float = 0.15,
+                     latency: int = 182, pdm: float = 0.05,
+                     spill_harm_prob: float = 0.25,
+                     reject_tol: float = 0.005) -> PolicyResult:
+    """Minimum uniform (server_gb, pool_gb) that schedules the trace."""
+    decisions, mispred = policy_decisions(
+        vms, policy, control_plane, static_pool_frac, latency, pdm,
+        spill_harm_prob)
+    hi_server = cfg.cores_per_server * 12.0
+    big_pool = hi_server * cfg.n_servers
+    # cores-bound reject floor: memory tolerance is measured on top of it
+    r0 = replay_reject_rate(vms, decisions, cfg, hi_server, big_pool)
+    tol = r0 + reject_tol
+    dec_local = [VMDecision(vm.mem_gb, 0.0, False, None) for vm in vms]
+    base_gb = _search_min(
+        lambda g: replay_reject_rate(vms, dec_local, cfg, g, 0.0)
+        <= tol, 0.0, hi_server)
+    if policy == "local":
+        return PolicyResult(policy, base_gb, 0.0, base_gb, cfg.n_servers,
+                            cfg.n_groups, mispred, 0, r0)
+    # joint provisioning: pool bursts overflow to local (fallback), so the
+    # optimum is NOT the (min server, then min pool) corner — sweep server
+    # sizes and pick the least total DRAM.
+    min_server = _search_min(
+        lambda g: replay_reject_rate(vms, decisions, cfg, g, big_pool)
+        <= tol, 0.0, hi_server)
+    best = (np.inf, min_server, 0.0)
+    for sgb in np.linspace(min_server, base_gb, 7):
+        pgb = _search_min(
+            lambda g: replay_reject_rate(vms, decisions, cfg, sgb, g)
+            <= tol, 0.0, big_pool)
+        total = cfg.n_servers * sgb + cfg.n_groups * pgb
+        if total < best[0]:
+            best = (total, float(sgb), float(pgb))
+    _, server_gb, pool_gb = best
+    rr = replay_reject_rate(vms, decisions, cfg, server_gb, pool_gb)
+    mitig = len(control_plane.mitigation.log) if control_plane else 0
+    return PolicyResult(policy, server_gb, pool_gb, base_gb, cfg.n_servers,
+                        cfg.n_groups, mispred, mitig, rr)

@@ -1,0 +1,85 @@
+"""CXL pool latency model (Pond §4.1, Figures 7 & 8) + TPU tier analogue.
+
+Latency budget per §2/§4.1 and [63,69-72]:
+  * NUMA-local DRAM read           ~78 ns   (Intel Skylake measurement)
+  * CXL port round trip            ~25 ns   per direction-pair (Intel [63])
+  * controller-side overhead       ~20 ns   (ASIC MC, matches the 70ns
+                                             end-to-end claim for 1 EMC hop)
+  * retimer                        ~10 ns   each direction (>500mm traces)
+  * CXL switch                     ~70-100 ns (ports/arbitration/NOC)
+
+Pool-size mapping (Figure 7): <=8 sockets connect directly to one EMC
+(half-IOD); 16 sockets need retimers on some lanes; 32-64 sockets add a
+switch + retimers.  Figure 8: the multi-headed EMC saves the switch for
+small pools — 1/3 lower latency than switch-only designs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+NUMA_LOCAL_NS = 78.0
+CXL_PORT_NS = 25.0
+EMC_CTRL_NS = 20.0
+RETIMER_NS = 10.0          # per direction
+SWITCH_NS = 85.0           # midpoint of 70-100
+
+
+def pond_latency_ns(pool_sockets: int) -> float:
+    """End-to-end read latency (ns) for Pond's EMC-first design (Fig 7)."""
+    lat = NUMA_LOCAL_NS + 2 * CXL_PORT_NS + EMC_CTRL_NS
+    if pool_sockets > 8:
+        lat += 2 * RETIMER_NS            # longer traces need retimers
+    if pool_sockets > 16:
+        lat += SWITCH_NS + 2 * RETIMER_NS  # switch hop + its traces
+    if pool_sockets > 32:
+        lat += 2 * RETIMER_NS            # second-level fan-out
+    return lat
+
+
+def switch_only_latency_ns(pool_sockets: int) -> float:
+    """Strawman without the multi-headed EMC (Fig 8): every pool needs a
+    switch hop."""
+    lat = NUMA_LOCAL_NS + 2 * CXL_PORT_NS + EMC_CTRL_NS + SWITCH_NS
+    if pool_sockets > 8:
+        lat += 2 * RETIMER_NS
+    if pool_sockets > 16:
+        lat += 2 * RETIMER_NS
+    if pool_sockets > 32:
+        lat += 2 * RETIMER_NS
+    return lat
+
+
+def added_latency_ns(pool_sockets: int) -> float:
+    return pond_latency_ns(pool_sockets) - NUMA_LOCAL_NS
+
+
+def latency_increase_pct(pool_sockets: int) -> float:
+    """Relative to NUMA-local; the paper's 182%/222% emulation points
+    correspond to ~143ns and ~173ns absolute (Intel testbed)."""
+    return 100.0 * pond_latency_ns(pool_sockets) / NUMA_LOCAL_NS
+
+
+# --------------------------------------------------------------- TPU tier --
+@dataclasses.dataclass(frozen=True)
+class TierModel:
+    """Pond-JAX tier cost model (DESIGN.md §2): chip HBM vs host pool."""
+    hbm_gbps: float = 819.0
+    pool_gbps: float = 13.0          # PCIe-class effective per chip
+    hbm_latency_us: float = 0.5
+    pool_latency_us: float = 2.0
+
+    def transfer_s(self, nbytes: float, tier: str) -> float:
+        bw = self.hbm_gbps if tier == "local" else self.pool_gbps
+        lat = self.hbm_latency_us if tier == "local" else self.pool_latency_us
+        return lat * 1e-6 + nbytes / (bw * 1e9)
+
+    def slowdown_factor(self, pool_fraction_of_traffic: float) -> float:
+        """Latency-ratio model for a workload sending a fraction of its
+        memory traffic to the pool tier (used by Fig 16 analogue)."""
+        r = self.pool_latency_us / self.hbm_latency_us
+        return 1.0 + pool_fraction_of_traffic * (r - 1.0)
+
+
+def migration_seconds(gb: float) -> float:
+    """One-time mitigation copy: ~50 ms per GB of pool memory (§4.2)."""
+    return 0.050 * gb

@@ -1,0 +1,47 @@
+"""RandomForest classifier — Pond's latency-insensitivity model core (§5).
+
+Bootstrap + per-split feature subsampling over trees.py CART; predicted
+probability = ensemble mean of leaf class fractions.  Inference available
+in numpy and packed-JAX form.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.predictors import trees as T
+
+
+@dataclasses.dataclass
+class RandomForest:
+    trees: list
+    packed: dict | None = None
+
+    def predict_proba(self, x: np.ndarray) -> np.ndarray:
+        return np.mean([t.predict(x) for t in self.trees], axis=0)
+
+    def predict_proba_jax(self, x):
+        import jax.numpy as jnp
+        if self.packed is None:
+            self.packed = T.pack_trees(self.trees)
+        return T.predict_jax(self.packed, jnp.asarray(x))
+
+
+def fit_forest(x: np.ndarray, y: np.ndarray, n_trees: int = 40,
+               max_depth: int = 7, min_leaf: int = 8,
+               max_features: int | None = None,
+               seed: int = 0) -> RandomForest:
+    """y: binary {0,1}; trees regress the class mean (== probability)."""
+    rng = np.random.default_rng(seed)
+    if max_features is None:
+        max_features = max(1, int(np.sqrt(x.shape[1])))
+    forest = []
+    n = len(y)
+    for i in range(n_trees):
+        idx = rng.integers(0, n, n)                  # bootstrap
+        forest.append(T.fit_tree(x[idx], y[idx].astype(np.float32),
+                                 max_depth=max_depth, min_leaf=min_leaf,
+                                 max_features=max_features,
+                                 rng=np.random.default_rng(seed + 100 + i)))
+    return RandomForest(forest)

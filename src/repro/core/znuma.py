@@ -1,0 +1,127 @@
+"""zNUMA: zero-core tier placement (Pond §4.2, Figure 10).
+
+Pond exposes pool memory to the guest as a NUMA node with memory but no
+cores; the guest allocator then *biases* all hot traffic to the local node
+and only spills into the zNUMA node when local is exhausted.  Pond-JAX's
+analogue (DESIGN.md §2):
+
+  * every logical buffer group (params / grads / optimizer state / KV
+    blocks) carries a tier tag, ``local`` (chip HBM) or ``pool`` (host
+    memory behind the chip group);
+  * ``tier_shardings`` rewrites NamedShardings with
+    ``memory_kind="pinned_host"`` for pool-tier leaves — the TPU path where
+    XLA emits async device<->host copies (ld/st-like, no page faults);
+    on backends without host memory-space support (this CPU container) the
+    placement is recorded by the accounting below and exercised by the
+    two-phase optimizer split;
+  * ``ZNumaAllocator`` reproduces the guest-allocator bias for block pools:
+    allocate local-first, spill to pool, and track the spill fraction —
+    the quantity Figure 16 sweeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def supports_host_memory_kind() -> bool:
+    """True when the backend accepts pinned_host shardings in compiles."""
+    return jax.default_backend() in ("tpu", "gpu")
+
+
+def tier_shardings(shardings, tiers, default: str = "local"):
+    """Rewrite a NamedSharding tree with memory kinds per tier tag.
+
+    ``tiers`` is either a str ("pool") applied to the whole tree or a dict
+    keyed by top-level group name (e.g. optim.adamw.state_tier()).
+    """
+    if not supports_host_memory_kind():
+        return shardings
+
+    def kind_for(group):
+        t = tiers if isinstance(tiers, str) else tiers.get(group, default)
+        return "pinned_host" if t == "pool" else "device"
+
+    if isinstance(tiers, str):
+        return jax.tree.map(
+            lambda s: s.with_memory_kind(kind_for(None)), shardings)
+    out = {}
+    for group, sub in shardings.items():
+        out[group] = jax.tree.map(
+            lambda s, g=group: s.with_memory_kind(kind_for(g)), sub)
+    return out
+
+
+@dataclasses.dataclass
+class TierAccount:
+    """Byte accounting per tier — what memory_analysis would show on TPU."""
+    local_bytes: int = 0
+    pool_bytes: int = 0
+
+    def add(self, tree, tier: str):
+        n = sum(x.size * x.dtype.itemsize if hasattr(x, "dtype")
+                else 0 for x in jax.tree.leaves(tree))
+        if tier == "pool":
+            self.pool_bytes += n
+        else:
+            self.local_bytes += n
+        return self
+
+    @property
+    def pool_fraction(self) -> float:
+        tot = self.local_bytes + self.pool_bytes
+        return self.pool_bytes / tot if tot else 0.0
+
+
+class ZNumaAllocator:
+    """Local-first block allocator over a two-tier pool (guest-OS bias).
+
+    Used by serving/kv_cache.py: ``num_local`` blocks of HBM plus
+    ``num_pool`` blocks on the slice pool.  Allocation order reproduces the
+    zNUMA bias: pool blocks are touched only after local is exhausted, so a
+    correctly-sized local tier (= predicted hot footprint) never spills.
+    """
+
+    def __init__(self, num_local: int, num_pool: int):
+        self.num_local = num_local
+        self.num_pool = num_pool
+        self.free_local = list(range(num_local - 1, -1, -1))
+        self.free_pool = list(range(num_local + num_pool - 1,
+                                    num_local - 1, -1))
+        self.allocs = 0
+        self.pool_allocs = 0
+
+    def alloc(self) -> int:
+        """Returns a global block id; local ids < num_local."""
+        self.allocs += 1
+        if self.free_local:
+            return self.free_local.pop()
+        if self.free_pool:
+            self.pool_allocs += 1
+            return self.free_pool.pop()
+        raise MemoryError("zNUMA: both tiers exhausted")
+
+    def free(self, block_id: int):
+        if block_id < self.num_local:
+            self.free_local.append(block_id)
+        else:
+            self.free_pool.append(block_id)
+
+    def is_pool(self, block_id: int) -> bool:
+        return block_id >= self.num_local
+
+    @property
+    def spill_fraction(self) -> float:
+        return self.pool_allocs / self.allocs if self.allocs else 0.0
+
+    @property
+    def local_in_use(self) -> int:
+        return self.num_local - len(self.free_local)
+
+    @property
+    def pool_in_use(self) -> int:
+        return self.num_pool - len(self.free_pool)

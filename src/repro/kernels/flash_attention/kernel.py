@@ -1,0 +1,105 @@
+"""Pallas TPU flash-attention kernel (causal / sliding-window, GQA).
+
+Grid = (batch, q_heads, num_q_blocks, num_kv_blocks); the TPU grid executes
+minor-to-major sequentially, so the (m, l, acc) running-softmax state lives
+in VMEM scratch that persists across the kv-block dimension.  BlockSpecs
+tile q/k/v into (block_q x head_dim) / (block_k x head_dim) VMEM windows —
+the (Sq, Skv) logits matrix never exists in HBM.
+
+MXU alignment: block_q/block_k default to 512/512 and head_dim is padded
+to a lane multiple (128) by ops.py before the call.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_q: int, block_k: int, causal: bool,
+            window: int | None, kv_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+    p = jnp.exp(logits - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jax.lax.dot_general(
+                        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, scale: float, causal: bool = True,
+                           window: int | None = None, block_q: int = 512,
+                           block_k: int = 512, interpret: bool = False):
+    """q: (B, Hq, Sq, D); k,v: (B, Hkv, Skv, D) — head-major layout.
+    Returns (B, Hq, Sq, D).  Sq/Skv padded to block multiples by caller."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    assert sq % bq == 0 and skv % bk == 0
+    grid = (b, hq, sq // bq, skv // bk)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_q=bq, block_k=bk,
+                          causal=causal, window=window, kv_len=skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, qi, ki: (b_, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, qi, ki: (b_, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

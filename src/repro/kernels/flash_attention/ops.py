@@ -1,0 +1,53 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Layout adaptation (B,S,H,D) -> head-major (B,H,S,D), head_dim padding to
+the 128-lane TPU tile, sequence padding to block multiples, and backend
+dispatch: the Pallas kernel on TPU (or interpret=True for CPU validation),
+the custom-VJP blocked implementation elsewhere (identical math).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, scale: float | None = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool | None = None):
+    """q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D) -> (B,Sq,Hq,D)."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if interpret is None:
+        if jax.default_backend() != "tpu":
+            from repro.models.attention import blocked_attention
+            b, sq = q.shape[0], q.shape[1]
+            skv = k.shape[1]
+            pos_q = jnp.broadcast_to(jnp.arange(sq)[None], (b, sq))
+            pos_k = jnp.broadcast_to(jnp.arange(skv)[None], (b, skv))
+            return blocked_attention(q, k, v, scale, pos_q, pos_k,
+                                     window=window, causal=causal,
+                                     block_k=block_k)
+        interpret = False
+
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    dp = (-d) % 128
+    bq = min(block_q, max(8, sq))
+    bk = min(block_k, max(8, skv))
+    sqp = (-sq) % bq
+    skp = (-skv) % bk
+
+    def prep(t, seq_pad):
+        t = jnp.moveaxis(t, 2, 1)                     # (B,H,S,D)
+        return jnp.pad(t, ((0, 0), (0, 0), (0, seq_pad), (0, dp)))
+    qh = prep(q, sqp)
+    kh = prep(k, skp)
+    vh = prep(v, skp)
+    out = K.flash_attention_kernel(qh, kh, vh, scale=scale, causal=causal,
+                                   window=window, block_q=bq, block_k=bk,
+                                   interpret=interpret)
+    out = out[:, :, :sq, :d]
+    return jnp.moveaxis(out, 1, 2)

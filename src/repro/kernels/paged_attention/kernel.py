@@ -1,0 +1,113 @@
+"""Pallas TPU paged decode-attention kernel over a block-table KV pool.
+
+This is the TPU-native reinterpretation of Pond's CXL ld/st pool access
+(DESIGN.md §6): the KV cache is a pool of fixed-size *pages* (the 1GB-slice
+analogue at KV-block granularity); each sequence owns a page list (block
+table).  The kernel sees ONE logical pool array — tier placement (HBM-local
+vs host-pool, with the runtime staging pool pages via async copies) is a
+memory-space concern of serving/kv_cache.py, not of the kernel, exactly
+like Pond hides pool topology behind HDM decoding.
+
+Grid = (batch, kv_heads, pages_per_seq); the block table is a
+scalar-prefetch operand so the page BlockSpec index_map can gather the
+right page into VMEM; running-softmax state lives in VMEM scratch across
+the page dimension (TPU sequential grid).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(table_ref, lens_ref, q_ref, kp_ref, vp_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale: float, page_size: int,
+            pages_per_seq: int):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, d)
+    k = kp_ref[0, 0].astype(jnp.float32)              # (page, d)
+    v = vp_ref[0, 0].astype(jnp.float32)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # (G, page)
+
+    seq_len = lens_ref[b]
+    pos = pi * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, 1)
+    logits = jnp.where(pos < seq_len, logits, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+    p = jnp.exp(logits - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jax.lax.dot_general(
+                        p, v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(pi == pl.num_programs(2) - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(q, k_pages, v_pages, block_table, seq_lens, *,
+                           scale: float, interpret: bool = False):
+    """Single-token decode attention over paged KV.
+
+    q:           (B, Hq, D)             current-token queries
+    k_pages:     (Hkv, num_pages, page_size, D)  unified two-tier pool
+    v_pages:     (Hkv, num_pages, page_size, D)
+    block_table: (B, pages_per_seq) int32 page ids (padded with 0)
+    seq_lens:    (B,) int32
+    Returns (B, Hq, D).
+    """
+    b, hq, d = q.shape
+    hkv, _, page_size, _ = k_pages.shape
+    g = hq // hkv
+    pages_per_seq = block_table.shape[1]
+    grid = (b, hkv, pages_per_seq)
+    qg = q.reshape(b, hkv, g, d)
+
+    kernel = functools.partial(_kernel, scale=scale, page_size=page_size,
+                               pages_per_seq=pages_per_seq)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,            # block_table, seq_lens
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b_, h, pi, tbl, lens: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b_, h, pi, tbl, lens: (h, tbl[b_, pi], 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b_, h, pi, tbl, lens: (h, tbl[b_, pi], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda b_, h, pi, tbl, lens: (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(block_table, seq_lens, qg, k_pages, v_pages)
+    return out.reshape(b, hq, d)

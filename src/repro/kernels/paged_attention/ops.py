@@ -1,0 +1,32 @@
+"""jit'd wrapper for paged decode attention with backend dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention import kernel as K
+from repro.kernels.paged_attention import ref as R
+
+
+def paged_attention(q, k_pages, v_pages, block_table, seq_lens, *,
+                    scale: float | None = None,
+                    interpret: bool | None = None):
+    """q: (B,Hq,D); pages: (Hkv,P,page,D); table: (B,ppseq); lens: (B,)."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if interpret is None:
+        if jax.default_backend() != "tpu":
+            # jnp oracle IS the lowering on non-TPU backends
+            return R.paged_attention_ref(q, k_pages, v_pages, block_table,
+                                         seq_lens, scale=scale)
+        interpret = False
+    d = q.shape[-1]
+    dp = (-d) % 128
+    if dp:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, dp)))
+        k_pages = jnp.pad(k_pages, ((0, 0), (0, 0), (0, 0), (0, dp)))
+        v_pages = jnp.pad(v_pages, ((0, 0), (0, 0), (0, 0), (0, dp)))
+    out = K.paged_attention_kernel(q, k_pages, v_pages, block_table,
+                                   seq_lens, scale=scale,
+                                   interpret=interpret)
+    return out[..., :d]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for paged decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_table, seq_lens, *,
+                        scale: float):
+    """Same contract as kernel.paged_attention_kernel."""
+    b, hq, d = q.shape
+    hkv, npg, page, _ = k_pages.shape
+    g = hq // hkv
+    ppseq = block_table.shape[1]
+    # gather each sequence's pages: (B, Hkv, ppseq*page, D)
+    k_seq = jnp.moveaxis(k_pages[:, block_table], 0, 2)   # (B,ppseq,Hkv,pg,D)
+    v_seq = jnp.moveaxis(v_pages[:, block_table], 0, 2)
+    k_seq = k_seq.transpose(0, 2, 1, 3, 4).reshape(b, hkv, ppseq * page, d)
+    v_seq = v_seq.transpose(0, 2, 1, 3, 4).reshape(b, hkv, ppseq * page, d)
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhkd->bhgk", qg,
+                        k_seq.astype(jnp.float32)) * scale
+    valid = jnp.arange(ppseq * page)[None] < seq_lens[:, None]
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v_seq.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)

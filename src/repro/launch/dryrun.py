@@ -1,0 +1,515 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be imported/executed before any other jax usage: the first two lines
+pin 512 placeholder host devices so the production meshes can build.
+
+Per cell this driver:
+  1. builds the full-size ArchConfig and abstract inputs (ShapeDtypeStruct,
+     zero allocation),
+  2. jits the train/prefill/decode step with explicit shardings,
+  3. ``.lower().compile()`` on the 16x16 (single-pod) and 2x16x16
+     (multi-pod) meshes,
+  4. records ``memory_analysis()`` / ``cost_analysis()`` and the loop-aware
+     HLO counters (launch/hlo_analysis.py) as JSON for EXPERIMENTS.md.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import math              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig  # noqa: E402
+from repro.configs.registry import ARCH_IDS, get_config          # noqa: E402
+from repro.launch import hlo_analysis, mesh as meshlib           # noqa: E402
+from repro.models.frontend import frontend_embed_spec, text_len  # noqa: E402
+from repro.models.model_zoo import build_model                   # noqa: E402
+from repro.models.params import abstract, param_count            # noqa: E402
+from repro.models.params import ParamSpec, tree_map_specs        # noqa: E402
+from repro.optim import adamw                                    # noqa: E402
+from repro.runtime import serve as rt_serve                      # noqa: E402
+from repro.runtime import train as rt_train                      # noqa: E402
+from repro.sharding.rules import (ShardCtx, default_rules,       # noqa: E402
+                                  partition_tree)
+
+WHISPER_DEC_LEN = 448
+
+
+@dataclasses.dataclass(frozen=True)
+class CellPlan:
+    microbatches: int = 8
+    accum_dtype: str = "float32"
+    two_phase: bool = False          # Pond pool-tier optimizer state
+    xent_chunk: int = 512
+    remat: bool = True
+    attn_impl: str = "blocked"
+    replicate_lm_head: bool = False     # hillclimb: tied-head replication
+    moe_serve_impl: str = ""            # hillclimb: "sharded_a2a" override
+    fsdp_pod: bool = False              # hillclimb: FSDP over (pod, data)
+    notes: str = ""
+
+
+PLANS: dict[str, CellPlan] = {
+    "granite-moe-1b-a400m": CellPlan(microbatches=4),
+    "deepseek-v3-671b": CellPlan(microbatches=16, accum_dtype="bfloat16",
+                                 two_phase=True, xent_chunk=256,
+                                 notes="pool-tier opt state; bf16 grad accum"),
+    "mamba2-1.3b": CellPlan(microbatches=4),
+    "qwen2-1.5b": CellPlan(microbatches=4),
+    "qwen3-32b": CellPlan(microbatches=16, xent_chunk=256),
+    "h2o-danube-1.8b": CellPlan(microbatches=4),
+    "qwen2-7b": CellPlan(microbatches=8),
+    "jamba-1.5-large-398b": CellPlan(microbatches=16, accum_dtype="bfloat16",
+                                     two_phase=True, xent_chunk=256,
+                                     notes="pool-tier opt state"),
+    "whisper-small": CellPlan(microbatches=4),
+    "internvl2-26b": CellPlan(microbatches=16, xent_chunk=256),
+}
+
+SKIPS: dict[tuple[str, str], str] = {
+    (a, "long_500k"): "full quadratic attention; sub-quadratic required "
+                      "(DESIGN.md §4)"
+    for a in ("granite-moe-1b-a400m", "deepseek-v3-671b", "qwen2-1.5b",
+              "qwen3-32b", "qwen2-7b", "internvl2-26b", "whisper-small")
+}
+
+
+def cell_skip_reason(arch_id: str, shape_name: str) -> str | None:
+    return SKIPS.get((arch_id, shape_name))
+
+
+def make_ctx(mesh, multi_pod: bool, shape: ShapeConfig,
+             plan: CellPlan, arch_cfg: ArchConfig | None = None) -> ShardCtx:
+    seq_shard = False
+    if shape.kind in ("prefill", "decode"):
+        # SP for the KV/latent cache: kv_heads rarely divide the 16-way
+        # model axis, so the cache seq dim shards over "model" (and "data"
+        # too when batch=1) -> flash-decoding style merge collectives.
+        seq_shard = ("data", "model") if shape.global_batch == 1 \
+            else "model"
+    moe_impl = "auto"
+    if shape.kind != "train" and arch_cfg is not None and arch_cfg.moe:
+        ff = arch_cfg.moe.d_ff_expert or arch_cfg.d_ff
+        n_moe = sum(g.repeat * sum(1 for bl in g.blocks if bl.ffn == "moe")
+                    for g in arch_cfg.groups)
+        expert_gb = (n_moe * arch_cfg.moe.num_experts * 3
+                     * arch_cfg.d_model * ff * 2 / 2 ** 30)
+        if expert_gb / 16 > 4:               # >4 GB/dev under 16-way TP
+            moe_impl = "sharded2d"
+        if plan.moe_serve_impl:
+            moe_impl = plan.moe_serve_impl
+    return ShardCtx(mesh=mesh, pod_axis="pod" if multi_pod else None,
+                    remat=plan.remat and shape.kind == "train",
+                    attn_impl=plan.attn_impl, moe_impl=moe_impl,
+                    replicate_lm_head=plan.replicate_lm_head,
+                    fsdp_pod=plan.fsdp_pod,
+                    seq_shard_kv=seq_shard)
+
+
+def batch_pspec(ctx: ShardCtx, batch: int, ndim: int) -> P:
+    axes = ctx.batch_axes
+    n = math.prod(ctx.mesh.shape[a] for a in axes)
+    parts = [None] * ndim
+    if batch % n == 0:
+        parts[0] = axes
+    return P(*parts)
+
+
+def _whisper_lens(shape: ShapeConfig) -> tuple[int, int]:
+    """(enc_frames, dec_len) for enc-dec cells."""
+    if shape.kind == "train":
+        return shape.seq_len, min(WHISPER_DEC_LEN, shape.seq_len)
+    if shape.kind == "prefill":
+        return shape.seq_len, 8
+    return shape.seq_len, 1
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, multi_pod: bool,
+               plan: CellPlan):
+    """Returns (jitted_fn, abstract_args, extra) ready for .lower()."""
+    model = build_model(cfg)
+    ctx = make_ctx(mesh, multi_pod, shape, plan, cfg)
+    b = shape.global_batch
+    accum = jnp.bfloat16 if plan.accum_dtype == "bfloat16" else jnp.float32
+    extra = {"ctx": ctx, "model": model}
+
+    if shape.kind == "train":
+        if cfg.is_encoder_decoder:
+            enc, dec = _whisper_lens(shape)
+            tokens = jax.ShapeDtypeStruct((b, dec + 1), jnp.int32)
+            embeds = jax.ShapeDtypeStruct((b, enc, cfg.d_model),
+                                          jnp.bfloat16)
+        else:
+            stext = text_len(cfg, shape.seq_len)
+            tokens = jax.ShapeDtypeStruct((b, stext + 1), jnp.int32)
+            embeds = frontend_embed_spec(cfg, b, shape.seq_len)
+        batch = {"tokens": tokens}
+        if embeds is not None:
+            batch["embeds"] = embeds
+        ocfg = adamw.AdamWConfig()
+        abs_params = abstract(model.specs())
+        rules = default_rules(ctx, mode="train")
+        pspec = partition_tree(model.specs(), rules, mesh)
+        params_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec)
+        batch_sh = {"tokens": NamedSharding(
+            mesh, batch_pspec(ctx, b, 2))}
+        if embeds is not None:
+            batch_sh["embeds"] = NamedSharding(mesh, batch_pspec(ctx, b, 3))
+        mb = plan.microbatches
+        while b % mb or (b // mb) % math.prod(
+                mesh.shape[a] for a in ctx.batch_axes):
+            mb //= 2
+            if mb == 0:
+                mb = 1
+                break
+        if plan.two_phase:
+            grad_step, _ = rt_train.make_two_phase_steps(
+                model, ocfg, ctx, microbatches=mb,
+                xent_chunk=plan.xent_chunk, accum_dtype=accum)
+            fn = jax.jit(grad_step,
+                         in_shardings=(params_sh, batch_sh),
+                         out_shardings=(params_sh, None))
+            return fn, (abs_params, batch), extra
+        step = rt_train.make_train_step(
+            model, ocfg, ctx, microbatches=mb, xent_chunk=plan.xent_chunk,
+            accum_dtype=accum)
+        abs_opt = jax.eval_shape(
+            lambda p: adamw.init_state(p, ocfg), abs_params)
+        opt_sh = {"step": NamedSharding(mesh, P()), "master": params_sh,
+                  "m": params_sh, "v": params_sh}
+        fn = jax.jit(step, in_shardings=(params_sh, opt_sh, batch_sh),
+                     out_shardings=(params_sh, opt_sh, None),
+                     donate_argnums=(0, 1))
+        return fn, (abs_params, abs_opt, batch), extra
+
+    # ---- serving shapes ---------------------------------------------------
+    rules = default_rules(ctx, mode="serve")
+    pspec = partition_tree(model.specs(), rules, mesh)
+    params_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec)
+    abs_params = abstract(model.specs())
+    if cfg.is_encoder_decoder:
+        enc, dec = _whisper_lens(shape)
+        cache_specs = model.cache_specs(b, WHISPER_DEC_LEN, enc_len=enc)
+    else:
+        enc = dec = None
+        cache_specs = model.cache_specs(b, shape.seq_len)
+    cspec = partition_tree(cache_specs, rules, mesh)
+    cache_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspec)
+    abs_cache = abstract(cache_specs)
+    tok_sh = NamedSharding(mesh, batch_pspec(ctx, b, 2))
+    pos1_sh = NamedSharding(mesh, batch_pspec(ctx, b, 1))
+
+    if shape.kind == "prefill":
+        if cfg.is_encoder_decoder:
+            tokens = jax.ShapeDtypeStruct((b, dec), jnp.int32)
+            positions = jax.ShapeDtypeStruct((b, dec), jnp.int32)
+            embeds = jax.ShapeDtypeStruct((b, enc, cfg.d_model),
+                                          jnp.bfloat16)
+        else:
+            stext = text_len(cfg, shape.seq_len)
+            full = shape.seq_len if cfg.frontend == "vision" else stext
+            tokens = jax.ShapeDtypeStruct((b, stext), jnp.int32)
+            positions = jax.ShapeDtypeStruct((b, full), jnp.int32)
+            embeds = frontend_embed_spec(cfg, b, shape.seq_len)
+        step = rt_serve.make_prefill_step(model, ctx)
+        args = [abs_params, tokens, positions, abs_cache]
+        in_sh = [params_sh, tok_sh,
+                 NamedSharding(mesh, batch_pspec(ctx, b, 2)), cache_sh]
+        if embeds is not None:
+            args.append(embeds)
+            in_sh.append(NamedSharding(mesh, batch_pspec(ctx, b, 3)))
+        fn = jax.jit(step, in_shardings=tuple(in_sh),
+                     out_shardings=(None, cache_sh))
+        return fn, tuple(args), extra
+
+    # decode
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    positions = jax.ShapeDtypeStruct((b,), jnp.int32)
+    step = rt_serve.make_decode_step(model, ctx)
+    fn = jax.jit(step,
+                 in_shardings=(params_sh, tok_sh, pos1_sh, cache_sh),
+                 out_shardings=(None, cache_sh), donate_argnums=(3,))
+    return fn, (abs_params, tokens, positions, abs_cache), extra
+
+
+# --------------------------------------------------------------- roofline --
+def structural_bytes(cfg: ArchConfig, shape: ShapeConfig, plan: CellPlan,
+                     mesh, model, ctx: ShardCtx) -> dict:
+    """Analytical per-device HBM traffic per step (bytes).
+
+    The HLO parse counts every instruction's operands at CPU-backend fusion
+    boundaries, which materialises buffers a TPU keeps in VMEM (flash
+    attention tiles, xent chunk logits).  This structural model counts the
+    streams a TPU actually pays: weight reads (FSDP-gathered per layer per
+    pass), gradient/optimizer streams, layer-boundary activations, KV-cache
+    traffic, and the lm-head.  The HLO numbers stay in the JSON as a
+    conservative upper bound.
+    """
+    rules = default_rules(ctx, mode="train" if shape.kind == "train"
+                          else "serve")
+    pspec = partition_tree(model.specs(), rules, mesh)
+    nbytes_dev = 0
+    for leaf, ps in zip(
+            jax.tree.leaves(model.specs(),
+                            is_leaf=lambda x: isinstance(x, ParamSpec)),
+            jax.tree.leaves(pspec, is_leaf=lambda x: isinstance(x, P))):
+        shard = 1
+        for axes in ps:
+            if axes is None:
+                continue
+            for a in ((axes,) if isinstance(axes, str) else axes):
+                shard *= mesh.shape[a]
+        nbytes_dev += (math.prod(leaf.shape) * jnp.dtype(leaf.dtype).itemsize
+                       / shard)
+    tp = mesh.shape["model"]
+    n_batch = math.prod(mesh.shape[a] for a in ctx.batch_axes)
+    total_param_bytes = sum(
+        math.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+        for l in jax.tree.leaves(model.specs(),
+                                 is_leaf=lambda x: isinstance(x, ParamSpec)))
+    gathered = total_param_bytes / tp          # FSDP-gathered working copy
+    d = cfg.d_model
+    if shape.kind == "train":
+        mb = plan.microbatches
+        b_mb = max(1, shape.global_batch // mb // n_batch)
+        toks_mb = b_mb * shape.seq_len
+        layers = cfg.num_layers + (cfg.encoder_layers or 0)
+        acts = mb * layers * toks_mb * d * 2 * 2        # save + reread, bf16
+        weights = mb * 3 * gathered                     # fwd + remat + bwd
+        accum_b = 2 if plan.accum_dtype == "bfloat16" else 4
+        grads = 2 * mb * nbytes_dev / 2 * accum_b       # accum rd+wr
+        opt = 0 if plan.two_phase else 3 * 2 * nbytes_dev / 2 * 4
+        head = mb * (toks_mb / plan.xent_chunk) * \
+            (d * cfg.vocab_size * 2 / tp)               # head reread per chunk
+        parts = {"weights": weights, "activations": acts, "grads": grads,
+                 "optimizer": opt, "lm_head": head}
+    else:
+        # serve: weights once + cache traffic
+        if cfg.attention_free:
+            cache_traffic = 0.0
+        else:
+            kv_layers = sum(g.repeat * sum(1 for bl in g.blocks
+                                           if bl.mixer != "mamba")
+                            for g in cfg.groups) or cfg.num_layers
+            from repro.models.attention import ring_width
+            w_len = (ring_width(cfg, shape.seq_len)
+                     if shape.kind == "decode" else shape.seq_len)
+            if cfg.mla:
+                per_tok = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+            else:
+                per_tok = 2 * cfg.num_kv_heads * cfg.head_dim
+            cache_traffic = (kv_layers * shape.global_batch * w_len
+                             * per_tok * 2 / (tp * n_batch))
+            if shape.kind == "prefill":
+                cache_traffic *= 1.0                    # one write pass
+        parts = {"weights": total_param_bytes / tp,
+                 "cache": cache_traffic,
+                 "activations": (shape.global_batch * shape.seq_len * d * 2
+                                 * (cfg.num_layers / 4) / n_batch
+                                 if shape.kind == "prefill" else 0.0)}
+    parts["total"] = sum(parts.values())
+    return parts
+
+
+def active_param_count(cfg: ArchConfig, model) -> tuple[int, int]:
+    """(total, active) params excluding the token table (6ND convention)."""
+    specs = model.specs()
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, ParamSpec))[0]:
+        n = math.prod(leaf.shape)
+        keys = [getattr(k, "key", str(k)) for k in path]
+        if keys[-1] == "tok":
+            continue
+        total += n
+        if leaf.axes and "experts" in leaf.axes and cfg.moe:
+            active += n * cfg.moe.top_k // cfg.moe.num_experts
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig, model) -> float:
+    total, active = active_param_count(cfg, model)
+    if shape.kind == "train":
+        if cfg.is_encoder_decoder:
+            enc, dec = _whisper_lens(shape)
+            d = shape.global_batch * (enc + dec)
+        elif cfg.frontend == "vision":
+            d = shape.global_batch * shape.seq_len
+        else:
+            d = shape.global_batch * shape.seq_len
+        return 6.0 * active * d
+    if shape.kind == "prefill":
+        return 2.0 * active * shape.global_batch * shape.seq_len
+    return 2.0 * active * shape.global_batch  # decode: one token per seq
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             outdir: str, skip_existing: bool = True,
+             plan_overrides: dict | None = None) -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    out_path = os.path.join(outdir, mesh_name,
+                            f"{arch_id}__{shape_name}.json")
+    if skip_existing and os.path.exists(out_path):
+        with open(out_path) as f:
+            return json.load(f)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    shape = SHAPES[shape_name]
+    reason = cell_skip_reason(arch_id, shape_name)
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "status": "skip", "skip_reason": reason}
+    if reason:
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    cfg = get_config(arch_id)
+    plan = PLANS[arch_id]
+    if plan_overrides:
+        plan = dataclasses.replace(plan, **plan_overrides)
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    n_dev = math.prod(mesh.devices.shape)
+    t0 = time.time()
+    try:
+        fn, args, extra = build_cell(cfg, shape, mesh, multi_pod, plan)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        counts = hlo_analysis.analyze(hlo, n_dev)
+        mf = model_flops(cfg, shape, extra["model"])
+        sbytes = structural_bytes(cfg, shape, plan, mesh,
+                                  extra["model"], extra["ctx"])
+        dev_bytes = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                     - ma.alias_size_in_bytes + ma.temp_size_in_bytes)
+        compute_t = counts.flops / meshlib.PEAK_FLOPS_BF16
+        memory_t = sbytes["total"] / meshlib.HBM_BW
+        coll_t = counts.collective_bytes / meshlib.ICI_BW_PER_LINK
+        terms = {"compute": compute_t, "memory": memory_t,
+                 "collective": coll_t}
+        dom = max(terms, key=terms.get)
+        rec.update({
+            "status": "ok",
+            "t_lower_s": round(t_lower, 1),
+            "t_compile_s": round(t_compile, 1),
+            "devices": n_dev,
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "device_total_bytes": dev_bytes,
+                "fits_16GiB": bool(dev_bytes <= meshlib.HBM_BYTES),
+            },
+            "xla_cost_analysis": {
+                "flops": ca.get("flops"),
+                "bytes_accessed": ca.get("bytes accessed"),
+            },
+            "hlo_counts": {
+                "flops_per_device": counts.flops,
+                "bytes_per_device": counts.bytes,
+                "dot_bytes_per_device": counts.dot_bytes,
+                "collective_bytes_per_device": counts.collective_bytes,
+                "by_collective": dict(counts.by_collective),
+            },
+            "structural_bytes": sbytes,
+            "roofline": {
+                "compute_s": compute_t,
+                "memory_s": memory_t,
+                "collective_s": coll_t,
+                "dominant": dom,
+                "model_flops_global": mf,
+                "model_flops_per_device": mf / n_dev,
+                "useful_flops_ratio":
+                    (mf / n_dev) / counts.flops if counts.flops else None,
+            },
+            "plan": dataclasses.asdict(plan),
+        })
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def summarize(outdir: str):
+    rows = []
+    for mesh_name in ("single", "multi"):
+        d = os.path.join(outdir, mesh_name)
+        if not os.path.isdir(d):
+            continue
+        for fname in sorted(os.listdir(d)):
+            with open(os.path.join(d, fname)) as f:
+                rows.append(json.load(f))
+    for r in rows:
+        if r["status"] == "ok":
+            rl = r["roofline"]
+            print(f"{r['mesh']:6s} {r['arch']:24s} {r['shape']:12s} ok "
+                  f"compute={rl['compute_s']:.3e}s mem={rl['memory_s']:.3e}s "
+                  f"coll={rl['collective_s']:.3e}s dom={rl['dominant']:10s} "
+                  f"useful={rl['useful_flops_ratio'] and round(rl['useful_flops_ratio'],3)} "
+                  f"fits={r['memory']['fits_16GiB']}")
+        else:
+            print(f"{r['mesh']:6s} {r['arch']:24s} {r['shape']:12s} "
+                  f"{r['status']} {r.get('skip_reason') or r.get('error','')[:120]}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--summary", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="plan override key=value (hillclimb knobs)")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        f = CellPlan.__dataclass_fields__[k]
+        if f.type == "bool" or isinstance(f.default, bool):
+            v = v.lower() in ("1", "true", "yes")
+        elif isinstance(f.default, int):
+            v = int(v)
+        overrides[k] = v
+    if args.summary:
+        summarize(args.outdir)
+        return
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, args.outdir,
+                               skip_existing=not args.force,
+                               plan_overrides=overrides or None)
+                status = rec["status"]
+                msg = rec.get("skip_reason") or rec.get("error", "")
+                dom = rec.get("roofline", {}).get("dominant", "")
+                print(f"[dryrun] {'multi' if mp else 'single':6s} "
+                      f"{arch:24s} {shape:12s} {status:5s} {dom} "
+                      f"{str(msg)[:100]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

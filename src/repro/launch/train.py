@@ -1,0 +1,122 @@
+"""Training entry point.
+
+Runs a real training loop on the available devices (CPU smoke / TPU pod),
+with checkpoint/restart, straggler tracking and optional failure injection
+for the fault-tolerance drills.  The production mesh shapes live in
+launch/mesh.py; on this container use --devices 1 (default).
+
+Example (the examples/train_small.py driver wraps this):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+      --steps 200 --global-batch 16 --seq-len 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config, get_smoke
+from repro.data.pipeline import DataConfig, ShardedBatches
+from repro.models.model_zoo import build_model
+from repro.optim import adamw
+from repro.runtime import checkpoint as ckpt
+from repro.runtime import train as rt
+from repro.runtime.fault import StragglerTracker
+from repro.sharding.rules import ShardCtx
+
+
+def build_state(model, ocfg, rng):
+    params = model.init_params(rng)
+    return params, adamw.init_state(params, ocfg)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--moments", default="float32",
+                    choices=["float32", "bfloat16", "int8"])
+    ap.add_argument("--two-phase", action="store_true",
+                    help="Pond mode: optimizer state on the pool tier")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--preset", default=None, choices=[None, "100m"],
+                    help="predefined model size (e.g. ~100M param run)")
+    args = ap.parse_args(argv)
+
+    if args.preset == "100m":
+        from repro.configs.base import ArchConfig, Block, LayerGroup
+        cfg = ArchConfig(
+            name="qwen2-100m", family="dense", num_layers=12,
+            d_model=768, num_heads=12, num_kv_heads=4, d_ff=2560,
+            vocab_size=4096, qkv_bias=True, tie_embeddings=True,
+            rope_theta=1e4,
+            groups=(LayerGroup(12, (Block("attn", "mlp"),)),))
+    else:
+        cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    ocfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=20,
+                             total_steps=args.steps,
+                             moments_dtype=args.moments)
+    ctx = ShardCtx()  # single-host loop; pod meshes exercised via dryrun
+    params, opt = build_state(model, ocfg, jax.random.key(0))
+
+    start_step = 0
+    if args.ckpt_dir:
+        latest = ckpt.latest_step(args.ckpt_dir)
+        if latest is not None:
+            params, opt = ckpt.restore(args.ckpt_dir, latest,
+                                       (params, opt))
+            start_step = latest
+            print(f"[train] restored step {latest} from {args.ckpt_dir}")
+
+    if args.two_phase or args.moments == "int8":
+        grad_step, opt_step = rt.make_two_phase_steps(
+            model, ocfg, ctx, microbatches=args.microbatches)
+        grad_step = jax.jit(grad_step)
+        opt_step = jax.jit(opt_step, donate_argnums=(1,))
+
+        def step_fn(p, o, batch):
+            g, metrics = grad_step(p, batch)
+            p, o, om = opt_step(p, o, g)
+            return p, o, {**metrics, **om}
+    else:
+        step_fn = rt.jit_train_step(model, ocfg, ctx, donate=False,
+                                    microbatches=args.microbatches)
+
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                    global_batch=args.global_batch)
+    data = ShardedBatches(dc, start_step=start_step)
+    tracker = StragglerTracker()
+    t_last = time.time()
+    for step in range(start_step, args.steps):
+        batch = {"tokens": jnp.asarray(next(data)["tokens"])}
+        params, opt, metrics = step_fn(params, opt, batch)
+        dt = time.time() - t_last
+        t_last = time.time()
+        tracker.record("host0", dt)
+        if (step + 1) % args.log_every == 0 or step == start_step:
+            print(f"[train] step {step + 1:5d} "
+                  f"loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} {dt * 1e3:.0f}ms",
+                  flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, step + 1, (params, opt))
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, args.steps, (params, opt))
+    return params, opt
+
+
+if __name__ == "__main__":
+    main()

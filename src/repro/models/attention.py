@@ -1,0 +1,409 @@
+"""GQA attention (train / prefill / decode) with QKV-bias, qk-norm and
+sliding-window variants, plus the unified ring-buffer KV cache.
+
+The KV cache is a *ring buffer* of width W:
+
+  * full attention:   W = max_seq_len  (slot == position, never wraps)
+  * sliding window:   W = window       (slot = position mod W)
+
+Each slot stores the absolute position it holds (``pos_buf``, -1 = empty),
+so the decode mask is position arithmetic and wrap-around is free. This is
+the h2o-danube / SWA "provably-untouched KV" story from DESIGN.md §4: for
+SWA archs everything outside the ring is untouched by construction.
+"""
+from __future__ import annotations
+
+import functools
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, rms_norm, rope_cos_sin
+from repro.models.compute import einsum_f32
+from repro.models.params import ParamSpec
+
+NEG_INF = -2.0 ** 30  # large-negative that survives bf16/f32 softmax
+
+
+# ----------------------------------------------------------------- specs ---
+def attention_specs(cfg: ArchConfig, prefix_axes=(), cross: bool = False):
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pa = prefix_axes
+    sp = {
+        "wq": ParamSpec((d, h, hd), jnp.bfloat16,
+                        pa + ("embed", "heads", None), fan_in_dim=0),
+        "wk": ParamSpec((d, hkv, hd), jnp.bfloat16,
+                        pa + ("embed", "kv_heads", None), fan_in_dim=0),
+        "wv": ParamSpec((d, hkv, hd), jnp.bfloat16,
+                        pa + ("embed", "kv_heads", None), fan_in_dim=0),
+        "wo": ParamSpec((h, hd, d), jnp.bfloat16,
+                        pa + ("heads", None, "embed"), fan_in_dim=(0, 1)),
+    }
+    if cfg.qkv_bias:
+        sp["bq"] = ParamSpec((h, hd), jnp.float32, pa + ("heads", None), "zeros")
+        sp["bk"] = ParamSpec((hkv, hd), jnp.float32, pa + ("kv_heads", None), "zeros")
+        sp["bv"] = ParamSpec((hkv, hd), jnp.float32, pa + ("kv_heads", None), "zeros")
+    if cfg.qk_norm:
+        sp["q_norm"] = ParamSpec((hd,), jnp.float32, pa + (None,), "ones")
+        sp["k_norm"] = ParamSpec((hd,), jnp.float32, pa + (None,), "ones")
+    if cfg.norm == "layernorm":  # whisper-style out-proj bias
+        sp["bo"] = ParamSpec((d,), jnp.float32, pa + (None,), "zeros")
+    return sp
+
+
+# ------------------------------------------------------------ core math ----
+def grouped_dot_attention(q, k, v, mask, scale: float):
+    """GQA attention without materialising repeated KV heads.
+
+    q: (B, Sq, Hq, D); k,v: (B, Skv, Hkv, D); mask broadcastable to
+    (B, Hkv, G, Sq, Skv) or (B, 1, 1, Sq, Skv). fp32 softmax.
+    """
+    b, sq, hq, dd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, dd)
+    logits = einsum_f32("bqhgd,bkhd->bhgqk", qg, k) * scale
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = einsum_f32("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, hq, dd).astype(q.dtype)
+
+
+def causal_mask(sq: int, skv: int, window: int | None, offset: int = 0):
+    """(sq, skv) bool mask; query i attends to kv j iff j <= i+offset and
+    within the sliding window."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(skv)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m &= kj > qi - window
+    return m
+
+
+# ------------------------------------------------------------- KV cache ----
+def kv_cache_specs(cfg: ArchConfig, batch: int, max_len: int,
+                   prefix_axes=()) -> dict:
+    """Ring-buffer cache specs for one attention layer (stacked by caller)."""
+    w = ring_width(cfg, max_len)
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    pa = prefix_axes
+    return {
+        "k": ParamSpec((batch, w, hkv, hd), jnp.bfloat16,
+                       pa + ("batch", "kv_seq", "kv_heads", None), "zeros"),
+        "v": ParamSpec((batch, w, hkv, hd), jnp.bfloat16,
+                       pa + ("batch", "kv_seq", "kv_heads", None), "zeros"),
+        "pos": ParamSpec((batch, w), jnp.int32, pa + ("batch", "kv_seq"),
+                         "zeros"),
+    }
+
+
+def ring_width(cfg: ArchConfig, max_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def init_cache_pos(cache: dict) -> dict:
+    """Mark all slots empty (pos = -1)."""
+    return {**cache, "pos": jnp.full_like(cache["pos"], -1)}
+
+
+def _ring_update(buf, pos_buf, new, positions, width):
+    """Write `new` (B, 1, ...) at slot positions%width; track abs position."""
+    slots = positions % width  # (B,)
+
+    def upd(b, n, s):
+        return jax.lax.dynamic_update_slice_in_dim(b, n, s, axis=0)
+    buf = jax.vmap(upd)(buf, new, slots)
+    pos_buf = jax.vmap(
+        lambda pb, p, s: jax.lax.dynamic_update_slice_in_dim(
+            pb, p[None].astype(pb.dtype), s, axis=0)
+    )(pos_buf, positions, slots)
+    return buf, pos_buf
+
+
+def ring_cache_update(cache: dict, k_new, v_new, positions: jax.Array):
+    """k_new/v_new: (B, 1, Hkv, D); positions: (B,) absolute index."""
+    width = cache["k"].shape[1]
+    k, pos_buf = _ring_update(cache["k"], cache["pos"], k_new, positions, width)
+    v, _ = _ring_update(cache["v"], cache["pos"], v_new, positions, width)
+    return {"k": k, "v": v, "pos": pos_buf}
+
+
+def ring_cache_mask(pos_buf: jax.Array, positions: jax.Array,
+                    window: int | None):
+    """(B, 1, 1, 1, W) mask of valid slots for the current query position."""
+    p = positions[:, None].astype(jnp.int32)
+    m = (pos_buf >= 0) & (pos_buf <= p)
+    if window is not None:
+        m &= pos_buf > p - window
+    return m[:, None, None, None, :]
+
+
+# ------------------------------------------------- blocked (flash) paths ---
+def _blk(t, nb, bk):
+    return jnp.moveaxis(t.reshape((t.shape[0], nb, bk) + t.shape[2:]), 1, 0)
+
+
+def _flash_mask(q_pos, kpos, vld, causal, window):
+    msk = vld[:, None]                                       # (B,1,K)
+    if causal:
+        msk = msk & (kpos[:, None] <= q_pos[:, :, None])
+    if window is not None:
+        msk = msk & (kpos[:, None] > q_pos[:, :, None] - window)
+    return msk[:, None, None]                                # (B,1,1,Sq*,K)
+
+
+def _flash_fwd_impl(q, k, v, q_pos, kv_pos, kv_valid, scale, window, causal,
+                    block_k):
+    b, sq, hq, dd = q.shape
+    hkv = k.shape[2]
+    dv = v.shape[3]
+    g = hq // hkv
+    nb = k.shape[1] // block_k
+    qg = q.reshape(b, sq, hkv, g, dd)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, kpos, vld = inp
+        logits = einsum_f32("bqhgd,bkhd->bhgqk", qg, kblk) * scale
+        logits = jnp.where(_flash_mask(q_pos, kpos, vld, causal, window),
+                           logits, NEG_INF)
+        mnew = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - mnew[..., None])
+        corr = jnp.exp(m - mnew)
+        lnew = l * corr + jnp.sum(p, axis=-1)
+        accnew = (acc * corr[..., None]
+                  + einsum_f32("bhgqk,bkhd->bhgqd",
+                               p.astype(vblk.dtype), vblk))
+        return (mnew, lnew, accnew), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (_blk(k, nb, block_k), _blk(v, nb, block_k),
+         _blk(kv_pos, nb, block_k), _blk(kv_valid, nb, block_k)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), jnp.inf)
+    out = jnp.moveaxis(out, -2, 1).reshape(b, sq, hq, dv)
+    return out.astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
+def _flash_core(q, k, v, q_pos, kv_pos, kv_valid, scale, window, causal,
+                block_k):
+    out, _ = _flash_fwd_impl(q, k, v, q_pos, kv_pos, kv_valid, scale,
+                             window, causal, block_k)
+    return out
+
+
+def _flash_core_fwd(q, k, v, q_pos, kv_pos, kv_valid, scale, window, causal,
+                    block_k):
+    out, lse = _flash_fwd_impl(q, k, v, q_pos, kv_pos, kv_valid, scale,
+                               window, causal, block_k)
+    return out, (q, k, v, q_pos, kv_pos, kv_valid, out, lse)
+
+
+def _flash_core_bwd(scale, window, causal, block_k, res, do):
+    """Flash backward: recompute p per block from the saved lse."""
+    q, k, v, q_pos, kv_pos, kv_valid, out, lse = res
+    b, sq, hq, dd = q.shape
+    hkv = k.shape[2]
+    dv = v.shape[3]
+    g = hq // hkv
+    nb = k.shape[1] // block_k
+    qg = q.reshape(b, sq, hkv, g, dd)
+    qt = qg.transpose(0, 2, 3, 1, 4)                         # (B,H,G,Sq,D)
+    dog = jnp.moveaxis(do.reshape(b, sq, hkv, g, dv), 1, -2)
+    outg = jnp.moveaxis(out.reshape(b, sq, hkv, g, dv), 1, -2)
+    dsum = jnp.sum(dog.astype(jnp.float32) * outg.astype(jnp.float32), -1)
+
+    def body(dq, inp):
+        kblk, vblk, kpos, vld = inp
+        logits = einsum_f32("bqhgd,bkhd->bhgqk", qg, kblk) * scale
+        logits = jnp.where(_flash_mask(q_pos, kpos, vld, causal, window),
+                           logits, NEG_INF)
+        p = jnp.exp(logits - lse[..., None])                 # (B,H,G,Sq,K)
+        dv = einsum_f32("bhgqk,bhgqd->bkhd", p.astype(do.dtype),
+                        dog.astype(do.dtype))
+        dp = einsum_f32("bhgqd,bkhd->bhgqk", dog.astype(do.dtype), vblk)
+        ds = p * (dp - dsum[..., None]) * scale
+        dq = dq + einsum_f32("bhgqk,bkhd->bhgqd", ds.astype(kblk.dtype),
+                             kblk)
+        dk = einsum_f32("bhgqk,bhgqd->bkhd", ds.astype(q.dtype), qt)
+        return dq, (dk, dv)
+
+    dq0 = jnp.zeros((b, hkv, g, sq, dd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(
+        body, dq0, (_blk(k, nb, block_k), _blk(v, nb, block_k),
+                    _blk(kv_pos, nb, block_k), _blk(kv_valid, nb, block_k)))
+    dq = jnp.moveaxis(dq, -2, 1).reshape(b, sq, hq, dd).astype(q.dtype)
+    dk = jnp.moveaxis(dks, 0, 1).reshape(b, nb * block_k, hkv, dd)
+    dv_out = jnp.moveaxis(dvs, 0, 1).reshape(b, nb * block_k, hkv, dv)
+    f0 = lambda x: np.zeros(x.shape, jax.dtypes.float0)
+    return (dq, dk.astype(k.dtype), dv_out.astype(v.dtype),
+            f0(q_pos), f0(kv_pos), f0(kv_valid))
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def blocked_attention(q, k, v, scale: float, q_pos, kv_pos,
+                      window: int | None = None, causal: bool = True,
+                      block_k: int = 512, kv_valid=None):
+    """Flash attention in pure JAX with a custom VJP: forward scans KV
+    blocks with a running (max, sum, acc) and saves only (out, lse); the
+    backward recomputes probabilities per block.  Memory is O(Sq + Skv)
+    instead of O(Sq*Skv) in both directions — the memory-faithful oracle
+    for kernels/flash_attention.
+
+    q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D); q_pos: (B,Sq); kv_pos: (B,Skv)
+    kv_valid: optional (B,Skv) bool (ring-cache slot validity).
+    """
+    b, skv = k.shape[0], k.shape[1]
+    bk = min(block_k, skv)
+    pad = (-skv) % bk
+    if kv_valid is None:
+        kv_valid = jnp.ones((b, skv), bool)
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+        kv_valid = jnp.pad(kv_valid, ((0, 0), (0, pad)))
+    out = _flash_core(q, k, v, q_pos, kv_pos, kv_valid, float(scale),
+                      window, causal, bk)
+    return out
+
+
+def ring_cache_fill(cache: dict, k, v, positions):
+    """Bulk-fill the ring cache from a prefill. k/v: (B,S,Hkv,D);
+    positions: (B,S). Keeps the last ``width`` tokens."""
+    w = cache["k"].shape[1]
+    keep = min(k.shape[1], w)
+    ks, vs, ps = k[:, -keep:], v[:, -keep:], positions[:, -keep:]
+    slots = ps % w
+
+    def put(buf, idx, val):
+        return buf.at[idx].set(val)
+    return {
+        "k": jax.vmap(put)(cache["k"], slots, ks.astype(cache["k"].dtype)),
+        "v": jax.vmap(put)(cache["v"], slots, vs.astype(cache["v"].dtype)),
+        "pos": jax.vmap(put)(cache["pos"], slots,
+                             ps.astype(cache["pos"].dtype)),
+    }
+
+
+# ---------------------------------------------------------- layer logic ----
+def _project_qkv(p, x, cfg: ArchConfig):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def _self_attention(q, k, v, cfg: ArchConfig, positions, causal: bool,
+                    impl: str):
+    s = q.shape[1]
+    scale = cfg.head_dim ** -0.5
+    if impl == "flash" and causal:
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, causal=True,
+                                      window=cfg.sliding_window, scale=scale)
+    if impl == "blocked":
+        return blocked_attention(q, k, v, scale, positions, positions,
+                                 window=cfg.sliding_window if causal else None,
+                                 causal=causal)
+    if causal:
+        m = causal_mask(s, s, cfg.sliding_window)[None, None, None]
+    else:
+        m = jnp.ones((1, 1, 1, s, s), bool)
+    return grouped_dot_attention(q, k, v, m, scale)
+
+
+def attn_forward(p, x, cfg: ArchConfig, positions, *, causal: bool = True,
+                 impl: str = "blocked"):
+    """Full self-attention over x: (B, S, d). Used by train/prefill/encoder."""
+    q, k, v = _project_qkv(p, x, cfg)
+    if not cfg.is_encoder_decoder or causal:  # rope for LM archs
+        cos, sin = rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    out = _self_attention(q, k, v, cfg, positions, causal, impl)
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    if "bo" in p:
+        y = y + p["bo"].astype(y.dtype)
+    return y
+
+
+def attn_prefill(p, x, cfg: ArchConfig, cache: dict, positions, *,
+                 impl: str = "blocked"):
+    """Prefill: causal self-attention + bulk ring-cache fill."""
+    q, k, v = _project_qkv(p, x, cfg)
+    cos, sin = rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    out = _self_attention(q, k, v, cfg, positions, True, impl)
+    cache = ring_cache_fill(cache, k, v, positions)
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    if "bo" in p:
+        y = y + p["bo"].astype(y.dtype)
+    return y, cache
+
+
+def attn_decode(p, x, cfg: ArchConfig, cache: dict, positions):
+    """One-token decode. x: (B, 1, d); positions: (B,) absolute index."""
+    q, k, v = _project_qkv(p, x, cfg)
+    cos, sin = rope_cos_sin(positions[:, None], cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    cache = ring_cache_update(cache, k, v, positions)
+    mask = ring_cache_mask(cache["pos"], positions, cfg.sliding_window)
+    out = grouped_dot_attention(q, cache["k"], cache["v"], mask,
+                                cfg.head_dim ** -0.5)
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    if "bo" in p:
+        y = y + p["bo"].astype(y.dtype)
+    return y, cache
+
+
+# ------------------------------------------------------- cross-attention ---
+def cross_attention_specs(cfg: ArchConfig, prefix_axes=()):
+    return attention_specs(cfg, prefix_axes, cross=True)
+
+
+def cross_attn_forward(p, x, enc_kv: tuple[jax.Array, jax.Array],
+                       cfg: ArchConfig):
+    """x: (B, Sq, d); enc_kv: precomputed (k, v) each (B, Senc, Hkv, D)."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+    k, v = enc_kv
+    senc = k.shape[1]
+    m = jnp.ones((1, 1, 1, x.shape[1], senc), bool)
+    out = grouped_dot_attention(q, k, v, m, cfg.head_dim ** -0.5)
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    if "bo" in p:
+        y = y + p["bo"].astype(y.dtype)
+    return y
+
+
+def encode_cross_kv(p, enc_out: jax.Array, cfg: ArchConfig):
+    k = jnp.einsum("bsd,dhe->bshe", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", enc_out, p["wv"])
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    return k, v

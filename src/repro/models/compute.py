@@ -1,0 +1,27 @@
+"""Precision policy helpers.
+
+TPU idiom for matmuls that must accumulate in fp32 is
+``preferred_element_type=jnp.float32`` with bf16 operands (MXU accumulates
+fp32 natively without materialising fp32 inputs).  The XLA *CPU* thunk used
+in this container does not implement BF16xBF16=F32 dots, so on CPU we upcast
+operands instead — numerically equivalent, and the TPU-target lowering keeps
+the efficient form.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.cache
+def _cpu_backend() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def einsum_f32(eq: str, *ops: jax.Array) -> jax.Array:
+    """einsum with fp32 accumulation; returns fp32."""
+    if _cpu_backend():
+        return jnp.einsum(eq, *[o.astype(jnp.float32) for o in ops])
+    return jnp.einsum(eq, *ops, preferred_element_type=jnp.float32)

@@ -1,0 +1,217 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: callers provide
+precomputed frame embeddings (B, S_enc, d_model).  Encoder adds sinusoidal
+positions + bidirectional attention blocks.  Decoder uses learned positional
+embeddings (whisper max 448), causal self-attention with the ring cache, and
+cross-attention over encoder states whose K/V are computed once at prefill —
+the cross-KV is the classic "computed once, then cold" buffer that Pond's
+zNUMA tier targets (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.layers import (apply_mlp, apply_norm, embed_specs,
+                                 embed_tokens, mlp_specs, norm_specs)
+from repro.models.params import ParamSpec, abstract, materialize, stack_specs
+from repro.sharding.rules import ShardCtx
+
+_NULL_CTX = ShardCtx()
+MAX_DEC_LEN = 448  # whisper decoder context
+
+
+def sinusoid(seq: int, dim: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-jnp.arange(0, dim, 2, jnp.float32) / dim * jnp.log(1e4))
+    ang = pos * inv[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+def _enc_block_specs(cfg: ArchConfig) -> dict:
+    return {"norm1": norm_specs(cfg.d_model, cfg.norm),
+            "mixer": attn.attention_specs(cfg),
+            "norm2": norm_specs(cfg.d_model, cfg.norm),
+            "ffn": mlp_specs(cfg, cfg.d_ff)}
+
+
+def _dec_block_specs(cfg: ArchConfig) -> dict:
+    return {"norm1": norm_specs(cfg.d_model, cfg.norm),
+            "self": attn.attention_specs(cfg),
+            "norm_x": norm_specs(cfg.d_model, cfg.norm),
+            "cross": attn.cross_attention_specs(cfg),
+            "norm2": norm_specs(cfg.d_model, cfg.norm),
+            "ffn": mlp_specs(cfg, cfg.d_ff)}
+
+
+class EncDec:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # ----------------------------------------------------------- specs ----
+    def specs(self) -> dict:
+        cfg = self.cfg
+        return {
+            "embed": embed_specs(cfg),
+            "dec_pos": ParamSpec((MAX_DEC_LEN, cfg.d_model), jnp.bfloat16,
+                                 (None, "embed"), "embed"),
+            "enc_blocks": stack_specs(_enc_block_specs(cfg),
+                                      cfg.encoder_layers),
+            "enc_norm": norm_specs(cfg.d_model, cfg.norm),
+            "dec_blocks": stack_specs(_dec_block_specs(cfg), cfg.num_layers),
+            "final_norm": norm_specs(cfg.d_model, cfg.norm),
+        }
+
+    def cache_specs(self, batch: int, max_len: int,
+                    enc_len: int | None = None) -> dict:
+        """max_len = encoder/cross length for serve shapes; the decoder self
+        cache is bounded by MAX_DEC_LEN."""
+        cfg = self.cfg
+        enc_len = enc_len if enc_len is not None else max_len
+        dec_w = min(MAX_DEC_LEN, max_len)
+        hkv, hd = cfg.num_kv_heads, cfg.head_dim
+        return {
+            "self": stack_specs(
+                attn.kv_cache_specs(cfg, batch, dec_w), cfg.num_layers),
+            "cross_k": ParamSpec((cfg.num_layers, batch, enc_len, hkv, hd),
+                                 jnp.bfloat16,
+                                 ("layers", "batch", "kv_seq", "kv_heads",
+                                  None), "zeros"),
+            "cross_v": ParamSpec((cfg.num_layers, batch, enc_len, hkv, hd),
+                                 jnp.bfloat16,
+                                 ("layers", "batch", "kv_seq", "kv_heads",
+                                  None), "zeros"),
+        }
+
+    def init_params(self, rng):
+        return materialize(self.specs(), rng)
+
+    def init_cache(self, batch: int, max_len: int,
+                   enc_len: int | None = None):
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                             abstract(self.cache_specs(batch, max_len,
+                                                       enc_len)))
+
+        def fix(path, leaf):
+            if path[-1].key == "pos":
+                return jnp.full_like(leaf, -1)
+            return leaf
+        return jax.tree_util.tree_map_with_path(fix, cache)
+
+    # ----------------------------------------------------------- encoder --
+    def encode(self, params, frames, ctx: ShardCtx = _NULL_CTX):
+        """frames: (B, S_enc, d) precomputed embeddings (frontend stub)."""
+        cfg = self.cfg
+        x = frames.astype(jnp.bfloat16)
+        x = x + sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+        pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                               (x.shape[0], x.shape[1]))
+
+        def body(xc, lp):
+            h = apply_norm(lp["norm1"], xc, cfg.norm, cfg.norm_eps)
+            xc = xc + attn.attn_forward(lp["mixer"], h, cfg, pos,
+                                        causal=False, impl=ctx.attn_impl)
+            h = apply_norm(lp["norm2"], xc, cfg.norm, cfg.norm_eps)
+            xc = xc + apply_mlp(lp["ffn"], h, cfg)
+            return xc, None
+
+        if ctx.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        return apply_norm(params["enc_norm"], x, cfg.norm, cfg.norm_eps)
+
+    # ----------------------------------------------------------- decoder --
+    def _dec_embed(self, params, tokens, positions):
+        x = embed_tokens(params["embed"], tokens)
+        pe = jnp.take(params["dec_pos"],
+                      jnp.clip(positions, 0, MAX_DEC_LEN - 1), axis=0)
+        return x + pe.astype(x.dtype)
+
+    def _decoder(self, params, x, enc_out, positions, ctx: ShardCtx,
+                 cache=None, cross_kv=None, mode: str = "train"):
+        cfg = self.cfg
+
+        def body(carry, layer):
+            xc = carry
+            lp, lc, ck, cv = layer
+            h = apply_norm(lp["norm1"], xc, cfg.norm, cfg.norm_eps)
+            if mode == "train":
+                y, nc = attn.attn_forward(lp["self"], h, cfg, positions,
+                                          impl=ctx.attn_impl), None
+            elif mode == "prefill":
+                y, nc = attn.attn_prefill(lp["self"], h, cfg, lc, positions,
+                                          impl=ctx.attn_impl)
+            else:
+                y, nc = attn.attn_decode(lp["self"], h, cfg, lc, positions)
+            xc = xc + y
+            h = apply_norm(lp["norm_x"], xc, cfg.norm, cfg.norm_eps)
+            if mode == "train":
+                kv = attn.encode_cross_kv(lp["cross"], enc_out, cfg)
+            else:
+                kv = (ck, cv)
+            xc = xc + attn.cross_attn_forward(lp["cross"], h, kv, cfg)
+            h = apply_norm(lp["norm2"], xc, cfg.norm, cfg.norm_eps)
+            xc = xc + apply_mlp(lp["ffn"], h, cfg)
+            return xc, nc
+
+        if ctx.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        n = cfg.num_layers
+        lc = cache["self"] if cache is not None else None
+        ck = cross_kv[0] if cross_kv is not None else jnp.zeros((n,))
+        cv = cross_kv[1] if cross_kv is not None else jnp.zeros((n,))
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec_blocks"],
+                      lc if lc is not None else jnp.zeros((n,)), ck, cv))
+        x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+        return x, new_self
+
+    # ---------------------------------------------------- public API ------
+    def lm_head_weight(self, params):
+        w = params["embed"].get("lm_head", None)
+        return params["embed"]["tok"].T if w is None else w
+
+    def logits(self, params, hidden):
+        return jnp.einsum("bsd,dv->bsv", hidden,
+                          self.lm_head_weight(params)).astype(jnp.float32)
+
+    def forward(self, params, tokens, positions, ctx: ShardCtx = _NULL_CTX,
+                embeds=None):
+        """Training: embeds = encoder frames; tokens = decoder tokens."""
+        enc_out = self.encode(params, embeds, ctx)
+        x = self._dec_embed(params, tokens, positions)
+        x, _ = self._decoder(params, x, enc_out, positions, ctx,
+                             mode="train")
+        return {"hidden": x, "aux": jnp.zeros((), jnp.float32)}
+
+    def prefill(self, params, tokens, positions, cache,
+                ctx: ShardCtx = _NULL_CTX, embeds=None):
+        """Encode frames once, cache cross-KV, prefill decoder prompt."""
+        cfg = self.cfg
+        enc_out = self.encode(params, embeds, ctx)
+
+        def per_layer(lp):
+            return attn.encode_cross_kv(lp["cross"], enc_out, cfg)
+        ck, cv = jax.vmap(per_layer)(
+            jax.tree.map(lambda l: l, params["dec_blocks"]))
+        x = self._dec_embed(params, tokens, positions)
+        x, new_self = self._decoder(params, x, enc_out, positions, ctx,
+                                    cache=cache, cross_kv=(ck, cv),
+                                    mode="prefill")
+        cache = {"self": new_self, "cross_k": ck, "cross_v": cv}
+        return x, cache, jnp.zeros((), jnp.float32)
+
+    def decode(self, params, tokens, positions, cache,
+               ctx: ShardCtx = _NULL_CTX):
+        x = self._dec_embed(params, tokens, positions[:, None])
+        x, new_self = self._decoder(
+            params, x, None, positions, ctx, cache=cache,
+            cross_kv=(cache["cross_k"], cache["cross_v"]), mode="decode")
+        cache = {"self": new_self, "cross_k": cache["cross_k"],
+                 "cross_v": cache["cross_v"]}
+        return self.logits(params, x), cache

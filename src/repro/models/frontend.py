@@ -1,0 +1,45 @@
+"""Modality frontend STUBS (per assignment: backbone only).
+
+``[audio]``/``[vlm]`` archs receive *precomputed* frame/patch embeddings:
+the conv mel-spectrogram stack (whisper) and InternViT tower (internvl2)
+are out of scope; ``input_specs()`` emits ShapeDtypeStructs for their
+outputs and smoke tests draw them from a seeded normal.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def frontend_embed_shape(cfg: ArchConfig, batch: int, seq_len: int):
+    """Shape of the precomputed embedding tensor handed to the backbone."""
+    if cfg.frontend == "audio":
+        return (batch, seq_len, cfg.d_model)        # frame embeddings
+    if cfg.frontend == "vision":
+        n = min(cfg.num_frontend_tokens, seq_len)
+        return (batch, n, cfg.d_model)              # patch embeddings
+    return None
+
+
+def frontend_embed_spec(cfg: ArchConfig, batch: int, seq_len: int):
+    shape = frontend_embed_shape(cfg, batch, seq_len)
+    if shape is None:
+        return None
+    return jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+
+
+def make_fake_embeds(cfg: ArchConfig, batch: int, seq_len: int, rng):
+    shape = frontend_embed_shape(cfg, batch, seq_len)
+    if shape is None:
+        return None
+    return (jax.random.normal(rng, shape, jnp.float32) * 0.02
+            ).astype(jnp.bfloat16)
+
+
+def text_len(cfg: ArchConfig, seq_len: int) -> int:
+    """Text tokens in a length-seq_len sequence after frontend tokens."""
+    if cfg.frontend == "vision":
+        return seq_len - min(cfg.num_frontend_tokens, seq_len - 1)
+    return seq_len

@@ -1,0 +1,110 @@
+"""Shared layers: norms, RoPE, MLPs, embeddings.
+
+All forward functions are pure; params are dicts produced from the matching
+``*_specs`` declaration. Compute dtype is bf16, accumulation fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamSpec
+
+
+# ---------------------------------------------------------------- norms ----
+def norm_specs(dim: int, kind: str, prefix_axes=()) -> dict:
+    ax = prefix_axes + (None,)
+    if kind == "layernorm":
+        return {"scale": ParamSpec((dim,), jnp.float32, ax, "ones"),
+                "bias": ParamSpec((dim,), jnp.float32, ax, "zeros")}
+    return {"scale": ParamSpec((dim,), jnp.float32, ax, "ones")}
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        xf = xf - mu
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    if kind == "layernorm":
+        y = y + p["bias"]
+    return y.astype(x.dtype)
+
+
+def rms_norm(scale: jax.Array, x: jax.Array, eps: float) -> jax.Array:
+    return apply_norm({"scale": scale}, x, "rmsnorm", eps)
+
+
+# ----------------------------------------------------------------- rope ----
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float):
+    """positions: (..., S) int -> cos,sin (..., S, head_dim//2), fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D). cos/sin: (B, S, D/2) (broadcast over heads)."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ mlp ----
+def mlp_specs(cfg: ArchConfig, d_ff: int, prefix_axes=()) -> dict:
+    d = cfg.d_model
+    pa = prefix_axes
+    if cfg.act == "gelu":  # whisper-style: single up + down, biases
+        return {
+            "wi": ParamSpec((d, d_ff), jnp.bfloat16, pa + ("embed", "ff")),
+            "bi": ParamSpec((d_ff,), jnp.float32, pa + ("ff",), "zeros"),
+            "wo": ParamSpec((d_ff, d), jnp.bfloat16, pa + ("ff", "embed")),
+            "bo": ParamSpec((d,), jnp.float32, pa + (None,), "zeros"),
+        }
+    return {  # SwiGLU (llama/qwen family)
+        "wi_gate": ParamSpec((d, d_ff), jnp.bfloat16, pa + ("embed", "ff")),
+        "wi_up": ParamSpec((d, d_ff), jnp.bfloat16, pa + ("embed", "ff")),
+        "wo": ParamSpec((d_ff, d), jnp.bfloat16, pa + ("ff", "embed")),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if "wi" in p:
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"]) + p["bi"].astype(x.dtype)
+        h = jax.nn.gelu(h)
+        return jnp.einsum("bsf,fd->bsd", h, p["wo"]) + p["bo"].astype(x.dtype)
+    g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["wi_up"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+# ----------------------------------------------------------- embeddings ----
+def embed_specs(cfg: ArchConfig) -> dict:
+    # The token table shards on d_model ("embed_tbl"->model), NOT on vocab:
+    # a gather from a vocab-sharded table forces SPMD full-remat (replicate)
+    # while a d-sharded gather is local + one small all-gather of (B,S,d).
+    d = {"tok": ParamSpec((cfg.vocab_size, cfg.d_model), jnp.bfloat16,
+                          ("vocab_tbl", "embed_tbl"), "embed")}
+    if not cfg.tie_embeddings:
+        d["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size), jnp.bfloat16,
+                                 ("embed", "vocab"))
+    return d
+
+
+def embed_tokens(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def lm_logits(p: dict, x: jax.Array) -> jax.Array:
+    w = p.get("lm_head")
+    if w is None:
+        w = p["tok"].T
+    return jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)

@@ -1,0 +1,236 @@
+"""Mamba-2 (SSD, state-space duality) mixer — arXiv:2405.21060.
+
+Chunked SSD forward for train/prefill (O(S·Q) intra-chunk matmuls + an
+O(S/Q) inter-chunk state scan) and an O(1) single-token decode step.
+
+TP note: the fused ``in_proj``/conv layouts of the CUDA reference pack
+[z | x | B | C | dt] into one matrix; sharding that packed dim over a mesh
+axis would split the logical parts unevenly.  We therefore keep one weight
+leaf per logical part (mathematically identical), so ``d_inner`` and heads
+shard cleanly over the TP axis while the small B/C/dt projections stay
+replicated.  See DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import rms_norm
+from repro.models.params import ParamSpec
+
+
+def dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    return d_inner, nheads, s.n_groups, s.d_state, s.head_dim
+
+
+# ----------------------------------------------------------------- specs ---
+def mamba_specs(cfg: ArchConfig, prefix_axes=()) -> dict:
+    s = cfg.ssm
+    di, h, g, n, _ = dims(cfg)
+    d = cfg.d_model
+    pa = prefix_axes
+    bf, f32 = jnp.bfloat16, jnp.float32
+    return {
+        "w_z": ParamSpec((d, di), bf, pa + ("embed", "inner")),
+        "w_x": ParamSpec((d, di), bf, pa + ("embed", "inner")),
+        "w_B": ParamSpec((d, g * n), bf, pa + ("embed", None)),
+        "w_C": ParamSpec((d, g * n), bf, pa + ("embed", None)),
+        "w_dt": ParamSpec((d, h), bf, pa + ("embed", "heads")),
+        "conv_x": ParamSpec((s.d_conv, di), f32, pa + (None, "inner")),
+        "conv_B": ParamSpec((s.d_conv, g * n), f32, pa + (None, None)),
+        "conv_C": ParamSpec((s.d_conv, g * n), f32, pa + (None, None)),
+        "conv_bx": ParamSpec((di,), f32, pa + ("inner",), "zeros"),
+        "conv_bB": ParamSpec((g * n,), f32, pa + (None,), "zeros"),
+        "conv_bC": ParamSpec((g * n,), f32, pa + (None,), "zeros"),
+        "A_log": ParamSpec((h,), f32, pa + ("heads",), "zeros"),
+        "D": ParamSpec((h,), f32, pa + ("heads",), "ones"),
+        "dt_bias": ParamSpec((h,), f32, pa + ("heads",), "zeros"),
+        "norm": ParamSpec((di,), f32, pa + ("inner",), "ones"),
+        "out_proj": ParamSpec((di, d), bf, pa + ("inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,C); w: (K,C). Returns (B,S,C) fp32."""
+    k = w.shape[0]
+    xf = x.astype(jnp.float32)
+    xp = jnp.pad(xf, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(k))
+    return y + b
+
+
+def _conv_step(state, x_new, w, b):
+    """state: (B,K-1,C); x_new: (B,C). Returns (y (B,C), new_state)."""
+    window = jnp.concatenate([state, x_new[:, None]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w) + b
+    return y, window[:, 1:]
+
+
+# ------------------------------------------------------------- SSD core ----
+def ssd_chunked(xdt, a, B_, C_, chunk: int, h_init=None):
+    """Chunked SSD scan.
+
+    xdt: (B,S,H,P) fp32 — dt-scaled inputs (dt·x)
+    a:   (B,S,H)   fp32 — log decay per step (dt·A, ≤ 0)
+    B_:  (B,S,G,N) fp32;  C_: (B,S,G,N) fp32
+    Returns y (B,S,H,P) fp32 and final state (B,H,P,N) fp32.
+    """
+    b, s, h, p = xdt.shape
+    g, n = B_.shape[2], B_.shape[3]
+    hg = h // g
+    s_orig = s
+    if s % chunk:  # zero-pad: a=0 -> decay 1 keeps state, xdt=0 adds nothing
+        pad = chunk - s % chunk
+        xdt, a, B_, C_ = (jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] *
+                                  (t.ndim - 2)) for t in (xdt, a, B_, C_))
+        s = s + pad
+    nc, q = s // chunk, chunk
+
+    def ch(t, extra):  # (B,S,...) -> (B,nc,Q,...)
+        return t.reshape((b, nc, q) + extra)
+
+    xc = ch(xdt, (h, p))
+    ac = ch(a, (h,))
+    bc = ch(B_, (g, n))
+    cc = ch(C_, (g, n))
+    # broadcast groups to heads: (B,nc,Q,G,N) -> (B,nc,Q,G,Hg,N) view
+    cum = jnp.cumsum(ac, axis=2)                        # (B,nc,Q,H)
+    # intra-chunk: scores[q,k] = (C_q·B_k)·exp(cum_q - cum_k), k<=q
+    xch = xc.reshape(b, nc, q, g, hg, p)
+    cumh = cum.reshape(b, nc, q, g, hg)
+    cb = jnp.einsum("bcqgn,bckgn->bcgqk", cc, bc)       # (B,nc,G,Q,K)
+    # decay (B,nc,G,Hg,Q,K) = exp(cum_q - cum_k)
+    dq = cumh.transpose(0, 1, 3, 4, 2)                  # (B,nc,G,Hg,Q)
+    dec = jnp.exp(dq[..., :, None] - dq[..., None, :])  # (B,nc,G,Hg,Q,K)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    w_intra = jnp.where(mask, cb[:, :, :, None] * dec, 0.0)
+    y_intra = jnp.einsum("bcghqk,bckghp->bcqghp", w_intra, xch)
+
+    # local end-of-chunk states: S_c = sum_k exp(cum_last - cum_k) B_k x_k
+    decay_to_end = jnp.exp(cumh[:, :, -1:, :, :] - cumh)    # (B,nc,Q,G,Hg)
+    s_local = jnp.einsum("bckgn,bckgh,bckghp->bcghpn",
+                         bc, decay_to_end, xch)             # (B,nc,G,Hg,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1])                    # (B,nc,H)
+    cd = chunk_decay.reshape(b, nc, g, hg)
+
+    if h_init is None:
+        h_init = jnp.zeros((b, g, hg, p, n), jnp.float32)
+    else:
+        h_init = h_init.reshape(b, g, hg, p, n)
+
+    def body(carry, inp):
+        sl, cdk = inp                                       # per-chunk
+        prev = carry
+        new = prev * cdk[..., None, None] + sl
+        return new, prev
+
+    s_loc_t = jnp.moveaxis(s_local, 1, 0)                   # (nc,B,G,Hg,P,N)
+    cd_t = jnp.moveaxis(cd, 1, 0)                           # (nc,B,G,Hg)
+    h_last, h_prevs = jax.lax.scan(body, h_init, (s_loc_t, cd_t))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                   # (B,nc,G,Hg,P,N)
+
+    # inter-chunk contribution: C_q · h_prev · exp(cum_q)
+    in_decay = jnp.exp(cumh)                                # (B,nc,Q,G,Hg)
+    y_inter = jnp.einsum("bcqgn,bcghpn,bcqgh->bcqghp",
+                         cc, h_prevs, in_decay)
+    y = (y_intra + y_inter).reshape(b, nc, q, h, p).reshape(b, s, h, p)
+    return y[:, :s_orig], h_last.reshape(b, h, p, n)
+
+
+# ------------------------------------------------------------ layer apply --
+def _project(p, x, cfg: ArchConfig):
+    z = jnp.einsum("bsd,di->bsi", x, p["w_z"])
+    xs = jnp.einsum("bsd,di->bsi", x, p["w_x"])
+    B_ = jnp.einsum("bsd,dn->bsn", x, p["w_B"])
+    C_ = jnp.einsum("bsd,dn->bsn", x, p["w_C"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"])
+    return z, xs, B_, C_, dt
+
+
+def _ssm_inputs(p, xs_c, B_c, C_c, dt, cfg: ArchConfig):
+    """Post-conv activations -> fp32 SSD operands."""
+    di, h, g, n, hp = dims(cfg)
+    bsz, s = xs_c.shape[:2]
+    x_h = jax.nn.silu(xs_c).reshape(bsz, s, h, hp).astype(jnp.float32)
+    B_ = jax.nn.silu(B_c).reshape(bsz, s, g, n).astype(jnp.float32)
+    C_ = jax.nn.silu(C_c).reshape(bsz, s, g, n).astype(jnp.float32)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = dtp * (-jnp.exp(p["A_log"]))                     # (B,S,H) ≤ 0
+    xdt = x_h * dtp[..., None]
+    return x_h, xdt, a, B_, C_
+
+
+def _finish(p, y, x_h, z, cfg: ArchConfig):
+    di, h, g, n, hp = dims(cfg)
+    bsz, s = z.shape[:2]
+    y = y + p["D"][None, None, :, None] * x_h
+    y = y.reshape(bsz, s, di).astype(z.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(p["norm"], y, cfg.norm_eps)
+    return jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+
+
+def mamba_forward(p, x, cfg: ArchConfig, return_cache: bool = False):
+    """Train / prefill. x: (B,S,d)."""
+    z, xs, B_, C_, dt = _project(p, x, cfg)
+    xs_c = _causal_conv(xs, p["conv_x"], p["conv_bx"])
+    B_c = _causal_conv(B_, p["conv_B"], p["conv_bB"])
+    C_c = _causal_conv(C_, p["conv_C"], p["conv_bC"])
+    x_h, xdt, a, Bn, Cn = _ssm_inputs(p, xs_c, B_c, C_c, dt, cfg)
+    chunk = min(cfg.ssm.chunk_size, x.shape[1])
+    y, h_last = ssd_chunked(xdt, a, Bn, Cn, chunk)
+    out = _finish(p, y, x_h, z, cfg)
+    if not return_cache:
+        return out
+    k = cfg.ssm.d_conv - 1
+    cache = {
+        "conv_x": xs[:, -k:].astype(jnp.float32),
+        "conv_B": B_[:, -k:].astype(jnp.float32),
+        "conv_C": C_[:, -k:].astype(jnp.float32),
+        "ssm": h_last,
+    }
+    return out, cache
+
+
+def mamba_cache_specs(cfg: ArchConfig, batch: int, prefix_axes=()) -> dict:
+    di, h, g, n, hp = dims(cfg)
+    k = cfg.ssm.d_conv - 1
+    pa = prefix_axes
+    f32 = jnp.float32
+    return {
+        "conv_x": ParamSpec((batch, k, di), f32,
+                            pa + ("batch", None, "inner"), "zeros"),
+        "conv_B": ParamSpec((batch, k, g * n), f32,
+                            pa + ("batch", None, None), "zeros"),
+        "conv_C": ParamSpec((batch, k, g * n), f32,
+                            pa + ("batch", None, None), "zeros"),
+        "ssm": ParamSpec((batch, h, hp, n), f32,
+                         pa + ("batch", "heads", None, None), "zeros"),
+    }
+
+
+def mamba_decode(p, x, cfg: ArchConfig, cache: dict, positions=None):
+    """One-token decode. x: (B,1,d). O(1) in sequence length."""
+    di, h, g, n, hp = dims(cfg)
+    z, xs, B_, C_, dt = _project(p, x, cfg)
+    xc, cx = _conv_step(cache["conv_x"], xs[:, 0], p["conv_x"], p["conv_bx"])
+    bc, cb = _conv_step(cache["conv_B"], B_[:, 0], p["conv_B"], p["conv_bB"])
+    cc, ccs = _conv_step(cache["conv_C"], C_[:, 0], p["conv_C"], p["conv_bC"])
+    x_h, xdt, a, Bn, Cn = _ssm_inputs(
+        p, xc[:, None], bc[:, None], cc[:, None], dt, cfg)
+    # state update: S = S*exp(a) + (dt x) ⊗ B  ; y = C·S
+    bsz = x.shape[0]
+    xdt1 = xdt[:, 0].reshape(bsz, g, h // g, hp)
+    Bn1, Cn1 = Bn[:, 0], Cn[:, 0]                         # (B,G,N)
+    ssm = cache["ssm"].reshape(bsz, g, h // g, hp, n)
+    decay = jnp.exp(a[:, 0]).reshape(bsz, g, h // g)
+    ssm = (ssm * decay[..., None, None]
+           + jnp.einsum("bghp,bgn->bghpn", xdt1, Bn1))
+    y = jnp.einsum("bgn,bghpn->bghp", Cn1, ssm).reshape(bsz, 1, h, hp)
+    out = _finish(p, y, x_h, z, cfg)
+    return out, {"conv_x": cx, "conv_B": cb, "conv_C": ccs,
+                 "ssm": ssm.reshape(bsz, h, hp, n)}

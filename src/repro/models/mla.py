@@ -1,0 +1,181 @@
+"""DeepSeek-V3 Multi-head Latent Attention (MLA).
+
+Faithful to arXiv:2412.19437 §2.1: queries/keys/values are produced through
+low-rank latent projections; the decode cache stores only the compressed
+latent ``c_kv`` (kv_lora_rank) plus the shared RoPE key (qk_rope_head_dim)
+per token.  Decode uses the *absorbed* formulation: ``w_k_up`` is folded into
+the query and ``w_v_up`` into the output so scores/values are computed
+directly in latent space — the KV cache is ~9x smaller than GQA at
+deepseek-v3 dims, which is exactly the memory-pooling-friendly property
+Pond-JAX exploits (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, rms_norm, rope_cos_sin
+from repro.models.compute import einsum_f32
+from repro.models.params import ParamSpec
+
+NEG_INF = -2.0 ** 30
+
+
+def mla_specs(cfg: ArchConfig, prefix_axes=()) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    pa = prefix_axes
+    return {
+        # query low-rank path
+        "w_q_down": ParamSpec((d, m.q_lora_rank), jnp.bfloat16,
+                              pa + ("embed", "q_lora")),
+        "q_norm": ParamSpec((m.q_lora_rank,), jnp.float32,
+                            pa + (None,), "ones"),
+        "w_q_up": ParamSpec((m.q_lora_rank, h, qk_head), jnp.bfloat16,
+                            pa + ("q_lora", "heads", None), fan_in_dim=0),
+        # kv low-rank path: joint down-proj emits [c_kv ; k_rope]
+        "w_kv_down": ParamSpec((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                               jnp.bfloat16, pa + ("embed", None)),
+        "kv_norm": ParamSpec((m.kv_lora_rank,), jnp.float32,
+                             pa + (None,), "ones"),
+        "w_k_up": ParamSpec((m.kv_lora_rank, h, m.qk_nope_head_dim),
+                            jnp.bfloat16, pa + ("kv_lora", "heads", None),
+                            fan_in_dim=0),
+        "w_v_up": ParamSpec((m.kv_lora_rank, h, m.v_head_dim), jnp.bfloat16,
+                            pa + ("kv_lora", "heads", None), fan_in_dim=0),
+        "wo": ParamSpec((h, m.v_head_dim, d), jnp.bfloat16,
+                        pa + ("heads", None, "embed"), fan_in_dim=(0, 1)),
+    }
+
+
+def _latents(p, x, cfg: ArchConfig, positions):
+    """Shared q/c_kv/k_rope computation. x: (B,S,d)."""
+    m = cfg.mla
+    q_lat = rms_norm(p["q_norm"], jnp.einsum("bsd,dr->bsr", x, p["w_q_down"]),
+                     cfg.norm_eps)
+    q = jnp.einsum("bsr,rhe->bshe", q_lat, p["w_q_up"])
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = q[..., m.qk_nope_head_dim:]
+
+    kv = jnp.einsum("bsd,dr->bsr", x, p["w_kv_down"])
+    c_kv = rms_norm(p["kv_norm"], kv[..., : m.kv_lora_rank], cfg.norm_eps)
+    k_rope = kv[..., m.kv_lora_rank:]              # (B,S,rope_dim), shared
+
+    cos, sin = rope_cos_sin(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, cfg: ArchConfig,
+                positions, impl: str):
+    """Full-rank causal attention shared by forward/prefill.
+
+    impl="blocked" streams KV blocks (flash) so the (S, S) logits never
+    materialise — at 32k prefill the dot path would need ~34 GB/buffer per
+    device (EXPERIMENTS.md §Perf, deepseek hillclimb)."""
+    m = cfg.mla
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_k_up"])
+    v = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_v_up"])
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = q_nope.shape[1]
+    if impl == "blocked" and s > 1024:
+        from repro.models.attention import blocked_attention
+        h = q_nope.shape[2]
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      k_nope.shape[:3] + (k_rope.shape[-1],))
+             ], axis=-1)
+        out = blocked_attention(q, k, v, scale, positions, positions,
+                                causal=True)
+        return jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    logits = (einsum_f32("bqhe,bkhe->bhqk", q_nope, k_nope)
+              + einsum_f32("bqhe,bke->bhqk", q_rope, k_rope)) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = einsum_f32("bhqk,bkhe->bqhe",
+                     probs.astype(v.dtype), v).astype(q_nope.dtype)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"])
+
+
+def mla_forward(p, x, cfg: ArchConfig, positions,
+                impl: str = "blocked") -> jax.Array:
+    """Training / prefill self-attention. x: (B,S,d) -> (B,S,d)."""
+    q_nope, q_rope, c_kv, k_rope = _latents(p, x, cfg, positions)
+    return _mla_attend(p, q_nope, q_rope, c_kv, k_rope, cfg, positions,
+                       impl)
+
+
+# ---------------------------------------------------------------- decode ---
+def mla_cache_specs(cfg: ArchConfig, batch: int, max_len: int,
+                    prefix_axes=()) -> dict:
+    m = cfg.mla
+    pa = prefix_axes
+    return {
+        "c_kv": ParamSpec((batch, max_len, m.kv_lora_rank), jnp.bfloat16,
+                          pa + ("batch", "kv_seq", None), "zeros"),
+        "k_rope": ParamSpec((batch, max_len, m.qk_rope_head_dim),
+                            jnp.bfloat16, pa + ("batch", "kv_seq", None),
+                            "zeros"),
+        "pos": ParamSpec((batch, max_len), jnp.int32,
+                         pa + ("batch", "kv_seq"), "zeros"),
+    }
+
+
+def mla_prefill(p, x, cfg: ArchConfig, cache: dict, positions,
+                impl: str = "blocked"):
+    """Prefill: full-rank attention + latent-cache bulk fill. x: (B,S,d)."""
+    q_nope, q_rope, c_kv, k_rope = _latents(p, x, cfg, positions)
+    y = _mla_attend(p, q_nope, q_rope, c_kv, k_rope, cfg, positions, impl)
+
+    def put(buf, idx, val):
+        return buf.at[idx].set(val.astype(buf.dtype))
+    cache = {
+        "c_kv": jax.vmap(put)(cache["c_kv"], positions, c_kv),
+        "k_rope": jax.vmap(put)(cache["k_rope"], positions, k_rope),
+        "pos": jax.vmap(put)(cache["pos"], positions, positions),
+    }
+    return y, cache
+
+
+def mla_decode(p, x, cfg: ArchConfig, cache: dict, positions):
+    """Absorbed single-token decode.  x: (B,1,d); positions: (B,).
+
+    scores_k = q_nope @ w_k_up^T @ c_kv^T  (absorb w_k_up into the query)
+    out      = probs @ c_kv @ w_v_up       (absorb w_v_up into the output)
+    """
+    m = cfg.mla
+    q_nope, q_rope, c_kv_new, k_rope_new = _latents(
+        p, x, cfg, positions[:, None])
+
+    # append to cache (slot == absolute position; MLA cache never windows)
+    def put(buf, new, pos):
+        return jax.vmap(
+            lambda b, n, s: jax.lax.dynamic_update_slice_in_dim(b, n, s, 0)
+        )(buf, new, pos)
+    cache = {
+        "c_kv": put(cache["c_kv"], c_kv_new, positions),
+        "k_rope": put(cache["k_rope"], k_rope_new, positions),
+        "pos": jax.vmap(
+            lambda pb, pp, s: jax.lax.dynamic_update_slice_in_dim(
+                pb, pp[None].astype(pb.dtype), s, 0)
+        )(cache["pos"], positions, positions),
+    }
+
+    # absorbed queries: (B,1,H,nope) x (kv_lora,H,nope) -> (B,1,H,kv_lora)
+    q_abs = jnp.einsum("bqhe,rhe->bqhr", q_nope, p["w_k_up"])
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    logits = (einsum_f32("bqhr,bkr->bhqk", q_abs, cache["c_kv"])
+              + einsum_f32("bqhe,bke->bhqk", q_rope, cache["k_rope"])) * scale
+    valid = (jnp.arange(cache["c_kv"].shape[1])[None]
+             <= positions[:, None])                       # (B, W)
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o_lat = einsum_f32("bhqk,bkr->bqhr", probs.astype(cache["c_kv"].dtype),
+                       cache["c_kv"])
+    out = jnp.einsum("bqhr,rhe->bqhe", o_lat.astype(x.dtype), p["w_v_up"])
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"]), cache

@@ -1,0 +1,12 @@
+"""ArchConfig -> model builder."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+from repro.models.encdec import EncDec
+from repro.models.transformer import LM
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.is_encoder_decoder:
+        return EncDec(cfg)
+    return LM(cfg)

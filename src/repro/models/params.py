@@ -1,0 +1,116 @@
+"""Parameter-spec mini-framework.
+
+Models are pure functions over pytrees of arrays. Each model declares its
+parameters once as a pytree of :class:`ParamSpec` (shape + dtype + *logical
+axes* + initializer). From that single declaration we derive:
+
+  * ``materialize(specs, rng)``   -> concrete params (CPU smoke tests)
+  * ``abstract(specs)``           -> ShapeDtypeStruct tree (dry-run, no alloc)
+  * ``partition_specs(specs, rules)`` -> PartitionSpec tree (pjit shardings)
+
+Logical axis names are mapped to mesh axes by ``sharding/rules.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Initializer = str  # "normal" | "zeros" | "ones" | "embed" | "scaled"
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    dtype: Any = jnp.bfloat16
+    # one logical-axis name (or None) per dim, e.g. ("layers", "embed", "heads")
+    axes: tuple[str | None, ...] = ()
+    init: Initializer = "normal"
+    # fan-in dim index/indices for scaled init (default: second-to-last)
+    fan_in_dim: int | tuple | None = None
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} rank != shape {self.shape} rank")
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], specs):
+    return jax.tree.map(fn, specs, is_leaf=_is_spec)
+
+
+def abstract(specs):
+    """ShapeDtypeStruct tree for dry-run lowering (no device allocation)."""
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs)
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape, jnp.float32) * 0.02
+                ).astype(spec.dtype)
+    # scaled truncated-normal, 1/sqrt(fan_in)
+    fan_dim = spec.fan_in_dim
+    if fan_dim is None:
+        fan_dim = max(0, len(spec.shape) - 2)
+    if isinstance(fan_dim, int):
+        fan_dim = (fan_dim,)
+    fan_in = math.prod(spec.shape[d] for d in fan_dim) if spec.shape else 1
+    std = 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, spec.shape,
+                                        jnp.float32) * std).astype(spec.dtype)
+
+
+def materialize(specs, rng: jax.Array):
+    """Concrete random init. Splits the rng deterministically per leaf."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(rng, max(1, len(leaves)))
+    vals = [_init_leaf(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def partition_specs(specs, rules: dict[str, Any]):
+    """Map logical axes -> mesh axes via `rules` ({logical: mesh-axis|None})."""
+    def one(s: ParamSpec):
+        if not s.axes:
+            return P()
+        return P(*[rules.get(a) if a is not None else None for a in s.axes])
+    return tree_map_specs(one, specs)
+
+
+def stack_specs(specs, repeat: int):
+    """Prefix every leaf with a ("layers", repeat) dim for lax.scan stacking."""
+    def one(s: ParamSpec):
+        axes = s.axes if s.axes else (None,) * len(s.shape)
+        fan = s.fan_in_dim
+        if fan is None and len(s.shape) >= 2 and s.init == "normal":
+            fan = max(0, len(s.shape) - 2)  # preserve pre-stack fan-in dim
+        if fan is not None:
+            fan = tuple(f + 1 for f in ((fan,) if isinstance(fan, int)
+                                        else fan))
+        return ParamSpec((repeat,) + s.shape, s.dtype, ("layers",) + axes,
+                         s.init, fan)
+    return tree_map_specs(one, specs)
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return sum(int(math.prod(s.shape)) for s in leaves)
+
+
+def param_bytes(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return sum(int(math.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+               for s in leaves)

@@ -1,0 +1,248 @@
+"""Decoder-only LM stack over layer groups.
+
+A *group* is a repeated sequence of blocks scanned with ``jax.lax.scan``
+(params stacked on a leading "layers" dim), so HLO size is O(distinct block
+patterns), not O(num_layers).  Heterogeneous archs (jamba's attn:mamba 1:7
+interleave) are one group with 8 blocks; homogeneous archs are one group
+with 1 block.
+
+Three entry points share the block logic:
+  forward  — training (no cache), returns hidden states + aux loss
+  prefill  — forward + bulk cache fill, returns last hidden + cache
+  decode   — single-token step over the cache
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Block
+from repro.models import attention as attn
+from repro.models import mamba2, mla, moe
+from repro.models.layers import (apply_mlp, apply_norm, embed_specs,
+                                 embed_tokens, mlp_specs, norm_specs)
+from repro.models.params import ParamSpec, abstract, materialize, stack_specs
+from repro.sharding.rules import ShardCtx
+
+_NULL_CTX = ShardCtx()
+
+
+# ----------------------------------------------------------------- specs ---
+def block_specs(cfg: ArchConfig, blk: Block) -> dict:
+    sp: dict = {"norm1": norm_specs(cfg.d_model, cfg.norm)}
+    if blk.mixer == "attn":
+        sp["mixer"] = attn.attention_specs(cfg)
+    elif blk.mixer == "mla":
+        sp["mixer"] = mla.mla_specs(cfg)
+    elif blk.mixer == "mamba":
+        sp["mixer"] = mamba2.mamba_specs(cfg)
+    else:
+        raise ValueError(blk.mixer)
+    if blk.ffn != "none":
+        sp["norm2"] = norm_specs(cfg.d_model, cfg.norm)
+        sp["ffn"] = (moe.moe_specs(cfg) if blk.ffn == "moe"
+                     else mlp_specs(cfg, cfg.d_ff))
+    return sp
+
+
+def block_cache_specs(cfg: ArchConfig, blk: Block, batch: int,
+                      max_len: int) -> dict:
+    if blk.mixer == "attn":
+        return attn.kv_cache_specs(cfg, batch, max_len)
+    if blk.mixer == "mla":
+        return mla.mla_cache_specs(cfg, batch, max_len)
+    return mamba2.mamba_cache_specs(cfg, batch)
+
+
+def _apply_mixer(bp, h, blk: Block, cfg: ArchConfig, ctx: ShardCtx,
+                 positions, cache, mode: str):
+    """mode: train | prefill | decode.  Returns (y, new_cache_or_None)."""
+    mp = bp["mixer"]
+    if blk.mixer == "attn":
+        if mode == "train":
+            return attn.attn_forward(mp, h, cfg, positions,
+                                     impl=ctx.attn_impl), None
+        if mode == "prefill":
+            return attn.attn_prefill(mp, h, cfg, cache, positions,
+                                     impl=ctx.attn_impl)
+        return attn.attn_decode(mp, h, cfg, cache, positions)
+    if blk.mixer == "mla":
+        if mode == "train":
+            return mla.mla_forward(mp, h, cfg, positions,
+                                   impl=ctx.attn_impl), None
+        if mode == "prefill":
+            return mla.mla_prefill(mp, h, cfg, cache, positions,
+                                   impl=ctx.attn_impl)
+        return mla.mla_decode(mp, h, cfg, cache, positions)
+    # mamba
+    if mode == "train":
+        return mamba2.mamba_forward(mp, h, cfg), None
+    if mode == "prefill":
+        return mamba2.mamba_forward(mp, h, cfg, return_cache=True)
+    return mamba2.mamba_decode(mp, h, cfg, cache, positions)
+
+
+def apply_block(bp, x, blk: Block, cfg: ArchConfig, ctx: ShardCtx,
+                positions, cache=None, mode: str = "train"):
+    """Pre-norm residual block. Returns (x, aux, new_cache)."""
+    h = apply_norm(bp["norm1"], x, cfg.norm, cfg.norm_eps)
+    y, new_cache = _apply_mixer(bp, h, blk, cfg, ctx, positions, cache, mode)
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    if blk.ffn != "none":
+        h = apply_norm(bp["norm2"], x, cfg.norm, cfg.norm_eps)
+        if blk.ffn == "moe":
+            cf = ctx.moe_decode_cf if mode == "decode" else None
+            y, aux = moe.apply_moe(bp["ffn"], h, cfg, ctx,
+                                   capacity_factor=cf)
+        else:
+            y = apply_mlp(bp["ffn"], h, cfg)
+        x = x + y
+    return x, aux, new_cache
+
+
+# -------------------------------------------------------------- LM model ---
+class LM:
+    """Decoder-only language model (all non-encoder-decoder archs)."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # ---- parameter / cache declarations ----
+    def specs(self) -> dict:
+        cfg = self.cfg
+        groups = []
+        for g in cfg.groups:
+            blocks = tuple(stack_specs(block_specs(cfg, b), g.repeat)
+                           for b in g.blocks)
+            groups.append({"blocks": blocks})
+        sp = {
+            "embed": embed_specs(cfg),
+            "groups": tuple(groups),
+            "final_norm": norm_specs(cfg.d_model, cfg.norm),
+        }
+        if cfg.mtp_depth:  # DeepSeek multi-token prediction head
+            sp["mtp"] = {
+                "proj": ParamSpec((2 * cfg.d_model, cfg.d_model),
+                                  jnp.bfloat16, ("embed", None)),
+                "block": block_specs(cfg, cfg.groups[-1].blocks[-1]),
+                "norm": norm_specs(cfg.d_model, cfg.norm),
+            }
+        return sp
+
+    def cache_specs(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        groups = []
+        for g in cfg.groups:
+            blocks = tuple(
+                stack_specs(block_cache_specs(cfg, b, batch, max_len),
+                            g.repeat)
+                for b in g.blocks)
+            groups.append({"blocks": blocks})
+        return {"groups": tuple(groups)}
+
+    def init_params(self, rng):
+        return materialize(self.specs(), rng)
+
+    def init_cache(self, batch: int, max_len: int):
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                             abstract(self.cache_specs(batch, max_len)))
+
+        def fix(path, leaf):
+            if path[-1].key == "pos":
+                return jnp.full_like(leaf, -1)
+            return leaf
+        return jax.tree_util.tree_map_with_path(fix, cache)
+
+    # ---- embedding / head ----
+    def embed(self, params, tokens, embeds=None):
+        x = embed_tokens(params["embed"], tokens)
+        if embeds is not None:  # modality frontend stub (vision/audio)
+            x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+        return x
+
+    def lm_head_weight(self, params):
+        w = params["embed"].get("lm_head")
+        return params["embed"]["tok"].T if w is None else w
+
+    def logits(self, params, hidden):
+        return jnp.einsum("bsd,dv->bsv", hidden,
+                          self.lm_head_weight(params)).astype(jnp.float32)
+
+    # ---- stacks ----
+    def _run_groups(self, params, x, positions, ctx: ShardCtx,
+                    cache=None, mode: str = "train"):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        new_cache_groups = []
+        for gi, g in enumerate(cfg.groups):
+            gp = params["groups"][gi]["blocks"]
+            gc = cache["groups"][gi]["blocks"] if cache is not None else None
+
+            def body(carry, layer, gp_struct=g):
+                xc, auxc = carry
+                lp, lc = layer
+                ncs = []
+                for bi, blk in enumerate(gp_struct.blocks):
+                    xc, a, nc = apply_block(
+                        lp[bi], xc, blk, cfg, ctx, positions,
+                        cache=None if lc is None else lc[bi], mode=mode)
+                    auxc = auxc + a
+                    ncs.append(nc)
+                return (xc, auxc), tuple(ncs)
+
+            if ctx.remat:
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable)
+            (x, aux), ncs = jax.lax.scan(
+                body, (x, aux), (gp, gc if gc is not None else
+                                 tuple(None for _ in g.blocks)))
+            x = ctx.constrain(x, ctx.batch_spec(3))
+            new_cache_groups.append({"blocks": ncs})
+        new_cache = ({"groups": tuple(new_cache_groups)}
+                     if cache is not None else None)
+        return x, aux, new_cache
+
+    # ---- public entry points ----
+    def forward(self, params, tokens, positions, ctx: ShardCtx = _NULL_CTX,
+                embeds=None):
+        """Training forward. Returns dict(hidden, aux[, mtp_hidden])."""
+        cfg = self.cfg
+        x = self.embed(params, tokens, embeds)
+        x, aux, _ = self._run_groups(params, x, positions, ctx)
+        x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+        out = {"hidden": x, "aux": aux}
+        if cfg.mtp_depth and "mtp" in params:
+            # h'_i = Block(W_proj [h_i ; emb(t_{i+1})]) predicts t_{i+2}
+            emb_next = embed_tokens(params["embed"], tokens)[:, 1:]
+            hcat = jnp.concatenate([x[:, :-1], emb_next], axis=-1)
+            h2 = jnp.einsum("bsd,dk->bsk", hcat, params["mtp"]["proj"])
+            blk = cfg.groups[-1].blocks[-1]
+            h2, mtp_aux, _ = apply_block(params["mtp"]["block"], h2, blk,
+                                         cfg, ctx, positions[:, 1:])
+            out["mtp_hidden"] = apply_norm(params["mtp"]["norm"], h2,
+                                           cfg.norm, cfg.norm_eps)
+            out["aux"] = aux + mtp_aux
+        return out
+
+    def prefill(self, params, tokens, positions, cache,
+                ctx: ShardCtx = _NULL_CTX, embeds=None):
+        """Process the prompt, fill the cache. Returns (hidden, cache, aux)."""
+        cfg = self.cfg
+        x = self.embed(params, tokens, embeds)
+        x, aux, cache = self._run_groups(params, x, positions, ctx,
+                                         cache=cache, mode="prefill")
+        x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+        return x, cache, aux
+
+    def decode(self, params, tokens, positions, cache,
+               ctx: ShardCtx = _NULL_CTX):
+        """One token per sequence. tokens: (B,1); positions: (B,)."""
+        cfg = self.cfg
+        x = self.embed(params, tokens)
+        x, _, cache = self._run_groups(params, x, positions, ctx,
+                                       cache=cache, mode="decode")
+        x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+        return self.logits(params, x), cache

@@ -1,0 +1,128 @@
+"""AdamW with cosine schedule, global-norm clipping, and *pool-tier-ready*
+state layout.
+
+The optimizer state (fp32 master copy + moments) is the textbook Pond
+workload: touched exactly once per step, streamed, never random-accessed.
+``state_tier`` tags every state leaf so the zNUMA layer (core/znuma.py) can
+place it in the pool tier; on TPU that lowers to ``memory_kind=pinned_host``
+shardings, on the CPU dry-run the placement is accounted by the tier model
+(DESIGN.md §2, assumption 3).
+
+Moments can be stored int8 (block-quantized, optim/compress.py) — a
+beyond-paper memory optimization that compounds with pooling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import compress
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    moments_dtype: str = "float32"        # "float32" | "bfloat16" | "int8"
+    master_fp32: bool = True
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+def _zeros_moment(p, cfg: AdamWConfig):
+    if cfg.moments_dtype == "int8":
+        return compress.QTensor.zeros(p.shape)
+    dt = jnp.bfloat16 if cfg.moments_dtype == "bfloat16" else jnp.float32
+    return jnp.zeros(p.shape, dt)
+
+
+def init_state(params, cfg: AdamWConfig):
+    """State pytree: {step, master, m, v}. Pool-tier candidates: master,m,v."""
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if cfg.master_fp32 else None)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": master,
+        "m": jax.tree.map(lambda p: _zeros_moment(p, cfg), params),
+        "v": jax.tree.map(lambda p: _zeros_moment(p, cfg), params),
+    }
+
+
+def state_tier(state) -> dict:
+    """Tier tag per top-level state group (see core/znuma.py)."""
+    return {"step": "local", "master": "pool", "m": "pool", "v": "pool"}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _read(x):
+    return x.dequantize() if isinstance(x, compress.QTensor) else \
+        x.astype(jnp.float32)
+
+
+def _store(x, like):
+    if isinstance(like, compress.QTensor):
+        return compress.QTensor.quantize(x)
+    return x.astype(like.dtype)
+
+
+def apply_updates(params, state, grads, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, mst, m, v, g):
+        gf = g.astype(jnp.float32) * scale
+        mf = cfg.b1 * _read(m) + (1 - cfg.b1) * gf
+        vf = cfg.b2 * _read(v) + (1 - cfg.b2) * jnp.square(gf)
+        mhat = mf / b1c
+        vhat = vf / b2c
+        base = _read(mst) if mst is not None else p.astype(jnp.float32)
+        new = base - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                           + cfg.weight_decay * base)
+        return (new.astype(p.dtype),
+                new if mst is not None else None,
+                _store(mf, m), _store(vf, v))
+
+    is_q = lambda x: isinstance(x, compress.QTensor)
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_mst = (jax.tree.leaves(state["master"])
+                if state["master"] is not None else [None] * len(flat_p))
+    flat_m = jax.tree.leaves(state["m"], is_leaf=is_q)
+    flat_v = jax.tree.leaves(state["v"], is_leaf=is_q)
+    flat_g = jax.tree.leaves(grads)
+    outs = [upd(p, mst, m, v, g) for p, mst, m, v, g
+            in zip(flat_p, flat_mst, flat_m, flat_v, flat_g)]
+    new_params = tdef.unflatten([o[0] for o in outs])
+    new_master = (tdef.unflatten([o[1] for o in outs])
+                  if state["master"] is not None else None)
+    new_m = tdef.unflatten([o[2] for o in outs])
+    new_v = tdef.unflatten([o[3] for o in outs])
+    new_state = {"step": step, "master": new_master, "m": new_m, "v": new_v}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

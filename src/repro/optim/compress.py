@@ -1,0 +1,88 @@
+"""Block-wise int8 quantization: optimizer moments + gradient compression.
+
+Two uses (DESIGN.md §5, distributed-optimization tricks):
+  * int8 optimizer moments (4x smaller pool-tier stream per step);
+  * int8 gradient all-reduce over the cross-pod ("pod") axis — quantize,
+    psum int32? no: psum the int8-dequantized? — we use the standard
+    compress->all_reduce->decompress shape: quantize per-block, all-reduce
+    the *int8 payload* as bf16-scaled partial sums is lossy; instead we
+    reduce-scatter fp32 within a pod and only the cross-pod hop carries
+    int8 (see runtime/train.py::cross_pod_grad_sync).
+
+QTensor is a pytree (registered) so it can live inside optimizer state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """Block-quantized int8 tensor with per-block fp32 absmax scales."""
+    data: jax.Array       # int8, flat-padded (nblocks, BLOCK)
+    scale: jax.Array      # fp32, (nblocks, 1)
+    shape: tuple          # original shape (static)
+
+    def tree_flatten(self):
+        return (self.data, self.scale), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, shape, children):
+        return cls(children[0], children[1], shape)
+
+    @property
+    def dtype(self):
+        return jnp.int8
+
+    @staticmethod
+    def _nblocks(shape) -> int:
+        n = 1
+        for d in shape:
+            n *= d
+        return -(-n // BLOCK)
+
+    @classmethod
+    def zeros(cls, shape):
+        nb = cls._nblocks(shape)
+        return cls(jnp.zeros((nb, BLOCK), jnp.int8),
+                   jnp.zeros((nb, 1), jnp.float32), tuple(shape))
+
+    @classmethod
+    def quantize(cls, x: jax.Array):
+        shape = tuple(x.shape)
+        nb = cls._nblocks(shape)
+        flat = jnp.ravel(x.astype(jnp.float32))
+        flat = jnp.pad(flat, (0, nb * BLOCK - flat.size))
+        blocks = flat.reshape(nb, BLOCK)
+        scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+        q = jnp.round(blocks / jnp.maximum(scale, 1e-12))
+        return cls(jnp.clip(q, -127, 127).astype(jnp.int8), scale, shape)
+
+    def dequantize(self) -> jax.Array:
+        n = 1
+        for d in self.shape:
+            n *= d
+        flat = (self.data.astype(jnp.float32) * self.scale).reshape(-1)[:n]
+        return flat.reshape(self.shape)
+
+
+def quantize_tree(tree):
+    return jax.tree.map(QTensor.quantize, tree)
+
+
+def dequantize_tree(tree):
+    return jax.tree.map(lambda q: q.dequantize(), tree,
+                        is_leaf=lambda x: isinstance(x, QTensor))
+
+
+def compression_error(x: jax.Array) -> jax.Array:
+    """Max abs error of a quantize/dequantize round trip (for tests)."""
+    return jnp.max(jnp.abs(QTensor.quantize(x).dequantize()
+                           - x.astype(jnp.float32)))

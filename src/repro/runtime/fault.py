@@ -1,0 +1,108 @@
+"""Fault tolerance: failure detection, elastic re-mesh, stragglers.
+
+On a real multi-host pod these hooks sit on top of the cluster coordinator
+(heartbeats over the Pool-Manager control bus in Pond terms).  Here the
+*policies* are real and tested; the failure events are injected:
+
+  * ``HeartbeatMonitor``  — declares a host dead after ``timeout`` missed
+    beats; Pond analogue: EMC blast-radius isolation (§4.2 Failure
+    management — only VMs with slices on the failed EMC are affected).
+  * ``elastic_mesh``      — rebuilds the largest (data, model) mesh from the
+    surviving device count; training resumes from the last checkpoint via
+    checkpoint.restore(..., shardings=<new mesh>) — checkpoints are
+    mesh-agnostic by construction.
+  * ``StragglerTracker``  — EWMA per-host step times; hosts slower than
+    ``factor``x the median are flagged for slice migration (serving) or
+    exclusion at the next re-mesh (training).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+# --------------------------------------------------------------- detection -
+class HeartbeatMonitor:
+    def __init__(self, hosts: list[str], timeout: float = 3.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout = timeout
+        self.clock = clock
+        self.last = {h: clock() for h in hosts}
+
+    def beat(self, host: str):
+        self.last[host] = self.clock()
+
+    def dead_hosts(self) -> list[str]:
+        now = self.clock()
+        return [h for h, t in self.last.items()
+                if now - t > self.timeout]
+
+    def alive_hosts(self) -> list[str]:
+        dead = set(self.dead_hosts())
+        return [h for h in self.last if h not in dead]
+
+
+# ------------------------------------------------------------ elastic mesh -
+def largest_mesh_shape(n_devices: int, model_parallel: int,
+                       multi_pod: bool = False) -> tuple[int, ...]:
+    """Largest (pod, data, model) grid that fits in n_devices, keeping the
+    model axis intact (TP degree is fixed by the arch's weight shards)."""
+    if n_devices < model_parallel:
+        raise ValueError(f"{n_devices} devices cannot host "
+                         f"model_parallel={model_parallel}")
+    rows = n_devices // model_parallel
+    if not multi_pod:
+        return (rows, model_parallel)
+    pods = 2 if rows >= 2 else 1
+    return (pods, rows // pods, model_parallel)
+
+
+def elastic_mesh(devices, model_parallel: int, multi_pod: bool = False):
+    """Build the largest healthy mesh from surviving devices."""
+    shape = largest_mesh_shape(len(devices), model_parallel, multi_pod)
+    n = math.prod(shape)
+    devs = np.asarray(devices[:n]).reshape(shape)
+    names = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    return jax.sharding.Mesh(devs, names)
+
+
+# -------------------------------------------------------------- stragglers -
+@dataclasses.dataclass
+class StragglerTracker:
+    alpha: float = 0.3           # EWMA weight
+    factor: float = 1.5          # flag hosts slower than factor x median
+
+    def __post_init__(self):
+        self.ewma: dict[str, float] = {}
+
+    def record(self, host: str, step_time: float):
+        prev = self.ewma.get(host)
+        self.ewma[host] = (step_time if prev is None
+                           else self.alpha * step_time
+                           + (1 - self.alpha) * prev)
+
+    def stragglers(self) -> list[str]:
+        if len(self.ewma) < 2:
+            return []
+        med = float(np.median(list(self.ewma.values())))
+        return [h for h, t in self.ewma.items() if t > self.factor * med]
+
+
+# ------------------------------------------------------- failure injection -
+class FailureInjector:
+    """Deterministic failure schedule for tests/benchmarks."""
+
+    def __init__(self, fail_at: dict[int, list[str]]):
+        self.fail_at = fail_at   # step -> hosts that die at that step
+
+    def failed_by(self, step: int) -> set[str]:
+        out: set[str] = set()
+        for s, hosts in self.fail_at.items():
+            if step >= s:
+                out.update(hosts)
+        return out

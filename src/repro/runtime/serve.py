@@ -1,0 +1,58 @@
+"""Serve-step builders: prefill + decode over the ring/latent caches.
+
+``decode_32k`` / ``long_500k`` shapes lower these (one new token against a
+seq_len-deep cache), not train_step.  For long_500k (batch=1) the KV cache
+seq dim is sharded over "data" (SP): XLA turns the softmax over the sharded
+axis into the flash-decoding max/sum merge collectives automatically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.params import abstract
+from repro.sharding.rules import ShardCtx, default_rules, partition_tree
+
+
+def make_prefill_step(model, ctx: ShardCtx):
+    def prefill(params, tokens, positions, cache, embeds=None):
+        hidden, cache, _ = model.prefill(params, tokens, positions, cache,
+                                         ctx, embeds=embeds)
+        logits = model.logits(params, hidden[:, -1:])
+        return logits, cache
+    return prefill
+
+
+def make_decode_step(model, ctx: ShardCtx):
+    def decode(params, tokens, positions, cache):
+        return model.decode(params, tokens, positions, cache, ctx)
+    return decode
+
+
+def serve_shardings(model, ctx: ShardCtx, batch: int, max_len: int,
+                    enc_len: int | None = None):
+    """(params, cache) NamedSharding trees for serving."""
+    rules = default_rules(ctx, mode="serve")
+    pspec = partition_tree(model.specs(), rules, ctx.mesh)
+    params_sh = jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), pspec)
+    kw = {} if enc_len is None else {"enc_len": enc_len}
+    cspec = partition_tree(model.cache_specs(batch, max_len, **kw),
+                           rules, ctx.mesh)
+    cache_sh = jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), cspec)
+    return params_sh, cache_sh
+
+
+def jit_decode_step(model, ctx: ShardCtx, batch: int, max_len: int,
+                    enc_len: int | None = None, donate: bool = True):
+    step = make_decode_step(model, ctx)
+    if ctx.mesh is None:
+        return jax.jit(step, donate_argnums=(3,) if donate else ())
+    params_sh, cache_sh = serve_shardings(model, ctx, batch, max_len,
+                                          enc_len)
+    tok_sh = NamedSharding(ctx.mesh, P(ctx.batch_axes, None))
+    pos_sh = NamedSharding(ctx.mesh, P(ctx.batch_axes))
+    return jax.jit(step,
+                   in_shardings=(params_sh, tok_sh, pos_sh, cache_sh),
+                   out_shardings=(None, cache_sh),
+                   donate_argnums=(3,) if donate else ())

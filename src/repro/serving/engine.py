@@ -1,0 +1,255 @@
+"""Decode engine over the two-tier paged KV pool.
+
+Supports decoder-only attention LMs (single homogeneous group, no SWA for
+the paged path).  The jit'd step scans the stacked layer params, scatters
+the new token's K/V into its page slot, and calls the paged-attention
+kernel (jnp oracle lowering on CPU, Pallas on TPU).
+
+Pond integration per step:
+  * access-bit telemetry on pages (AccessBitScanner),
+  * zNUMA spill stats -> virtual step latency via the tier model
+    (pool-touched fraction slows the step, core/latency_model.py),
+  * QoS monitor: sequences whose pool-traffic fraction exceeds the PDM
+    knee get migrated local (kv.migrate_seq_to_local, 50ms/GB).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.latency_model import TierModel, migration_seconds
+from repro.kernels.paged_attention import ops as pa_ops
+from repro.models import attention as attn_mod
+from repro.models.layers import apply_mlp, apply_norm, embed_tokens
+from repro.models.layers import rope_cos_sin, apply_rope
+from repro.models.transformer import LM
+from repro.serving.kv_cache import KVConfig, TieredPagedKV
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+
+def paged_kv_config(cfg: ArchConfig, page_size: int = 16,
+                    num_local: int = 256, num_pool: int = 256,
+                    dtype: str = "float32") -> KVConfig:
+    return KVConfig(cfg.num_layers, cfg.num_kv_heads, cfg.head_dim,
+                    page_size, num_local, num_pool, dtype)
+
+
+def make_paged_decode_step(model: LM, page_size: int):
+    """(params, k_pool, v_pool, tables, lens, tokens) -> logits + pools.
+
+    pools: (L, Hkv, P, page, D); tables: (B, maxp); lens: (B,) current
+    lengths INCLUDING the new token (write slot = lens-1).
+    """
+    cfg = model.cfg
+    assert len(cfg.groups) == 1 and cfg.groups[0].blocks[0].mixer == "attn"
+    blk = cfg.groups[0].blocks[0]
+
+    def step(params, k_pool, v_pool, tables, lens, tokens):
+        b = tokens.shape[0]
+        positions = lens - 1                             # 0-based slot
+        x = embed_tokens(params["embed"], tokens)        # (B,1,d)
+        page_of = positions // page_size                 # (B,)
+        page_ids = jnp.take_along_axis(tables, page_of[:, None],
+                                       axis=1)[:, 0]     # (B,)
+        offs = positions % page_size
+        lp_all = params["groups"][0]["blocks"][0]
+
+        def body(carry, lp):
+            xc, kp, vp, li = carry
+            h = apply_norm(lp["norm1"], xc, cfg.norm, cfg.norm_eps)
+            q, k, v = attn_mod._project_qkv(lp["mixer"], h, cfg)
+            cos, sin = rope_cos_sin(positions[:, None], cfg.head_dim,
+                                    cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+            # scatter the new token into its page slot: (Hkv, P, page, D)
+            kpl = jax.lax.dynamic_index_in_dim(kp, li, 0, keepdims=False)
+            vpl = jax.lax.dynamic_index_in_dim(vp, li, 0, keepdims=False)
+            kpl = kpl.at[:, page_ids, offs].set(
+                k[:, 0].transpose(1, 0, 2).astype(kpl.dtype))
+            vpl = vpl.at[:, page_ids, offs].set(
+                v[:, 0].transpose(1, 0, 2).astype(vpl.dtype))
+            out = pa_ops.paged_attention(
+                q[:, 0].astype(kpl.dtype), kpl, vpl, tables, lens,
+                scale=cfg.head_dim ** -0.5)
+            kp = jax.lax.dynamic_update_index_in_dim(kp, kpl, li, 0)
+            vp = jax.lax.dynamic_update_index_in_dim(vp, vpl, li, 0)
+            y = jnp.einsum("bhe,hed->bd", out.reshape(
+                b, cfg.num_heads, cfg.head_dim).astype(xc.dtype),
+                lp["mixer"]["wo"])[:, None]
+            if "bo" in lp["mixer"]:
+                y = y + lp["mixer"]["bo"].astype(y.dtype)
+            xc = xc + y
+            h = apply_norm(lp["norm2"], xc, cfg.norm, cfg.norm_eps)
+            xc = xc + apply_mlp(lp["ffn"], h, cfg)
+            return (xc, kp, vp, li + 1), None
+
+        (x, k_pool, v_pool, _), _ = jax.lax.scan(
+            body, (x, k_pool, v_pool, jnp.zeros((), jnp.int32)), lp_all)
+        x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+        logits = model.logits(params, x)
+        return logits, k_pool, v_pool
+
+    return jax.jit(step, donate_argnums=(1, 2))
+
+
+def make_paged_prefill_fill(model: LM, page_size: int):
+    """Fill pools from a prompt (one sequence): returns updated pools.
+    Runs the normal prefill math; K/V per layer scattered to pages."""
+    cfg = model.cfg
+
+    def fill(params, k_pool, v_pool, tokens, page_ids):
+        s = tokens.shape[1]
+        positions = jnp.arange(s)[None]
+        x = embed_tokens(params["embed"], tokens)
+        npages = page_ids.shape[0]
+        pad = npages * page_size - s
+        lp_all = params["groups"][0]["blocks"][0]
+
+        def body(carry, lp):
+            xc, kp, vp, li = carry
+            h = apply_norm(lp["norm1"], xc, cfg.norm, cfg.norm_eps)
+            q, k, v = attn_mod._project_qkv(lp["mixer"], h, cfg)
+            cos, sin = rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+            kpad = jnp.pad(k[0], ((0, pad), (0, 0), (0, 0)))
+            vpad = jnp.pad(v[0], ((0, pad), (0, 0), (0, 0)))
+            kpg = kpad.reshape(npages, page_size, cfg.num_kv_heads,
+                               cfg.head_dim).transpose(2, 0, 1, 3)
+            vpg = vpad.reshape(npages, page_size, cfg.num_kv_heads,
+                               cfg.head_dim).transpose(2, 0, 1, 3)
+            kpl = jax.lax.dynamic_index_in_dim(kp, li, 0, keepdims=False)
+            vpl = jax.lax.dynamic_index_in_dim(vp, li, 0, keepdims=False)
+            kpl = kpl.at[:, page_ids].set(kpg.astype(kpl.dtype))
+            vpl = vpl.at[:, page_ids].set(vpg.astype(vpl.dtype))
+            kp = jax.lax.dynamic_update_index_in_dim(kp, kpl, li, 0)
+            vp = jax.lax.dynamic_update_index_in_dim(vp, vpl, li, 0)
+            out = attn_mod._self_attention(q, k, v, cfg, positions, True,
+                                           "blocked")
+            y = jnp.einsum("bshe,hed->bsd", out, lp["mixer"]["wo"])
+            if "bo" in lp["mixer"]:
+                y = y + lp["mixer"]["bo"].astype(y.dtype)
+            xc = xc + y
+            h = apply_norm(lp["norm2"], xc, cfg.norm, cfg.norm_eps)
+            xc = xc + apply_mlp(lp["ffn"], h, cfg)
+            return (xc, kp, vp, li + 1), None
+
+        (x, k_pool, v_pool, _), _ = jax.lax.scan(
+            body, (x, k_pool, v_pool, jnp.zeros((), jnp.int32)), lp_all)
+        x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+        return model.logits(params, x[:, -1:]), k_pool, v_pool
+
+    return jax.jit(fill, donate_argnums=(1, 2))
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    tokens: int = 0
+    virtual_seconds: float = 0.0
+    migrations: int = 0
+    migration_seconds: float = 0.0
+    pool_traffic_fracs: list = dataclasses.field(default_factory=list)
+
+
+class DecodeEngine:
+    def __init__(self, model: LM, params, kv_cfg: KVConfig,
+                 max_batch: int = 8, pdm: float = 0.05,
+                 tier_model: TierModel | None = None,
+                 slice_pool=None, sample_greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.kv = TieredPagedKV(kv_cfg, slice_pool=slice_pool)
+        self.batcher = ContinuousBatcher(max_batch)
+        self.tier = tier_model or TierModel()
+        self.pdm = pdm
+        self.page_size = kv_cfg.page_size
+        self._decode = make_paged_decode_step(model, kv_cfg.page_size)
+        self._prefill = make_paged_prefill_fill(model, kv_cfg.page_size)
+        self.stats = EngineStats()
+        self.outputs: dict[int, list[int]] = {}
+        self._next_tokens: dict[int, int] = {}
+
+    # ------------------------------------------------------------ admission
+    def submit(self, req: Request, prompt_tokens):
+        self._prompts = getattr(self, "_prompts", {})
+        self._prompts[req.req_id] = np.asarray(prompt_tokens)
+        self.batcher.submit(req)
+
+    def _admit(self):
+        def can(req):
+            return self.kv.can_admit(req.prompt_len, req.max_new_tokens)
+        for req in self.batcher.admit(can):
+            pages = self.kv.admit(req.req_id, req.prompt_len)
+            # reserve tail pages up-front (GB-aligned zNUMA sizing)
+            while len(pages) < self.kv.pages_for(req.prompt_len
+                                                 + req.max_new_tokens):
+                pages.append(self.kv.alloc.alloc())
+            toks = jnp.asarray(self._prompts[req.req_id])[None]
+            logits, self.kv.k, self.kv.v = self._prefill(
+                self.params, self.kv.k, self.kv.v, toks,
+                jnp.asarray(pages, jnp.int32))
+            nxt = int(jnp.argmax(logits[0, -1]))
+            self._next_tokens[req.req_id] = nxt
+            self.outputs[req.req_id] = [nxt]
+
+    # ------------------------------------------------------------ stepping
+    def step(self) -> int:
+        """One continuous-batching decode step; returns #active seqs."""
+        self._admit()
+        ids = self.batcher.active_ids
+        if not ids:
+            return 0
+        for s in ids:
+            self.kv.extend(s)
+        tbl, lens = self.kv.batch_tables(ids)
+        toks = jnp.asarray([[self._next_tokens[s]] for s in ids],
+                           jnp.int32)
+        logits, self.kv.k, self.kv.v = self._decode(
+            self.params, self.kv.k, self.kv.v, tbl, lens, toks)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+
+        # ---- Pond telemetry + QoS --------------------------------------
+        self.kv.record_touches(ids)
+        spill = self.kv.spill_stats(ids)
+        self.stats.pool_traffic_fracs.append(spill["pool_traffic_frac"])
+        step_s = 1e-3 * self.tier.slowdown_factor(
+            spill["pool_traffic_frac"])
+        self.stats.virtual_seconds += step_s
+        self.stats.steps += 1
+        self.stats.tokens += len(ids)
+        for i, s in enumerate(ids):
+            st = self.kv.spill_stats([s])
+            if st["pool_traffic_frac"] > self.pdm:  # beyond PDM knee
+                moved = self.kv.migrate_seq_to_local(s)
+                if moved:
+                    gb = moved * self.kv.cfg.page_bytes() / 2 ** 30
+                    self.stats.migrations += 1
+                    self.stats.migration_seconds += migration_seconds(gb)
+
+        finished = []
+        for i, s in enumerate(ids):
+            req = self.batcher.active[s]
+            req.generated += 1
+            self._next_tokens[s] = int(nxt[i])
+            self.outputs[s].append(int(nxt[i]))
+            if req.done:
+                finished.append(s)
+        for s in finished:
+            self.kv.release(s)
+            self._next_tokens.pop(s, None)
+        self.batcher.step_done(finished)
+        return len(ids)
+
+    def run(self, max_steps: int = 1000) -> EngineStats:
+        for _ in range(max_steps):
+            if not self.batcher.queue and not self.batcher.active:
+                break
+            self.step()
+        return self.stats

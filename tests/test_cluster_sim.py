@@ -1,0 +1,95 @@
+"""Cluster simulator: stranding growth, policy ordering, pool savings.
+Small cluster + short horizon to keep runtime bounded."""
+import numpy as np
+import pytest
+
+from repro.core import cluster_sim, traces
+from repro.core.control_plane import ControlPlane, ControlPlaneConfig
+from repro.core.pool_manager import PoolManager
+from repro.core.predictors.models import (LatencySensitivityModel,
+                                          UntouchedMemoryModel)
+
+HORIZON = 6 * 86400
+
+
+@pytest.fixture(scope="module")
+def world():
+    pop = traces.Population(seed=0)
+    cfg = cluster_sim.ClusterConfig(n_servers=16, pool_sockets=16,
+                                    gb_per_core=4.75)
+    n = cluster_sim.arrivals_for_util(cfg, 0.8, HORIZON)
+    train = pop.sample_vms(1200, HORIZON, seed=1)
+    vms = pop.sample_vms(n, HORIZON, seed=2, start_id=10 ** 6)
+    li = LatencySensitivityModel(pdm=0.05).fit(
+        traces.pmu_matrix(train), traces.slowdowns(train, 182))
+    hist = traces.build_history(train)
+    um = UntouchedMemoryModel(0.05).fit(
+        traces.metadata_features(train, hist),
+        np.array([v.untouched for v in train]))
+    return pop, cfg, vms, li, um, hist
+
+
+def test_stranding_grows_with_utilization(world):
+    pop, cfg, vms, *_ = world
+    sn = cluster_sim.stranding_analysis(vms, cfg)
+    rows = cluster_sim.stranding_by_bucket(sn)
+    assert len(rows) >= 3
+    mids = [r[0] for r in rows]
+    means = [r[1] for r in rows]
+    # monotone-ish growth; meaningful stranding at high core allocation
+    assert means[-1] > means[0]
+    assert means[-1] > 0.05
+    assert max(r[2] for r in rows) > 0.1        # p95 outliers
+
+
+def test_policy_ordering_pond_beats_static_beats_local(world):
+    pop, cfg, vms, li, um, hist = world
+    r_local = cluster_sim.savings_analysis(vms, cfg, "local")
+    r_static = cluster_sim.savings_analysis(vms, cfg, "static",
+                                            static_pool_frac=0.15)
+    cp = ControlPlane(ControlPlaneConfig(li_threshold=0.05),
+                      li, um, PoolManager(pool_gb=4096, buffer_gb=64),
+                      history=dict(hist))
+    r_pond = cluster_sim.savings_analysis(vms, cfg, "pond",
+                                          control_plane=cp)
+    assert r_local.savings == pytest.approx(0.0, abs=1e-6)
+    assert r_static.savings > 0.0
+    assert r_pond.savings > r_static.savings
+    assert r_pond.savings > 0.05          # paper: 7-9% at 16 sockets
+    assert r_pond.mispredictions < 0.02   # TP = 98%
+
+
+def test_savings_grow_with_pool_size(world):
+    pop, _, vms, li, um, hist = world
+    out = []
+    for ps in (8, 32):
+        cfg = cluster_sim.ClusterConfig(n_servers=16, pool_sockets=ps,
+                                        gb_per_core=4.75)
+        cp = ControlPlane(ControlPlaneConfig(li_threshold=0.05),
+                          li, um, PoolManager(pool_gb=4096, buffer_gb=64),
+                          history=dict(hist))
+        out.append(cluster_sim.savings_analysis(
+            vms, cfg, "pond", control_plane=cp).savings)
+    assert out[1] >= out[0] - 0.01        # Fig 3: diminishing growth
+
+
+def test_offlining_speed_distribution(world):
+    """Finding 10 analogue: slice offlining throughput stays in the
+    10-100 ms/GB band across release events."""
+    from repro.core.slices import SlicePool
+    pool = SlicePool(num_slices=256, seed=1)
+    rng = np.random.default_rng(0)
+    now = 0.0
+    for _ in range(60):
+        now += 1.0
+        h = int(rng.integers(0, 8))
+        try:
+            pool.assign(h, float(rng.integers(1, 8)), now)
+        except MemoryError:
+            pool.release(h, None, now)
+    for h in range(8):
+        if len(pool.owned_by(h)):
+            pool.release(h, None, now)
+    gbps = pool.offline_gbps_distribution()
+    assert len(gbps) > 5
+    assert ((gbps >= 10) & (gbps <= 100)).all()

@@ -1,0 +1,61 @@
+"""Loop-aware HLO analyzer: trip-count multipliers, collective wire bytes,
+tuple-type parsing."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def test_shape_bytes_tuple_and_comments():
+    assert H.shape_bytes("f32[4,8]") == 128
+    assert H.shape_bytes("(s32[], bf16[16,32]{1,0}, "
+                         "/*index=5*/f32[2,2]{1,0})") == 4 + 1024 + 16
+    assert H.shape_bytes("pred[]") == 1
+
+
+def test_scan_trip_count_multiplies_flops():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+    xs = jax.ShapeDtypeStruct((16, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    co = jax.jit(f).lower(xs, ws).compile()
+    c = H.analyze(co.as_text(), 1)
+    expect = 7 * 2 * 16 * 32 * 32
+    assert abs(c.flops - expect) / expect < 0.05, (c.flops, expect)
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+    xs = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    ws = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    co = jax.jit(f).lower(xs, ws).compile()
+    c = H.analyze(co.as_text(), 1)
+    expect = 15 * 2 * 8 * 16 * 16
+    assert abs(c.flops - expect) / expect < 0.05, (c.flops, expect)
+
+
+def test_collective_wire_bytes():
+    hlo = """
+HloModule m
+
+ENTRY %main (p0: f32[64,4]) -> f32[64,4] {
+  %p0 = f32[64,4]{1,0} parameter(0)
+  ROOT %ar = f32[64,4]{1,0} all-reduce(%p0), replica_groups=[4,8]<=[32],
+    to_apply=%add
+}
+"""
+    c = H.analyze(hlo, 32)
+    size = 64 * 4 * 4
+    assert c.collective_bytes == pytest.approx(2 * size * 7 / 8)
+    assert c.by_collective["all-reduce"] == c.collective_bytes

@@ -1,0 +1,120 @@
+"""Pallas kernel validation: interpret-mode execution against the pure-jnp
+oracles, shape/dtype sweeps via hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.paged_attention.kernel import paged_attention_kernel
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def _rand(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32) * 0.5
+    return jnp.asarray(x).astype(dtype)
+
+
+def _run_flash(q, k, v, window, block):
+    d = q.shape[-1]
+    dp = (-d) % 128
+
+    def prep(t):
+        return jnp.moveaxis(jnp.pad(t, ((0, 0), (0, 0), (0, 0), (0, dp))),
+                            2, 1)
+    out = flash_attention_kernel(prep(q), prep(k), prep(v), scale=d ** -0.5,
+                                 causal=True, window=window, block_q=block,
+                                 block_k=block, interpret=True)
+    return jnp.moveaxis(out, 1, 2)[..., :d]
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    nblk=st.integers(2, 4),
+    g=st.sampled_from([1, 2, 4]),
+    hkv=st.sampled_from([1, 2]),
+    d=st.sampled_from([16, 32, 64]),
+    window=st.sampled_from([None, 7, 33]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_flash_kernel_matches_ref(b, nblk, g, hkv, d, window, dtype):
+    rng = np.random.default_rng(abs(hash((b, nblk, g, hkv, d))) % 2 ** 31)
+    block = 16
+    s = nblk * block
+    q = _rand(rng, (b, s, hkv * g, d), dtype)
+    k = _rand(rng, (b, s, hkv, d), dtype)
+    v = _rand(rng, (b, s, hkv, d), dtype)
+    out = _run_flash(q, k, v, window, block)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_ops_wrapper_pads_and_dispatches(rng):
+    q = _rand(rng, (2, 37, 4, 24), jnp.float32)     # odd seq, odd head_dim
+    k = _rand(rng, (2, 37, 2, 24), jnp.float32)
+    v = _rand(rng, (2, 37, 2, 24), jnp.float32)
+    out = fa_ops.flash_attention(q, k, v, causal=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    out_i = fa_ops.flash_attention(q, k, v, causal=True, interpret=True,
+                                   block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(out_i), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    g=st.sampled_from([1, 2, 4]),
+    hkv=st.sampled_from([1, 2]),
+    d=st.sampled_from([16, 32]),
+    page=st.sampled_from([8, 16]),
+    ppseq=st.integers(1, 4),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_paged_kernel_matches_ref(b, g, hkv, d, page, ppseq, dtype):
+    rng = np.random.default_rng(abs(hash((b, g, hkv, d, page))) % 2 ** 31)
+    npages = 16
+    q = _rand(rng, (b, hkv * g, d), dtype)
+    kp = _rand(rng, (hkv, npages, page, d), dtype)
+    vp = _rand(rng, (hkv, npages, page, d), dtype)
+    tbl = jnp.asarray(rng.integers(0, npages, (b, ppseq)), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, ppseq * page + 1, (b,)), jnp.int32)
+    out = paged_attention_kernel(q, kp, vp, tbl, lens, scale=d ** -0.5,
+                                 interpret=True)
+    ref = paged_attention_ref(q, kp, vp, tbl, lens, scale=d ** -0.5)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_backward_matches_dot(rng):
+    from repro.models.attention import (blocked_attention, causal_mask,
+                                        grouped_dot_attention)
+    b, s, hq, hkv, d = 2, 24, 4, 2, 16
+    q = _rand(rng, (b, s, hq, d), jnp.float32)
+    k = _rand(rng, (b, s, hkv, d), jnp.float32)
+    v = _rand(rng, (b, s, hkv, d), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def f_b(q, k, v):
+        return (blocked_attention(q, k, v, 0.25, pos, pos, window=9,
+                                  block_k=8) ** 2).sum()
+
+    def f_d(q, k, v):
+        m = causal_mask(s, s, 9)[None, None, None]
+        return (grouped_dot_attention(q, k, v, m, 0.25) ** 2).sum()
+    gb = jax.jit(jax.grad(f_b, argnums=(0, 1, 2)))(q, k, v)
+    gd = jax.jit(jax.grad(f_d, argnums=(0, 1, 2)))(q, k, v)
+    for a, c in zip(gb, gd):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,152 @@
+"""SSD / MLA / MoE mixer math: chunked-vs-sequential, decode-vs-parallel,
+dense-vs-sharded equivalences (hypothesis property sweeps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import (ArchConfig, Block, LayerGroup, MLAConfig,
+                                MoEConfig, SSMConfig)
+from repro.models import mamba2, mla
+from repro.models import moe as moe_mod
+from repro.models.params import materialize
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    s=st.sampled_from([7, 16, 24]),
+    h=st.sampled_from([2, 4]),
+    p=st.sampled_from([4, 8]),
+    g=st.sampled_from([1, 2]),
+    n=st.sampled_from([4, 16]),
+    chunk=st.sampled_from([4, 8]),
+)
+def test_ssd_chunked_matches_sequential(b, s, h, p, g, n, chunk):
+    if h % g:
+        g = 1
+    rng = np.random.default_rng(abs(hash((b, s, h, p, g, n))) % 2 ** 31)
+    xdt = jnp.asarray(rng.normal(size=(b, s, h, p)).astype(np.float32)) * .5
+    a = -jnp.abs(jnp.asarray(
+        rng.normal(size=(b, s, h)).astype(np.float32))) * 0.3
+    B_ = jnp.asarray(rng.normal(size=(b, s, g, n)).astype(np.float32)) * .5
+    C_ = jnp.asarray(rng.normal(size=(b, s, g, n)).astype(np.float32)) * .5
+    y, hl = mamba2.ssd_chunked(xdt, a, B_, C_, chunk)
+    hg = h // g
+    st_ = np.zeros((b, g, hg, p, n))
+    ys = np.zeros((b, s, h, p))
+    xr = np.asarray(xdt).reshape(b, s, g, hg, p)
+    ar = np.asarray(a).reshape(b, s, g, hg)
+    for t in range(s):
+        st_ = st_ * np.exp(ar[:, t])[..., None, None] + np.einsum(
+            "bghp,bgn->bghpn", xr[:, t], np.asarray(B_)[:, t])
+        ys[:, t] = np.einsum("bgn,bghpn->bghp", np.asarray(C_)[:, t],
+                             st_).reshape(b, h, p)
+    np.testing.assert_allclose(np.asarray(y), ys, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(
+        np.asarray(hl).reshape(b, g, hg, p, n), st_, rtol=2e-5, atol=2e-5)
+
+
+def _mamba_cfg():
+    return ArchConfig(
+        name="t", family="ssm", num_layers=1, d_model=32, num_heads=8,
+        num_kv_heads=0, d_ff=0, vocab_size=64, head_dim=8,
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=8,
+                      n_groups=2, chunk_size=8),
+        groups=(LayerGroup(1, (Block("mamba", "none"),)),))
+
+
+def test_mamba_decode_matches_forward():
+    cfg = _mamba_cfg()
+    params = jax.tree.map(
+        lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+        materialize(mamba2.mamba_specs(cfg), jax.random.key(0)))
+    x = jax.random.normal(jax.random.key(1), (2, 16, 32), jnp.float32)
+    yfull = jax.jit(lambda p, xx: mamba2.mamba_forward(p, xx, cfg))(params, x)
+    ypre, cache = jax.jit(lambda p, xx: mamba2.mamba_forward(
+        p, xx, cfg, return_cache=True))(params, x[:, :12])
+    ys = [ypre]
+    c = cache
+    dec = jax.jit(lambda p, xx, cc: mamba2.mamba_decode(p, xx, cfg, cc))
+    for t in range(12, 16):
+        yt, c = dec(params, x[:, t:t + 1], c)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(yfull), rtol=2e-4, atol=2e-4)
+
+
+def test_mla_decode_matches_forward():
+    cfg = ArchConfig(
+        name="m", family="moe", num_layers=1, d_model=64, num_heads=4,
+        num_kv_heads=4, d_ff=128, vocab_size=64,
+        mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+                      qk_rope_head_dim=8, v_head_dim=16))
+    params = jax.tree.map(lambda a: a.astype(jnp.float32),
+                          materialize(mla.mla_specs(cfg), jax.random.key(0)))
+    x = jax.random.normal(jax.random.key(1), (2, 10, 64), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(10)[None], (2, 10))
+    yf = jax.jit(lambda p, xx, ps: mla.mla_forward(p, xx, cfg, ps))(
+        params, x, pos)
+    from repro.models.params import abstract
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32 if
+                                             s.dtype == jnp.bfloat16 else
+                                             s.dtype),
+                         abstract(mla.mla_cache_specs(cfg, 2, 10)))
+    dec = jax.jit(lambda p, xx, cc, ps: mla.mla_decode(p, xx, cfg, cc, ps))
+    ys, c = [], cache
+    for t in range(10):
+        yt, c = dec(params, x[:, t:t + 1], c, jnp.full((2,), t))
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(yf), rtol=1e-4, atol=1e-4)
+
+
+def _moe_cfg(e=4, k=2, shared=0):
+    return ArchConfig(
+        name="e", family="moe", num_layers=1, d_model=32, num_heads=2,
+        num_kv_heads=2, d_ff=64, vocab_size=64,
+        moe=MoEConfig(num_experts=e, top_k=k, d_ff_expert=32,
+                      num_shared_experts=shared, capacity_factor=8.0))
+
+
+@pytest.mark.parametrize("shared", [0, 1])
+def test_moe_sharded_matches_dense_degenerate_mesh(shared):
+    """On a 1x1 mesh the shard_map path must equal the dense oracle
+    exactly (generous capacity -> no drops)."""
+    from repro.sharding.rules import ShardCtx
+    cfg = _moe_cfg(shared=shared)
+    params = jax.tree.map(lambda a: a.astype(jnp.float32),
+                          materialize(moe_mod.moe_specs(cfg),
+                                      jax.random.key(0)))
+    x = jax.random.normal(jax.random.key(1), (2, 8, 32), jnp.float32)
+    yd, auxd = jax.jit(lambda p, xx: moe_mod.moe_dense(p, xx, cfg))(
+        params, x)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    ctx = ShardCtx(mesh=mesh, pod_axis=None)
+    ys, auxs = jax.jit(lambda p, xx: moe_mod.moe_sharded(p, xx, cfg, ctx))(
+        params, x)
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(yd), rtol=2e-5,
+                               atol=2e-5)
+    np.testing.assert_allclose(float(auxs), float(auxd), rtol=1e-5)
+    y2, aux2 = jax.jit(lambda p, xx: moe_mod.moe_sharded_2d(
+        p, xx, cfg, ctx))(params, x)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(yd), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_moe_capacity_drops_tokens():
+    """Tiny capacity must drop tokens (sharded != dense) but stay finite."""
+    from repro.sharding.rules import ShardCtx
+    cfg = _moe_cfg()
+    params = jax.tree.map(lambda a: a.astype(jnp.float32),
+                          materialize(moe_mod.moe_specs(cfg),
+                                      jax.random.key(0)))
+    x = jax.random.normal(jax.random.key(1), (4, 32, 32), jnp.float32)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    ctx = ShardCtx(mesh=mesh, pod_axis=None)
+    ys, _ = jax.jit(lambda p, xx: moe_mod.moe_sharded(
+        p, xx, cfg, ctx, capacity_factor=0.1))(params, x)
+    assert bool(jnp.isfinite(ys).all())

@@ -1,0 +1,125 @@
+"""Per-arch smoke tests: reduced configs, one forward + prefill/decode
+consistency, output shapes, no NaNs.  (Full configs are exercised only via
+the dry-run — ShapeDtypeStruct, no allocation.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke
+from repro.models.frontend import make_fake_embeds, text_len
+from repro.models.model_zoo import build_model
+from repro.models.params import param_count
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_forward_prefill_decode(arch_id):
+    cfg = get_smoke(arch_id)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    B, S = 2, 16
+    stext = text_len(cfg, S)
+    tokens = jax.random.randint(jax.random.key(1), (B, stext), 0,
+                                cfg.vocab_size)
+    embeds = make_fake_embeds(cfg, B, S, jax.random.key(2))
+    if cfg.is_encoder_decoder:
+        pos = jnp.broadcast_to(jnp.arange(stext)[None], (B, stext))
+        out = jax.jit(lambda p, t, ps, e: model.forward(p, t, ps, embeds=e)
+                      )(params, tokens, pos, embeds)
+        assert out["hidden"].shape == (B, stext, cfg.d_model)
+        cache = model.init_cache(B, S, enc_len=S)
+        _, cache, _ = jax.jit(
+            lambda p, t, ps, c, e: model.prefill(p, t, ps, c, embeds=e)
+        )(params, tokens[:, :4], pos[:, :4], cache, embeds)
+        lg, cache = jax.jit(lambda p, t, ps, c: model.decode(p, t, ps, c)
+                            )(params, tokens[:, 4:5], jnp.full((B,), 4),
+                              cache)
+    else:
+        n_emb = (min(cfg.num_frontend_tokens, S - 1)
+                 if cfg.frontend == "vision" else 0)
+        full = n_emb + stext
+        pos = jnp.broadcast_to(jnp.arange(full)[None], (B, full))
+        out = jax.jit(lambda p, t, ps, e: model.forward(p, t, ps, embeds=e)
+                      )(params, tokens, pos, embeds)
+        assert out["hidden"].shape == (B, full, cfg.d_model)
+        cache = model.init_cache(B, 32)
+        _, cache, _ = jax.jit(
+            lambda p, t, ps, c, e: model.prefill(p, t, ps, c, embeds=e)
+        )(params, tokens, pos, cache, embeds)
+        lg, cache = jax.jit(lambda p, t, ps, c: model.decode(p, t, ps, c)
+                            )(params, tokens[:, :1], jnp.full((B,), full),
+                              cache)
+        assert lg.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.isnan(out["hidden"].astype(jnp.float32)).any())
+    assert not bool(jnp.isnan(lg).any())
+
+
+@pytest.mark.parametrize("arch_id", ["qwen2-1.5b", "h2o-danube-1.8b",
+                                     "mamba2-1.3b", "deepseek-v3-671b",
+                                     "jamba-1.5-large-398b"])
+def test_prefill_decode_matches_forward(arch_id):
+    """Teacher-forced prefill+decode hidden must equal the parallel
+    forward (fp32 params for exactness)."""
+    cfg = get_smoke(arch_id)
+    model = build_model(cfg)
+    params = jax.tree.map(lambda a: a.astype(jnp.float32)
+                          if a.dtype == jnp.bfloat16 else a,
+                          model.init_params(jax.random.key(0)))
+    B, S, SPLIT = 2, 12, 8
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0,
+                                cfg.vocab_size)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full = jax.jit(lambda p, t, ps: model.forward(p, t, ps))(
+        params, tokens, pos)["hidden"]
+    cache = model.init_cache(B, S)
+    cache = jax.tree.map(lambda a: a.astype(jnp.float32)
+                         if a.dtype == jnp.bfloat16 else a, cache)
+    hp, cache, _ = jax.jit(lambda p, t, ps, c: model.prefill(p, t, ps, c))(
+        params, tokens[:, :SPLIT], pos[:, :SPLIT], cache)
+    np.testing.assert_allclose(np.asarray(hp),
+                               np.asarray(full[:, :SPLIT]),
+                               rtol=2e-4, atol=2e-4)
+    dec = jax.jit(lambda p, t, ps, c: model.decode(p, t, ps, c))
+    w = model.lm_head_weight(params)
+    for t in range(SPLIT, S):
+        lg, cache = dec(params, tokens[:, t:t + 1], jnp.full((B,), t),
+                        cache)
+        ref_lg = jnp.einsum("bd,dv->bv", full[:, t].astype(w.dtype), w)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(ref_lg), rtol=2e-3,
+                                   atol=2e-3)
+
+
+def test_full_configs_match_assignment():
+    """Exact dims from the assignment sheet."""
+    expect = {
+        "granite-moe-1b-a400m": (24, 1024, 16, 8),
+        "deepseek-v3-671b": (61, 7168, 128, 128),
+        "mamba2-1.3b": (48, 2048, 64, 0),
+        "qwen2-1.5b": (28, 1536, 12, 2),
+        "qwen3-32b": (64, 5120, 64, 8),
+        "h2o-danube-1.8b": (24, 2560, 32, 8),
+        "qwen2-7b": (28, 3584, 28, 4),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8),
+        "whisper-small": (12, 768, 12, 12),
+        "internvl2-26b": (48, 6144, 48, 8),
+    }
+    for aid, (L, d, h, kv) in expect.items():
+        cfg = get_config(aid)
+        assert (cfg.num_layers, cfg.d_model, cfg.num_heads,
+                cfg.num_kv_heads) == (L, d, h, kv), aid
+
+
+def test_param_counts_in_range():
+    """Sanity: big configs land near their nameplate sizes."""
+    from repro.models.params import param_count as pc
+    ds = build_model(get_config("deepseek-v3-671b"))
+    n = pc(ds.specs())
+    assert 6.2e11 < n < 7.4e11, n
+    jb = build_model(get_config("jamba-1.5-large-398b"))
+    n = pc(jb.specs())
+    assert 3.2e11 < n < 4.6e11, n
+    q = build_model(get_config("qwen2-7b"))
+    n = pc(q.specs())
+    assert 6.5e9 < n < 8.5e9, n

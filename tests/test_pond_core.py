@@ -1,0 +1,135 @@
+"""Pond core invariants: slice single-ownership, async release, pool
+manager flows, EMC blast radius, zNUMA bias, latency model (Fig 7/8)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import latency_model as lm
+from repro.core.pool_manager import PoolManager
+from repro.core.slices import FREE, PermissionError_, SlicePool
+from repro.core.znuma import TierAccount, ZNumaAllocator
+
+
+# ------------------------------------------------------------- slices ------
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 6),
+                          st.booleans()), min_size=1, max_size=30))
+def test_slice_pool_single_owner_invariant(ops):
+    """Random assign/release interleavings never violate single ownership
+    and conserve the slice count."""
+    pool = SlicePool(num_slices=64)
+    now = 0.0
+    for host, gb, do_release in ops:
+        now += 1.0
+        if do_release:
+            pool.release(host, None, now) if len(pool.owned_by(host)) \
+                else None
+        else:
+            try:
+                pool.assign(host, gb, now)
+            except MemoryError:
+                pass
+        pool.check_invariants()
+        owners = pool.owner
+        assert (owners >= -2).all()
+    pool.tick(now + 1e6)
+    assert (pool.owner >= FREE).all()
+
+
+def test_slice_permission_fatal():
+    pool = SlicePool(num_slices=8)
+    ids = pool.assign(host=1, gb=2)
+    with pytest.raises(PermissionError_):
+        pool.check_access(2, int(ids[0]))
+    pool.check_access(1, int(ids[0]))
+
+
+def test_async_release_timing():
+    """Offline takes 10-100 ms/GB; online is instant (Pond §4.2)."""
+    pool = SlicePool(num_slices=16, seed=3)
+    pool.assign(0, 8.0, now=0.0)
+    ready = pool.release(0, None, now=0.0)
+    assert 0.08 <= ready <= 0.8            # 8 GB x [10,100] ms
+    assert pool.free_gb() == 8.0           # the other 8 still free
+    pool.tick(ready - 1e-4)
+    assert pool.free_gb() == 8.0           # not drained yet
+    pool.tick(ready + 1e-4)
+    assert pool.free_gb() == 16.0
+    gbps = pool.offline_gbps_distribution()
+    assert ((gbps >= 10.0) & (gbps <= 100.0)).all()
+
+
+# --------------------------------------------------------- pool manager ----
+def test_pool_manager_flows_and_blast_radius():
+    pm = PoolManager(pool_gb=64, num_emcs=4, buffer_gb=8)
+    assert pm.add_capacity(host=0, gb=20, now=0.0)
+    assert pm.add_capacity(host=1, gb=20, now=0.0)
+    assert pm.host_pool_gb(0) == 20
+    # EMC failure affects only hosts with slices on that EMC
+    affected = pm.fail_emc(0)
+    assert affected == [0]                 # host0 got EMC0's 16GB first
+    # PM failure blocks reassignment, not the datapath
+    pm.fail_pool_manager()
+    assert not pm.add_capacity(host=2, gb=1, now=1.0)
+
+
+def test_pool_manager_release_replenishes():
+    pm = PoolManager(pool_gb=32, num_emcs=1, buffer_gb=8)
+    assert pm.add_capacity(0, 30, now=0.0)
+    assert not pm.add_capacity(1, 4, now=0.0)   # blocked: buffer short
+    pm.release_capacity(0, now=1.0)
+    # after drain completes the buffer is replenished
+    assert pm.add_capacity(1, 4, now=1.0 + 30 * 0.2)
+    assert pm.stats.blocked_starts == 1
+
+
+# --------------------------------------------------------------- zNUMA -----
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 16), st.integers(0, 16),
+       st.lists(st.booleans(), max_size=40))
+def test_znuma_local_first_bias(n_local, n_pool, frees):
+    """Property: a pool block is never allocated while local is free."""
+    alloc = ZNumaAllocator(n_local, n_pool)
+    live = []
+    fi = 0
+    for _ in range(200):
+        do_free = fi < len(frees) and frees[fi] and live
+        fi += 1
+        if do_free:
+            alloc.free(live.pop())
+            continue
+        try:
+            blk = alloc.alloc()
+        except MemoryError:
+            break
+        if alloc.is_pool(blk):
+            assert not alloc.free_local, \
+                "pool allocated while local blocks were free"
+        live.append(blk)
+
+
+def test_znuma_spill_accounting():
+    alloc = ZNumaAllocator(4, 4)
+    blocks = [alloc.alloc() for _ in range(6)]
+    assert alloc.spill_fraction == pytest.approx(2 / 6)
+    assert alloc.local_in_use == 4 and alloc.pool_in_use == 2
+
+
+# -------------------------------------------------------- latency model ----
+def test_latency_fig7_fig8():
+    # Fig 7: 8/16-socket pools add 70-90ns over NUMA-local
+    assert lm.added_latency_ns(8) == pytest.approx(70, abs=5)
+    assert lm.added_latency_ns(16) == pytest.approx(90, abs=5)
+    assert lm.added_latency_ns(32) > 180          # rack scale
+    # monotone in pool size
+    lats = [lm.pond_latency_ns(s) for s in (8, 16, 32, 64)]
+    assert all(a <= b for a, b in zip(lats, lats[1:]))
+    # Fig 8: EMC-first design ~1/3 lower than switch-only at small pools
+    red = 1 - lm.pond_latency_ns(8) / lm.switch_only_latency_ns(8)
+    assert 0.25 < red < 0.45
+    # paper's emulated latency increases (182%/222%) bracket pool sizes
+    assert 180 < lm.latency_increase_pct(8) < 200
+
+
+def test_migration_cost():
+    assert lm.migration_seconds(10) == pytest.approx(0.5)  # 50ms/GB

@@ -1,0 +1,172 @@
+"""Train/serve runtime: chunked xent, microbatching, optimizer, data
+pipeline determinism + elasticity, checkpoint round trips."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_smoke
+from repro.data.pipeline import DataConfig, ShardedBatches
+from repro.models.model_zoo import build_model
+from repro.optim import adamw, compress
+from repro.runtime import checkpoint as ckpt
+from repro.runtime import train as rt
+from repro.sharding.rules import ShardCtx
+
+
+def test_chunked_xent_matches_reference(rng):
+    B, S, D, V = 2, 24, 16, 50
+    h = jnp.asarray(rng.normal(size=(B, S, D)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(D, V)).astype(np.float32))
+    lab = jnp.asarray(rng.integers(0, V, (B, S)).astype(np.int32))
+
+    def ref(h, w):
+        logits = jnp.einsum("bsd,dv->bsv", h, w)
+        return -jnp.mean(jnp.take_along_axis(
+            jax.nn.log_softmax(logits), lab[..., None], -1))
+
+    f = lambda h, w: rt.chunked_xent(h, w, lab, chunk=7)
+    np.testing.assert_allclose(float(jax.jit(f)(h, w)),
+                               float(jax.jit(ref)(h, w)), rtol=1e-6)
+    gc = jax.jit(jax.grad(f, argnums=(0, 1)))(h, w)
+    gr = jax.jit(jax.grad(ref, argnums=(0, 1)))(h, w)
+    for a, b in zip(gc, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_microbatch_grad_equivalence():
+    cfg = get_smoke("qwen2-1.5b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    ctx = ShardCtx()
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
+    b = {"tokens": jnp.asarray(ShardedBatches(dc).batch_at(0)["tokens"])}
+    g1, _ = jax.jit(lambda p, bb: rt.grads_fn(model, p, bb, ctx, 1))(
+        params, b)
+    g4, _ = jax.jit(lambda p, bb: rt.grads_fn(model, p, bb, ctx, 4))(
+        params, b)
+    for a, c in zip(jax.tree.leaves(g1), jax.tree.leaves(g4)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(c, np.float32),
+                                   rtol=0.05, atol=0.02)  # bf16 fwd
+
+
+def test_loss_decreases_30_steps():
+    cfg = get_smoke("qwen2-1.5b")
+    model = build_model(cfg)
+    ocfg = adamw.AdamWConfig(lr=2e-2, warmup_steps=3, total_steps=40)
+    params = model.init_params(jax.random.key(0))
+    opt = adamw.init_state(params, ocfg)
+    step = rt.jit_train_step(model, ocfg, ShardCtx(), donate=False)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
+    it = ShardedBatches(dc)
+    losses = []
+    for _ in range(30):
+        b = next(it)
+        params, opt, m = step(params, opt,
+                              {"tokens": jnp.asarray(b["tokens"])})
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses
+
+
+def test_adamw_reference_step():
+    """One AdamW step against a hand-rolled reference."""
+    ocfg = adamw.AdamWConfig(lr=0.1, warmup_steps=0, total_steps=10,
+                             weight_decay=0.0, grad_clip=1e9,
+                             min_lr_frac=1.0)
+    p = {"w": jnp.asarray([1.0, -2.0], jnp.float32)}
+    g = {"w": jnp.asarray([0.5, -0.5], jnp.float32)}
+    st_ = adamw.init_state(p, ocfg)
+    p2, st2, m = adamw.apply_updates(p, st_, g, ocfg)
+    mref = 0.1 * np.asarray(g["w"]) / (1 - 0.9)
+    vref = 0.05 * np.asarray(g["w"]) ** 2 / (1 - 0.95)
+    ref = np.asarray(p["w"]) - 0.1 * (mref / (1 - 0.9) * (1 - 0.9)) / (
+        np.sqrt(vref) + ocfg.eps)
+    expect = np.asarray(p["w"]) - 0.1 * (
+        (0.1 * np.asarray(g["w"]) / (1 - 0.9 ** 1))
+        / (np.sqrt(0.05 * np.asarray(g["w"]) ** 2 / (1 - 0.95 ** 1))
+           + ocfg.eps))
+    np.testing.assert_allclose(np.asarray(p2["w"]), expect, rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 4), st.sampled_from([3, 64, 257, 1000]))
+def test_int8_quantization_error_bound(seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32)) * 10
+    err = float(compress.compression_error(x))
+    blocks = np.asarray(x)
+    assert err <= np.abs(blocks).max() / 127.0 + 1e-6
+
+
+def test_int8_moments_training_step():
+    cfg = get_smoke("qwen2-1.5b")
+    model = build_model(cfg)
+    ocfg = adamw.AdamWConfig(lr=1e-2, moments_dtype="int8")
+    params = model.init_params(jax.random.key(0))
+    opt = adamw.init_state(params, ocfg)
+    gs, os_ = rt.make_two_phase_steps(model, ocfg, ShardCtx())
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
+    b = {"tokens": jnp.asarray(ShardedBatches(dc).batch_at(0)["tokens"])}
+    g, _ = jax.jit(gs)(params, b)
+    p2, o2, m = jax.jit(os_)(params, opt, g)
+    assert bool(jnp.isfinite(m["grad_norm"]))
+    assert int(o2["step"]) == 1
+
+
+def test_data_pipeline_deterministic_and_elastic():
+    dc = DataConfig(vocab_size=97, seq_len=16, global_batch=8)
+    one = ShardedBatches(dc, num_hosts=1, host_id=0).batch_at(5)["tokens"]
+    two = [ShardedBatches(dc, num_hosts=2, host_id=h).batch_at(5)["tokens"]
+           for h in range(2)]
+    np.testing.assert_array_equal(one, np.concatenate(two, axis=0))
+    again = ShardedBatches(dc, num_hosts=1, host_id=0).batch_at(5)["tokens"]
+    np.testing.assert_array_equal(one, again)
+
+
+def test_checkpoint_roundtrip_and_corruption(tmp_path, rng):
+    tree = {"a": jnp.asarray(rng.normal(size=(4, 5)).astype(np.float32)),
+            "b": [jnp.arange(7), {"c": jnp.asarray(2.5)}]}
+    ckpt.save(str(tmp_path), 3, tree)
+    back = ckpt.restore(str(tmp_path), 3, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    ckpt.corrupt_leaf(str(tmp_path), 3, 0)
+    with pytest.raises(IOError):
+        ckpt.restore(str(tmp_path), 3, tree)
+    back = ckpt.restore(str(tmp_path), 3, tree, verify=False)  # best effort
+
+
+def test_checkpoint_async_save(tmp_path, rng):
+    tree = {"w": jnp.asarray(rng.normal(size=(64,)).astype(np.float32))}
+    fut = ckpt.save(str(tmp_path), 7, tree, blocking=False)
+    fut.result(timeout=30)
+    back = ckpt.restore(str(tmp_path), 7, tree)
+    np.testing.assert_array_equal(np.asarray(tree["w"]),
+                                  np.asarray(back["w"]))
+
+
+def test_train_restart_bitwise(tmp_path):
+    """Kill/restart drill: restored run reproduces the same next loss."""
+    cfg = get_smoke("qwen2-1.5b")
+    model = build_model(cfg)
+    ocfg = adamw.AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=20)
+    params = model.init_params(jax.random.key(0))
+    opt = adamw.init_state(params, ocfg)
+    step = rt.jit_train_step(model, ocfg, ShardCtx(), donate=False)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
+    data = ShardedBatches(dc)
+    for i in range(3):
+        b = {"tokens": jnp.asarray(data.batch_at(i)["tokens"])}
+        params, opt, m = step(params, opt, b)
+    ckpt.save(str(tmp_path), 3, (params, opt))
+    b4 = {"tokens": jnp.asarray(data.batch_at(3)["tokens"])}
+    _, _, m_cont = step(params, opt, b4)
+    p2, o2 = ckpt.restore(str(tmp_path), 3, (params, opt))
+    _, _, m_rest = step(p2, o2, b4)
+    assert float(m_cont["loss"]) == float(m_rest["loss"])

@@ -1,0 +1,131 @@
+"""Serving stack: tiered paged KV, zNUMA spill, QoS migration, scheduler."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke
+from repro.core.slices import SlicePool
+from repro.models.model_zoo import build_model
+from repro.serving.engine import DecodeEngine, paged_kv_config
+from repro.serving.kv_cache import KVConfig, TieredPagedKV
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_smoke("qwen2-1.5b")
+    model = build_model(cfg)
+    params = jax.tree.map(lambda a: a.astype(jnp.float32),
+                          model.init_params(jax.random.key(0)))
+    return cfg, model, params
+
+
+def test_paged_decode_matches_ring_decode(small_model):
+    cfg, model, params = small_model
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, 12))[None]
+    cache = jax.tree.map(
+        lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+        model.init_cache(1, 40))
+    hp, cache, _ = jax.jit(lambda p, t, ps, c: model.prefill(p, t, ps, c))(
+        params, toks, jnp.arange(12)[None], cache)
+    ring = [int(jnp.argmax(model.logits(params, hp[:, -1:])[0, -1]))]
+    pos, nt = 12, ring[0]
+    dec = jax.jit(lambda p, t, ps, c: model.decode(p, t, ps, c))
+    for _ in range(3):
+        lg, cache = dec(params, jnp.asarray([[nt]]), jnp.asarray([pos]),
+                        cache)
+        nt = int(jnp.argmax(lg[0, 0]))
+        ring.append(nt)
+        pos += 1
+    eng = DecodeEngine(model, params,
+                       paged_kv_config(cfg, page_size=8, num_local=32,
+                                       num_pool=8), max_batch=1)
+    eng.submit(Request(req_id=0, prompt_len=12, max_new_tokens=4),
+               np.asarray(toks[0]))
+    for _ in range(4):
+        eng.step()
+    assert eng.outputs[0][:4] == ring
+
+
+def test_engine_completes_with_continuous_batching(small_model):
+    cfg, model, params = small_model
+    rng = np.random.default_rng(1)
+    eng = DecodeEngine(model, params,
+                       paged_kv_config(cfg, page_size=8, num_local=16,
+                                       num_pool=48), max_batch=3, pdm=0.9)
+    for r in range(6):
+        plen = int(rng.integers(5, 20))
+        eng.submit(Request(req_id=r, prompt_len=plen, max_new_tokens=5),
+                   rng.integers(0, cfg.vocab_size, plen))
+    stats = eng.run(300)
+    assert len(eng.batcher.completed) == 6
+    assert stats.tokens == 6 * 5
+    # all pages returned
+    assert eng.kv.alloc.local_in_use == 0 and eng.kv.alloc.pool_in_use == 0
+
+
+def test_znuma_spill_and_migration(small_model):
+    """Local tier too small -> spill to pool -> QoS migrates once local
+    frees up; pool traffic fraction drops."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(2)
+    eng = DecodeEngine(model, params,
+                       paged_kv_config(cfg, page_size=4, num_local=4,
+                                       num_pool=64), max_batch=2, pdm=0.05)
+    # staggered lengths: req0 completes early, freeing local pages so the
+    # QoS mitigation can migrate req1's pool pages
+    eng.submit(Request(req_id=0, prompt_len=16, max_new_tokens=2),
+               rng.integers(0, cfg.vocab_size, 16))
+    eng.submit(Request(req_id=1, prompt_len=16, max_new_tokens=16),
+               rng.integers(0, cfg.vocab_size, 16))
+    stats = eng.run(100)
+    assert max(stats.pool_traffic_fracs) > 0.0     # spilled
+    assert eng.kv.alloc.spill_fraction > 0.0
+    assert stats.migrations >= 1                   # QoS engaged
+    assert stats.migration_seconds > 0.0
+
+
+def test_slice_pool_backing_and_release(small_model):
+    cfg, model, params = small_model
+    sp = SlicePool(num_slices=128, slice_gb=0.0005)
+    eng = DecodeEngine(model, params,
+                       paged_kv_config(cfg, page_size=8, num_local=8,
+                                       num_pool=32), max_batch=1,
+                       slice_pool=sp)
+    owned0 = sp.owned_gb(0)
+    assert owned0 > 0                              # pool tier owns slices
+    eng.kv.release_slices(now=0.0)
+    assert sp.draining_gb() == pytest.approx(owned0)
+    sp.tick(1e9)
+    assert sp.free_gb() == pytest.approx(128 * 0.0005)
+
+
+def test_scheduler_fcfs_and_stragglers():
+    b = ContinuousBatcher(max_batch=2)
+    for r in range(4):
+        b.submit(Request(req_id=r, prompt_len=4, max_new_tokens=2))
+    admitted = b.admit(lambda req: True)
+    assert [r.req_id for r in admitted] == [0, 1]
+    b.step_done([0])
+    admitted = b.admit(lambda req: req.req_id != 3)
+    assert [r.req_id for r in admitted] == [2]
+    for _ in range(5):
+        b.record_replica_time("fast1", 0.1)
+        b.record_replica_time("fast2", 0.11)
+        b.record_replica_time("slow", 0.5)
+    assert b.healthy_replicas(["fast1", "fast2", "slow"]) == \
+        ["fast1", "fast2"]
+
+
+def test_kv_admission_control():
+    kv = TieredPagedKV(KVConfig(num_layers=2, num_kv_heads=2, head_dim=8,
+                                page_size=4, num_local_pages=4,
+                                num_pool_pages=2))
+    assert kv.can_admit(prompt_len=16, max_new=8)
+    assert not kv.can_admit(prompt_len=25, max_new=8)
+    kv.admit(0, 16)
+    assert not kv.can_admit(prompt_len=8, max_new=2)
+    kv.release(0)
+    assert kv.can_admit(prompt_len=8, max_new=2)

@@ -1,0 +1,76 @@
+"""End-to-end behaviour: the Pond control plane driving real components
+(predictors + pool manager + QoS) and the serving engine Pond loop."""
+import numpy as np
+import pytest
+
+from repro.core import traces
+from repro.core.control_plane import ControlPlane, ControlPlaneConfig
+from repro.core.pool_manager import PoolManager
+from repro.core.predictors.models import (LatencySensitivityModel,
+                                          UntouchedMemoryModel)
+
+
+@pytest.fixture(scope="module")
+def plane():
+    pop = traces.Population(seed=0)
+    train = pop.sample_vms(1200, 86400 * 6, seed=1)
+    li = LatencySensitivityModel(pdm=0.05).fit(
+        traces.pmu_matrix(train), traces.slowdowns(train, 182))
+    hist = traces.build_history(train)
+    um = UntouchedMemoryModel(0.05).fit(
+        traces.metadata_features(train, hist),
+        np.array([v.untouched for v in train]))
+    cp = ControlPlane(ControlPlaneConfig(li_threshold=0.2), li, um,
+                      PoolManager(pool_gb=512, buffer_gb=16),
+                      history=dict(hist))
+    return pop, cp
+
+
+def test_control_plane_a_flow(plane):
+    pop, cp = plane
+    vms = pop.sample_vms(200, 86400, seed=5, start_id=10 ** 6)
+    pooled = 0
+    for vm in vms:
+        pl = cp.on_request(vm, host=vm.vm_id % 8, now=vm.arrival)
+        assert pl.local_gb + pl.pool_gb == pytest.approx(vm.mem_gb)
+        assert pl.pool_gb == int(pl.pool_gb)        # GB-aligned
+        pooled += pl.pool_gb > 0
+        cp.on_departure(vm, vm.departure)
+    assert pooled > 50                              # pool actually used
+    assert cp.pm.assigned_gb() == 0                 # all released
+
+
+def test_control_plane_b_flow_mitigation(plane):
+    pop, cp0 = plane
+    # aggressive UM quantile -> frequent overpredictions -> QoS engages
+    um_hi = UntouchedMemoryModel(0.6).fit(
+        traces.metadata_features(list(pop.sample_vms(600, 86400, seed=1)),
+                                 cp0.history),
+        np.array([v.untouched for v in pop.sample_vms(600, 86400, seed=1)]))
+    cp = ControlPlane(ControlPlaneConfig(li_threshold=0.2),
+                      cp0.li_model, um_hi,
+                      PoolManager(pool_gb=2048, buffer_gb=16),
+                      history=dict(cp0.history))
+    vms = pop.sample_vms(300, 86400, seed=6, start_id=2 * 10 ** 6)
+    mitigated = 0
+    for vm in vms:
+        pl = cp.on_request(vm, host=0, now=vm.arrival)
+        mit = cp.monitor_step(vm, vm.arrival + 60)
+        if mit is not None:
+            mitigated += 1
+            assert cp.placements[vm.vm_id].pool_gb == 0   # now all-local
+        cp.on_departure(vm, vm.departure)
+    # QoS engages on overpredicted+sensitive VMs only
+    assert 0 < mitigated < 0.5 * len(vms)
+
+
+def test_pool_fallback_never_blocks_starts(plane):
+    pop, _ = plane
+    # tiny pool: requests must still start (all-local fallback)
+    cp = ControlPlane(ControlPlaneConfig(li_threshold=0.9), None, None,
+                      PoolManager(pool_gb=1, buffer_gb=0))
+    vms = pop.sample_vms(20, 3600, seed=7, start_id=3 * 10 ** 6)
+    for vm in vms:
+        pl = cp.on_request(vm, host=0, now=vm.arrival)
+        assert pl is not None
+        assert pl.local_gb + pl.pool_gb == pytest.approx(vm.mem_gb)
