@@ -1,6 +1,11 @@
 """Render EXPERIMENTS.md tables from the dry-run JSON artifacts.
 
   PYTHONPATH=src python -m benchmarks.report [--outdir experiments/dryrun]
+  PYTHONPATH=src python -m benchmarks.report --what replay
+
+The ``replay`` table tracks the batched replay engine's throughput
+trajectory from ``experiments/BENCH_replay.json`` (written by
+``python -m benchmarks.run --perf-smoke``).
 """
 from __future__ import annotations
 
@@ -74,11 +79,30 @@ def collective_mix(outdir: str) -> str:
     return "\n".join(lines)
 
 
+def replay_table(path: str = "experiments/BENCH_replay.json") -> str:
+    lines = ["| benchmark | wall s | savings wall s | cand-events/s | "
+             "speedup vs scalar | claims |",
+             "|---|---|---|---|---|---|"]
+    if not os.path.isfile(path):
+        lines.append("| (run `python -m benchmarks.run --perf-smoke`) "
+                     "| — | — | — | — | — |")
+        return "\n".join(lines)
+    r = json.load(open(path))
+    lines.append(
+        f"| {r.get('benchmark', '?')} | {r.get('wall_s', '—')} | "
+        f"{r.get('savings_wall_s', '—')} | "
+        f"{r.get('events_per_sec', '—')} | "
+        f"{r.get('replay_speedup_vs_scalar', '—')}x | "
+        f"{'PASS' if r.get('claims_pass') else 'FAIL'} |")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--outdir", default="experiments/dryrun")
     ap.add_argument("--what", default="all",
-                    choices=["all", "dryrun", "roofline", "collectives"])
+                    choices=["all", "dryrun", "roofline", "collectives",
+                             "replay"])
     args = ap.parse_args()
     if args.what in ("all", "dryrun"):
         print("### Dry-run matrix\n")
@@ -91,6 +115,10 @@ def main():
     if args.what in ("all", "collectives"):
         print("### Collective mix (single pod, wire GiB/device/step)\n")
         print(collective_mix(args.outdir))
+        print()
+    if args.what in ("all", "replay"):
+        print("### Replay-engine throughput (batched event sweeps)\n")
+        print(replay_table())
 
 
 if __name__ == "__main__":

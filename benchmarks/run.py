@@ -1,6 +1,12 @@
 """Benchmark runner: one module per paper figure/table + roofline report.
 
   PYTHONPATH=src python -m benchmarks.run [--full]
+  PYTHONPATH=src python -m benchmarks.run --perf-smoke
+
+``--perf-smoke`` times only the fig3 quick path on the batched replay
+engine and emits ``experiments/BENCH_replay.json`` (wall seconds,
+candidate-events/sec, measured speedup vs the scalar oracle) so future
+PRs can track the replay-throughput trajectory.
 """
 from __future__ import annotations
 
@@ -26,11 +32,41 @@ MODULES = [
 ]
 
 
+def perf_smoke():
+    """Time the fig3 quick path; emit experiments/BENCH_replay.json."""
+    from benchmarks import fig3_poolsize
+    t0 = time.time()
+    res = fig3_poolsize.run(quick=True)
+    wall = time.time() - t0
+    bench = {
+        "benchmark": "fig3_poolsize.quick",
+        "wall_s": round(wall, 3),
+        "savings_wall_s": res.get("wall_s"),
+        "events_per_sec": res.get("engine", {}).get("events_per_sec"),
+        "candidate_events": res.get("engine", {}).get("candidate_events"),
+        "replay_speedup_vs_scalar": res.get("replay_speedup"),
+        "claims_pass": all(c["ok"] for c in res.get("claims", [])),
+    }
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/BENCH_replay.json", "w") as f:
+        json.dump(bench, f, indent=1)
+    print(f"perf-smoke: {wall:.1f}s wall, "
+          f"{bench['events_per_sec']} candidate-events/s "
+          f"-> experiments/BENCH_replay.json")
+    return bench
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--perf-smoke", action="store_true",
+                    help="time the fig3 quick replay path and emit "
+                         "experiments/BENCH_replay.json")
     args = ap.parse_args(argv)
+    if args.perf_smoke:
+        perf_smoke()
+        return
     out = {}
     n_pass = n_fail = 0
     for name in MODULES:

@@ -15,13 +15,14 @@ from repro.optim.compress import QTensor      # noqa: E402
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    from repro.sharding.rules import shard_map
+    mesh = make_mesh((2, 4), ("pod", "data"))
     g_spec = NamedSharding(mesh, P("data", None))
     grads = jax.ShapeDtypeStruct((1024, 512), jnp.float32)
 
     def sync_fp32(g):
-        return jax.shard_map(
+        return shard_map(
             lambda x: jax.lax.pmean(x, "pod"), mesh=mesh,
             in_specs=P("data", None), out_specs=P("data", None),
             check_vma=False)(g)
@@ -35,7 +36,7 @@ def main():
             scales = jax.lax.all_gather(q.scale, "pod")      # fp32, small
             deq = jnp.mean(datas.astype(jnp.float32) * scales, axis=0)
             return deq.reshape(-1)[: x.size].reshape(x.shape)
-        return jax.shard_map(local, mesh=mesh, in_specs=P("data", None),
+        return shard_map(local, mesh=mesh, in_specs=P("data", None),
                              out_specs=P("data", None),
                              check_vma=False)(g)
 

@@ -14,16 +14,38 @@ Two analyses over the same synthetic traces (core/traces.py):
   Required DRAM = sum of per-server local peaks + per-pool-group peaks;
   savings vs baseline (Fig 3 / Fig 21).  Pool groups span ``pool_sockets``
   sockets (2 sockets per server).
+
+Compiled-event design (see core/replay_engine.py): every replay path here
+compiles the trace ONCE into sorted NumPy event arrays instead of
+rebuilding Python tuple lists per probe.
+
+* ``savings_analysis`` runs its feasibility searches on a
+  ``replay_engine.CompiledReplay`` — one event sweep prices a whole batch
+  of (server_gb, pool_gb) candidates, and the per-server-size pool
+  searches run as ONE lockstep bracketing search that warm-starts each
+  point from its neighbor (required pool is monotone in server_gb).  Pass
+  ``use_engine=False`` to run the original scalar-oracle search (kept as
+  the equivalence reference; ~10-20x slower).
+
+* ``stranding_analysis`` replays compiled per-server event streams with a
+  closed-form clamped-cumsum (the capped accumulator ``min(y + dm, cap)``
+  unrolls to ``cumsum + running-min``), then samples snapshots via
+  ``searchsorted`` — no per-event Python loop at all.
+
+* ``place_by_cores`` best-fits over the same compiled arrival/departure
+  arrays (the bin-pack itself is inherently sequential).
+
+``replay_reject_rate`` remains the scalar per-event oracle the batched
+engine is tested against (tests/test_replay_engine.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from collections import defaultdict
 
 import numpy as np
 
-from repro.core import traces
+from repro.core import replay_engine, traces
 from repro.core.control_plane import ControlPlane
 
 
@@ -57,61 +79,81 @@ def arrivals_for_util(cfg: ClusterConfig, target_util: float,
 def place_by_cores(vms, cfg: ClusterConfig):
     """Best-fit-by-cores placement (memory never constrains — the paper
     replays VM-to-server placements and varies only the memory policy).
-    Returns {vm_id: server} and the rejected list."""
-    events = []
-    for vm in vms:
-        events.append((vm.arrival, 0, vm))
-        events.append((vm.departure, 1, vm))
-    events.sort(key=lambda e: (e[0], e[1]))
+    Returns {vm_id: server} and the rejected list.
+
+    Events are compiled once into sorted arrays (replay_engine); the
+    best-fit bin-pack itself is sequential by nature."""
+    _, ev_kind, ev_vm = replay_engine.compiled_arrive_depart(vms)
+    ev_kind, ev_vm = ev_kind.tolist(), ev_vm.tolist()
+    cores = [float(vm.cores) for vm in vms]
     free_cores = np.full(cfg.n_servers, cfg.cores_per_server, float)
+    srv = [-1] * len(vms)
     placement, rejected = {}, []
-    for t, kind, vm in events:
-        if kind == 1:
-            s = placement.get(vm.vm_id)
-            if s is not None:
-                free_cores[s] += vm.cores
+    for kind, v in zip(ev_kind, ev_vm):
+        if kind == replay_engine.DEPART:
+            if srv[v] >= 0:
+                free_cores[srv[v]] += cores[v]
             continue
-        fits = np.flatnonzero(free_cores >= vm.cores)
-        if len(fits) == 0:
-            rejected.append(vm.vm_id)
+        score = np.where(free_cores >= cores[v], free_cores, np.inf)
+        s = int(score.argmin())                    # best fit, first min
+        if score[s] == np.inf:
+            rejected.append(vms[v].vm_id)
             continue
-        s = fits[np.argmin(free_cores[fits])]      # best fit
-        free_cores[s] -= vm.cores
-        placement[vm.vm_id] = int(s)
+        free_cores[s] -= cores[v]
+        srv[v] = s
+        placement[vms[v].vm_id] = s
     return placement, rejected
 
 
 # ------------------------------------------------------------ stranding ----
 def stranding_analysis(vms, cfg: ClusterConfig, n_snapshots: int = 200):
-    """Fig 2a: (scheduled-core-frac bucket) -> stranded-memory fraction."""
+    """Fig 2a: (scheduled-core-frac bucket) -> stranded-memory fraction.
+
+    Fully vectorized: per-server compiled event streams; the DRAM-capped
+    accumulator ``mem <- min(mem + dm, cap)`` (additions clamp at the
+    server's DRAM, departures subtract in full) unrolls exactly to
+    ``cumsum + running-min``; snapshots sample the per-server state via
+    ``searchsorted``."""
     placement, _ = place_by_cores(vms, cfg)
-    events = []
-    for vm in vms:
-        if vm.vm_id not in placement:
-            continue
-        s = placement[vm.vm_id]
-        events.append((vm.arrival, s, vm.cores, vm.mem_gb))
-        events.append((vm.departure, s, -vm.cores, -vm.mem_gb))
-    events.sort(key=lambda e: e[0])
-    horizon = max(e[0] for e in events)
+    kept = [vm for vm in vms if vm.vm_id in placement]
+    n = len(kept)
+    t = np.empty(2 * n)
+    t[0::2] = np.fromiter((vm.arrival for vm in kept), float, n)
+    t[1::2] = np.fromiter((vm.departure for vm in kept), float, n)
+    srv = np.repeat(np.fromiter(
+        (placement[vm.vm_id] for vm in kept), np.int64, n), 2)
+    dc = np.empty(2 * n)
+    dc[0::2] = np.fromiter((vm.cores for vm in kept), float, n)
+    dc[1::2] = -dc[0::2]
+    dm = np.empty(2 * n)
+    dm[0::2] = np.fromiter((vm.mem_gb for vm in kept), float, n)
+    dm[1::2] = -dm[0::2]
+    order = np.argsort(t, kind="stable")           # ties: insertion order
+    t, srv, dc, dm = t[order], srv[order], dc[order], dm[order]
+
+    horizon = t.max()
     snaps = np.linspace(horizon * 0.05, horizon * 0.95, n_snapshots)
-    cores_used = np.zeros(cfg.n_servers)
-    mem_used = np.zeros(cfg.n_servers)
     server_gb = cfg.cores_per_server * cfg.gb_per_core
-    out = []          # (core_frac, stranded_frac) per snapshot
-    ei = 0
-    for t in snaps:
-        while ei < len(events) and events[ei][0] <= t:
-            _, s, dc, dm = events[ei]
-            cores_used[s] += dc
-            mem_used[s] += min(dm, server_gb - mem_used[s]) if dm > 0 else dm
-            ei += 1
-        core_frac = cores_used.sum() / (cfg.n_servers * cfg.cores_per_server)
-        # stranded: free memory on servers that cannot host the smallest VM
-        full = (cfg.cores_per_server - cores_used) < cfg.min_vm_cores
-        stranded = np.sum(np.maximum(server_gb - mem_used, 0.0) * full)
-        out.append((core_frac, stranded / (cfg.n_servers * server_gb)))
-    return np.array(out)
+    cores_at = np.zeros((cfg.n_servers, n_snapshots))
+    mem_at = np.zeros((cfg.n_servers, n_snapshots))
+    for s in range(cfg.n_servers):
+        m = srv == s
+        ts = t[m]
+        prefix = np.cumsum(dm[m])
+        # min-plus unroll of y_k = min(y_{k-1} + dm_k, cap if dm_k > 0):
+        # y_n = prefix_n + min(0, min_{j<=n, dm_j>0} (cap - prefix_j))
+        adj = np.where(dm[m] > 0, server_gb - prefix, np.inf)
+        y = prefix + np.minimum(np.minimum.accumulate(adj), 0.0)
+        idx = np.searchsorted(ts, snaps, side="right")
+        cores_at[s] = np.concatenate(([0.0], np.cumsum(dc[m])))[idx]
+        mem_at[s] = np.concatenate(([0.0], y))[idx]
+
+    core_frac = cores_at.sum(0) / (cfg.n_servers * cfg.cores_per_server)
+    # stranded: free memory on servers that cannot host the smallest VM
+    full = (cfg.cores_per_server - cores_at) < cfg.min_vm_cores
+    stranded = (np.maximum(server_gb - mem_at, 0.0) * full).sum(0)
+    return np.stack(
+        [core_frac, stranded / (cfg.n_servers * server_gb)], axis=1)
 
 
 def stranding_by_bucket(snapshots: np.ndarray, edges=None):
@@ -287,39 +329,102 @@ def savings_analysis(vms, cfg: ClusterConfig, policy: str,
                      static_pool_frac: float = 0.15,
                      latency: int = 182, pdm: float = 0.05,
                      spill_harm_prob: float = 0.25,
-                     reject_tol: float = 0.005) -> PolicyResult:
-    """Minimum uniform (server_gb, pool_gb) that schedules the trace."""
+                     reject_tol: float = 0.005,
+                     use_engine: bool = True,
+                     cache: dict | None = None) -> PolicyResult:
+    """Minimum uniform (server_gb, pool_gb) that schedules the trace.
+
+    With ``use_engine=True`` (default) the feasibility searches run on the
+    batched event-compiled replay engine: the trace is compiled once per
+    decision set, the server-size searches replicate the scalar bisection
+    bit-for-bit while pricing whole dyadic probe trees per sweep, and the
+    7 per-server-size pool searches run as one lockstep bracketing search
+    with neighbor warm-starts, bracketed for free by each size's
+    infinite-pool trajectory.  ``use_engine=False`` runs the original
+    scalar-oracle searches (slow; kept as the equivalence reference).
+
+    ``cache``: optional dict shared across calls on the SAME trace and
+    server shape (callers pricing several policies/pool sizes over one
+    trace, like fig3/fig21).  It memoizes the all-local engine and the
+    baseline provisioning search, which do not depend on policy or pool
+    topology."""
     decisions, mispred = policy_decisions(
         vms, policy, control_plane, static_pool_frac, latency, pdm,
         spill_harm_prob)
     hi_server = cfg.cores_per_server * 12.0
     big_pool = hi_server * cfg.n_servers
-    # cores-bound reject floor: memory tolerance is measured on top of it
-    r0 = replay_reject_rate(vms, decisions, cfg, hi_server, big_pool)
-    tol = r0 + reject_tol
+    mitig = len(control_plane.mitigation.log) if control_plane else 0
     dec_local = [VMDecision(vm.mem_gb, 0.0, False, None) for vm in vms]
-    base_gb = _search_min(
-        lambda g: replay_reject_rate(vms, dec_local, cfg, g, 0.0)
-        <= tol, 0.0, hi_server)
-    if policy == "local":
+    n_pts = 7
+
+    if not use_engine:                       # scalar-oracle reference path
+        # cores-bound reject floor: memory tolerance is on top of it
+        r0 = replay_reject_rate(vms, decisions, cfg, hi_server, big_pool)
+        tol = r0 + reject_tol
+        base_gb = _search_min(
+            lambda g: replay_reject_rate(vms, dec_local, cfg, g, 0.0)
+            <= tol, 0.0, hi_server)
+        if policy == "local":
+            return PolicyResult(policy, base_gb, 0.0, base_gb,
+                                cfg.n_servers, cfg.n_groups, mispred, 0, r0)
+        min_server = _search_min(
+            lambda g: replay_reject_rate(vms, decisions, cfg, g, big_pool)
+            <= tol, 0.0, hi_server)
+        best = (np.inf, min_server, 0.0)
+        for sgb in np.linspace(min_server, base_gb, n_pts):
+            pgb = _search_min(
+                lambda g: replay_reject_rate(vms, decisions, cfg, sgb, g)
+                <= tol, 0.0, big_pool)
+            total = cfg.n_servers * sgb + cfg.n_groups * pgb
+            if total < best[0]:
+                best = (total, float(sgb), float(pgb))
+        _, server_gb, pool_gb = best
+        rr = replay_reject_rate(vms, decisions, cfg, server_gb, pool_gb)
+        return PolicyResult(policy, server_gb, pool_gb, base_gb,
+                            cfg.n_servers, cfg.n_groups, mispred, mitig, rr)
+
+    eng = replay_engine.CompiledReplay(vms, decisions, cfg)
+    # cores-bound reject floor: memory tolerance is measured on top of it
+    r0 = float(eng.reject_rates(hi_server, big_pool)[0])
+    tol = r0 + reject_tol
+    cap = int(math.floor(tol * len(vms)))   # early-exit reject budget
+
+    if policy == "local":                   # decisions ARE all-local
+        base_gb = replay_engine.search_min_batched(
+            lambda g: eng.reject_rates(g, 0.0, cap) <= tol,
+            0.0, hi_server)
+        if cache is not None:
+            cache["local_engine"] = eng
+            cache[("base_gb", tol)] = base_gb
         return PolicyResult(policy, base_gb, 0.0, base_gb, cfg.n_servers,
                             cfg.n_groups, mispred, 0, r0)
+    min_server = replay_engine.search_min_batched(
+        lambda g: eng.reject_rates(g, big_pool, cap) <= tol,
+        0.0, hi_server)
+    # the all-local baseline ignores the pool entirely: share its engine
+    # and search result across policies / pool topologies of one trace
+    if cache is not None and "local_engine" in cache:
+        eng_local = cache["local_engine"]
+    else:
+        eng_local = replay_engine.CompiledReplay(vms, dec_local, cfg)
+        if cache is not None:
+            cache["local_engine"] = eng_local
+    base_gb = cache.get(("base_gb", tol)) if cache is not None else None
+    if base_gb is None:
+        base_gb = replay_engine.search_min_batched(
+            lambda g: eng_local.reject_rates(g, 0.0, cap) <= tol,
+            0.0, hi_server)
+        if cache is not None:
+            cache[("base_gb", tol)] = base_gb
     # joint provisioning: pool bursts overflow to local (fallback), so the
     # optimum is NOT the (min server, then min pool) corner — sweep server
-    # sizes and pick the least total DRAM.
-    min_server = _search_min(
-        lambda g: replay_reject_rate(vms, decisions, cfg, g, big_pool)
-        <= tol, 0.0, hi_server)
-    best = (np.inf, min_server, 0.0)
-    for sgb in np.linspace(min_server, base_gb, 7):
-        pgb = _search_min(
-            lambda g: replay_reject_rate(vms, decisions, cfg, sgb, g)
-            <= tol, 0.0, big_pool)
-        total = cfg.n_servers * sgb + cfg.n_groups * pgb
-        if total < best[0]:
-            best = (total, float(sgb), float(pgb))
-    _, server_gb, pool_gb = best
-    rr = replay_reject_rate(vms, decisions, cfg, server_gb, pool_gb)
-    mitig = len(control_plane.mitigation.log) if control_plane else 0
-    return PolicyResult(policy, server_gb, pool_gb, base_gb, cfg.n_servers,
-                        cfg.n_groups, mispred, mitig, rr)
+    # sizes and pick the least total DRAM (one lockstep bracketing search).
+    server_grid = np.linspace(min_server, base_gb, n_pts)
+    pool_grid = replay_engine.pool_search_batched(
+        eng, server_grid, big_pool, tol, reject_cap=cap)
+    totals = cfg.n_servers * server_grid + cfg.n_groups * pool_grid
+    rates = eng.reject_rates(server_grid, pool_grid)
+    b = int(np.argmin(totals))
+    return PolicyResult(policy, float(server_grid[b]), float(pool_grid[b]),
+                        base_gb, cfg.n_servers, cfg.n_groups, mispred,
+                        mitig, float(rates[b]))

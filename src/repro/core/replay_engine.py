@@ -1,0 +1,886 @@
+"""Vectorized event-compiled trace-replay engine (Pond Figs 3 & 21 hot path).
+
+The feasibility searches behind ``savings_analysis`` ask the same question
+hundreds of times: "does the trace schedule with <= tol rejections at
+uniform (server_gb, pool_gb)?".  The scalar oracle
+(``cluster_sim.replay_reject_rate``) answers one candidate per call and
+rebuilds + re-sorts a Python tuple list of events every time, so a single
+policy point costs ~100 full replays of pure-Python event handling.
+
+This module splits that work into a compile phase and a batched sweep:
+
+* **Compile once** — ``CompiledReplay`` turns a ``(vms, decisions)`` pair
+  into flat NumPy event arrays (time, kind, vm index) sorted stably by
+  ``(time, kind)`` exactly like the scalar oracle, plus per-VM payload
+  vectors (cores, local_gb, pool_gb, fallback mem_gb).
+
+* **Reference trajectories** — a candidate's replay only departs from a
+  *looser* replay at the first event where the candidate's capacity
+  binds.  The engine therefore builds (and caches) reference
+  trajectories: the cores-only replay (memory unbounded) for batches that
+  vary server_gb, and per-server-size replays at (server_gb, infinite
+  pool) for batches that vary pool_gb at few distinct server sizes — the
+  shape of the provisioning search.  Each trajectory records per-event
+  admission thresholds (the least capacity keeping the event admissible),
+  cumulative usage snapshots every ``SNAP`` events, and its reject count.
+
+* **Divergence windows** — one vectorized compare against the thresholds
+  yields each candidate's first violation event.  Never-diverging
+  candidates inherit the trajectory's reject count for free; the rest
+  enter the batched sweep in at most ``MAX_WAVES`` waves, their state
+  reconstructed bit-exactly from the snapshots (VM memory quantities are
+  integral GBs, so cumulative sums reproduce the oracle's floats; with
+  non-integral decisions the shortcut is disabled and every candidate
+  simulates from event 0 — still exact, just slower).
+
+* **XLA backend (default)** — because every VM memory quantity is an
+  integral GB, admission tests like ``free_mem >= local_gb`` are exactly
+  ``used_mem + local_gb <= floor(server_gb)`` over int32, so the whole
+  batched sweep compiles to one ``lax.scan`` in JAX's default x32 mode
+  and still matches the float64 oracle bit-for-bit.  Placement state
+  lives in a slot array sized by PEAK CONCURRENCY (VM slots are reused
+  after departure) and is updated with leading-axis dynamic slices, so
+  the scan carry stays small and in place.  Event streams, servers and
+  groups pad to fixed buckets so recompiles are rare.
+
+* **numpy backend (fallback / reference)** — the live batch carries
+  placement state as a packed ``(n_live, n_servers + 1, 3)`` array (free
+  cores / free local GB / free pool GB mirrored per server; the +1
+  column is an always-infeasible dummy absorbing ragged pool groups).
+  One fused ``>=``-compare + ``all`` answers cores, memory and pool
+  admission for every (candidate, server) pair at once.  VMs whose
+  arrival fast-pathed on every live candidate are tracked in a "clean"
+  set so their departures skip migration/unplaced handling.  Searches
+  only need feasibility (rate <= tol), so they pass ``reject_cap``:
+  candidates whose reject count exceeds the cap are compacted out
+  mid-sweep (reported rate is the lower bound ``(cap + 1) / n``), and
+  event ranges with no live candidate are skipped.
+
+With ``reject_cap=None`` the sweep is semantically EXACT with respect to
+the scalar oracle: same event order, same best-fit argmin tie-break
+(first server achieving the minimum free cores), same float64 values,
+same QoS-migration and all-local-fallback transitions.
+``tests/test_replay_engine.py`` asserts bit-exact reject rates against
+the oracle across trace seeds and policies.
+
+``search_min_batched`` replicates the scalar bisection bit-for-bit by
+pricing whole dyadic probe trees per sweep; ``pool_search_batched`` runs
+all server-size points' pool searches in lockstep, bracketed for free by
+each size's infinite-pool trajectory and warm-started from neighbors
+(required pool is monotone non-increasing in server_gb).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+ARRIVE, DEPART, MIGRATE = 0, 1, 2
+PAD = 3               # no-op event kind used to pad the XLA event stream
+MAX_WAVES = 12        # state-rebuild budget per sweep (numpy backend)
+MAX_TRAJS = 16        # per-server-size trajectories per sweep
+SNAP = 64             # snapshot stride (events) in trajectories
+JAX_CHUNK = 96        # candidate buckets per compiled sweep: 16 or 96
+_INF = np.inf
+_I32_BIG = 1 << 30    # "infinite" capacity in the int32 sweep
+
+
+# ----------------------------------------------------------- XLA backend ---
+_JAX_SWEEP = None     # jitted sweep, or False when jax is unavailable
+
+
+def _get_jax_sweep():
+    """Build (once) the jitted int32 event-sweep.
+
+    Because every VM memory quantity is an integral GB, admission tests
+    like ``free_mem >= local_gb`` are equivalent to
+    ``used_mem + local_gb <= floor(server_gb)`` over int32 — so the whole
+    sweep runs in int32 under JAX's default x32 config and still matches
+    the float64 oracle bit-for-bit.  Placement state lives in a
+    ``(n_slots, C)`` array (VMs are mapped to reusable slots sized by
+    peak concurrency, far smaller than n_vms) updated with leading-axis
+    dynamic_update_slice so the scan carry stays in place.
+    """
+    global _JAX_SWEEP
+    if _JAX_SWEEP is not None:
+        return _JAX_SWEEP or None
+    try:
+        import jax
+        import jax.numpy as jnp
+        from jax import lax
+    except Exception:                                # pragma: no cover
+        _JAX_SWEEP = False
+        return None
+    big = jnp.int32(_I32_BIG)
+    zero = jnp.int32(0)
+
+    def body(carry, ev):
+        fc, um, up, slots, rejects, sgb, pgb, group_of = carry
+        kind, sl, c, l, p, m = ev
+        is_arr, is_dep, is_mig = kind == ARRIVE, kind == DEPART, \
+            kind == MIGRATE
+        val = slots[sl]                              # (C,) packed s*2+mig
+        has = val >= 0
+        s_cur = jnp.where(has, val >> 1, 0)
+        mg_cur = has & ((val & 1) == 1)
+        cols = jnp.arange(fc.shape[1], dtype=jnp.int32)
+        gcols = jnp.arange(up.shape[1], dtype=jnp.int32)
+        # admission: best fit by cores among servers with local memory
+        # room and group pool room (same mask as the scalar oracle)
+        upg = up[:, group_of]
+        ok = (fc >= c) & (um + l <= sgb[:, None]) & (upg + p <= pgb[:, None])
+        score = jnp.where(ok, fc, big)
+        s1 = jnp.argmin(score, 1).astype(jnp.int32)
+        feas1 = jnp.take_along_axis(score, s1[:, None], 1)[:, 0] < big
+        # pool short -> control-plane fallback: start the VM all-local
+        ok2 = (fc >= c) & (um + m <= sgb[:, None])
+        score2 = jnp.where(ok2, fc, big)
+        s2 = jnp.argmin(score2, 1).astype(jnp.int32)
+        feas2 = jnp.take_along_axis(score2, s2[:, None], 1)[:, 0] < big
+        sel = jnp.where(feas1, s1, s2)
+        place = feas1 | feas2
+        s_aff = jnp.where(is_arr, sel, s_cur)
+        act_arr = is_arr & place
+        act_dep = is_dep & has
+        um_s = jnp.take_along_axis(um, s_aff[:, None], 1)[:, 0]
+        act_mig = is_mig & has & (um_s + p <= sgb)   # QoS: pool -> local
+        oh = cols[None, :] == s_aff[:, None]
+        dfc = jnp.where(act_dep, c, zero) - jnp.where(act_arr, c, zero)
+        dum = (jnp.where(act_arr, jnp.where(feas1, l, m), zero)
+               - jnp.where(act_dep, jnp.where(mg_cur, m, l), zero)
+               + jnp.where(act_mig, p, zero))
+        g_aff = group_of[s_aff]
+        goh = gcols[None, :] == g_aff[:, None]
+        dup = (jnp.where(act_arr & feas1, p, zero)
+               - jnp.where(act_dep & ~mg_cur, p, zero)
+               - jnp.where(act_mig, p, zero))
+        fc = fc + oh * dfc[:, None]
+        um = um + oh * dum[:, None]
+        up = up + goh * dup[:, None]
+        aval = jnp.where(place, sel * 2 + jnp.where(feas1, 0, 1), -1)
+        new_val = jnp.where(is_arr, aval,
+                            jnp.where(is_dep, -1,
+                                      jnp.where(act_mig, val | 1, val)))
+        slots = lax.dynamic_update_index_in_dim(slots, new_val, sl, 0)
+        rejects = rejects + (is_arr & ~feas1 & ~feas2)
+        return (fc, um, up, slots, rejects, sgb, pgb, group_of), None
+
+    def sweep(evs, group_of, fc0, um0, up0, slots0, sgb, pgb):
+        init = (fc0, um0, up0, slots0,
+                jnp.zeros(sgb.shape[0], jnp.int32), sgb, pgb, group_of)
+        out, _ = lax.scan(body, init, evs)
+        return out[4]
+
+    _JAX_SWEEP = jax.jit(sweep)
+    return _JAX_SWEEP
+
+
+# ------------------------------------------------------------ statistics ---
+@dataclasses.dataclass
+class EngineStats:
+    """Aggregate replay throughput across all engines since last reset."""
+    sweeps: int = 0
+    events: int = 0               # compiled trace length per sweep
+    candidate_events: int = 0     # events x live batch width (work done)
+    wall_s: float = 0.0
+
+    @property
+    def events_per_sec(self) -> float:
+        return self.candidate_events / self.wall_s if self.wall_s else 0.0
+
+    def as_dict(self) -> dict:
+        return {"sweeps": self.sweeps, "events": self.events,
+                "candidate_events": self.candidate_events,
+                "wall_s": round(self.wall_s, 4),
+                "events_per_sec": round(self.events_per_sec, 1)}
+
+
+_STATS = EngineStats()
+
+
+def stats_reset() -> None:
+    global _STATS
+    _STATS = EngineStats()
+
+
+def stats_snapshot() -> dict:
+    return _STATS.as_dict()
+
+
+# --------------------------------------------------------------- compile ---
+def compiled_arrive_depart(vms):
+    """Arrival/departure events as sorted arrays ``(time, kind, vm_index)``.
+
+    Build order and the stable ``(time, kind)`` sort replicate the scalar
+    tuple-list construction, so downstream replays see the same sequence.
+    """
+    n = len(vms)
+    times = np.empty(2 * n)
+    times[0::2] = np.fromiter((vm.arrival for vm in vms), float, n)
+    times[1::2] = np.fromiter((vm.departure for vm in vms), float, n)
+    kinds = np.tile(np.array([ARRIVE, DEPART], np.int64), n)
+    vmidx = np.repeat(np.arange(n, dtype=np.int64), 2)
+    order = np.lexsort((kinds, times))          # stable, like list.sort
+    return times[order], kinds[order], vmidx[order]
+
+
+@dataclasses.dataclass
+class _Trajectory:
+    """One reference replay of the compiled trace.
+
+    ``server_gb is None``: cores-only replay (memory/pool unbounded) —
+    ``need_srv[e]``/``need_pool[e]`` are the least server/pool capacity
+    keeping event ``e`` admissible on this path.  ``server_gb`` set:
+    the oracle replay at (server_gb, infinite pool) — only ``need_pool``
+    is meaningful; candidates must share this exact server_gb.
+    Snapshots record state BEFORE events 0, SNAP, 2*SNAP, ...
+    """
+    server_gb: float | None
+    need_srv: np.ndarray          # (E,)
+    need_pool: np.ndarray         # (E,)
+    total_rejects: int
+    snap_rejects: np.ndarray      # (n_snap,) rejects before snapshot event
+    snap_cores: np.ndarray        # (n_snap, S) free cores
+    snap_mem: np.ndarray          # (n_snap, S) local GB in use
+    snap_pool: np.ndarray         # (n_snap, G) pool GB in use
+    srv: np.ndarray               # (V,) placement (-1 rejected/never)
+    arr_idx: np.ndarray           # (V,) arrival event index
+    dep_idx: np.ndarray           # (V,) departure event index
+    mig: np.ndarray               # (V,) departs-as-all-local flag
+    mig_idx: np.ndarray           # (V,) event index the flag was set
+
+
+class CompiledReplay:
+    """One ``(vms, decisions)`` pair compiled for batched replay sweeps."""
+
+    def __init__(self, vms, decisions, cfg):
+        self.cfg = cfg
+        self.n_vms = n = len(vms)
+        self.n_servers = n_srv = cfg.n_servers
+        self.n_groups = cfg.n_groups
+        self.group_of = np.arange(n_srv) // cfg.servers_per_group
+        self.cores_per_server = float(cfg.cores_per_server)
+        # group membership columns per server, padded with the dummy
+        # column n_srv when the last group is short (ragged n_servers)
+        spg_max = int(np.bincount(self.group_of).max())
+        self._gcols = np.full((n_srv, spg_max), n_srv, np.int64)
+        for s in range(n_srv):
+            members = np.flatnonzero(self.group_of == self.group_of[s])
+            self._gcols[s, :len(members)] = members
+
+        # per-VM payloads: python floats for the loop, packed vectors for
+        # the fused admission compare / state updates
+        self._cores = [float(vm.cores) for vm in vms]
+        self._mem = [float(vm.mem_gb) for vm in vms]
+        self._local = [float(d.local_gb) for d in decisions]
+        self._pool = [float(d.pool_gb) for d in decisions]
+        self._vec3 = [np.array([c, l, p]) for c, l, p in
+                      zip(self._cores, self._local, self._pool)]
+        self._vec2 = [v[:2] for v in self._vec3]
+        self._exact = all(
+            c.is_integer() and m.is_integer() and l.is_integer()
+            and p.is_integer()
+            for c, m, l, p in zip(self._cores, self._mem, self._local,
+                                  self._pool))
+
+        # events in the oracle's insertion order: per VM —
+        # (arrival, ARRIVE), (t_migrate, MIGRATE)?, (departure, DEPART) —
+        # then one stable lexsort by (time, kind).
+        times = np.empty(3 * n)
+        times[0::3] = np.fromiter((vm.arrival for vm in vms), float, n)
+        times[1::3] = np.fromiter(
+            (np.nan if d.t_migrate is None else d.t_migrate
+             for d in decisions), float, n)
+        times[2::3] = np.fromiter((vm.departure for vm in vms), float, n)
+        kinds = np.tile(np.array([ARRIVE, MIGRATE, DEPART], np.int64), n)
+        vmidx = np.repeat(np.arange(n, dtype=np.int64), 3)
+        keep = ~np.isnan(times)
+        times, kinds, vmidx = times[keep], kinds[keep], vmidx[keep]
+        order = np.lexsort((kinds, times))
+        self.ev_time = times[order]
+        self._ev_kind = kinds[order].tolist()
+        self._ev_vm = vmidx[order].tolist()
+        self.n_events = len(self._ev_kind)
+        self._trajs: dict[float | None, _Trajectory] = {}
+        self._jax_ev = None
+
+    # ------------------------------------------------------ XLA compile --
+    def _jax_events(self):
+        """Slot-mapped, padded int32 event arrays for the XLA sweep.
+
+        VMs are assigned reusable slots (freed on departure), so the
+        per-candidate placement state is sized by PEAK CONCURRENCY, not
+        by trace length.  Events pad to a multiple of 256 with no-op
+        events and servers/groups to multiples of 16, so the jitted
+        sweep recompiles only when the padded shapes change.
+        """
+        if self._jax_ev is not None:
+            return self._jax_ev
+        import jax.numpy as jnp
+        n_ev, n_vms, n_srv = self.n_events, self.n_vms, self.n_servers
+        slot_of = np.full(n_vms, 0, np.int64)
+        ev_slot = np.zeros(n_ev, np.int64)
+        free_slots: list[int] = []
+        next_slot = 0
+        for e in range(n_ev):
+            v = self._ev_vm[e]
+            kind = self._ev_kind[e]
+            if kind == ARRIVE:
+                if free_slots:
+                    slot_of[v] = free_slots.pop()
+                else:
+                    slot_of[v] = next_slot
+                    next_slot += 1
+            ev_slot[e] = slot_of[v]
+            if kind == DEPART:
+                free_slots.append(int(slot_of[v]))
+        n_slots = max(32, (next_slot + 31) // 32 * 32)
+        e_pad = max(256, (n_ev + 255) // 256 * 256)
+        s_pad = max(16, (n_srv + 15) // 16 * 16)
+        g_pad = max(16, (self.n_groups + 15) // 16 * 16)
+
+        def pad(vals, fill):
+            out = np.full(e_pad, fill, np.int32)
+            out[:n_ev] = vals
+            return jnp.asarray(out)
+
+        vmx = np.asarray(self._ev_vm)
+        evs = (pad(self._ev_kind, PAD), pad(ev_slot, 0),
+               pad(np.asarray(self._cores, np.int32)[vmx], 0),
+               pad(np.asarray(self._local, np.int32)[vmx], 0),
+               pad(np.asarray(self._pool, np.int32)[vmx], 0),
+               pad(np.asarray(self._mem, np.int32)[vmx], 0))
+        group_np = np.zeros(s_pad, np.int32)
+        group_np[:n_srv] = self.group_of
+        self._jax_ev = (evs, jnp.asarray(group_np), n_slots, s_pad, g_pad)
+        return self._jax_ev
+
+    def _reject_rates_jax(self, server_gb, pool_gb) -> np.ndarray:
+        """XLA sweep over the whole batch, in candidate chunks of 16/96."""
+        import jax.numpy as jnp
+        sweep = _get_jax_sweep()
+        evs, group_of, n_slots, s_pad, g_pad = self._jax_events()
+        n0 = len(server_gb)
+        rejects = np.empty(n0, np.int64)
+        # integral quantities: floor() keeps admission tests identical
+        sgb_i = np.clip(np.floor(server_gb), -_I32_BIG, _I32_BIG)
+        pgb_i = np.clip(np.floor(pool_gb), -_I32_BIG, _I32_BIG)
+        for lo in range(0, n0, JAX_CHUNK):
+            hi = min(lo + JAX_CHUNK, n0)
+            k = hi - lo
+            n_cand = 16 if k <= 16 else JAX_CHUNK
+            sgb = np.full(n_cand, sgb_i[hi - 1], np.int32)
+            pgb = np.full(n_cand, pgb_i[hi - 1], np.int32)
+            sgb[:k] = sgb_i[lo:hi]
+            pgb[:k] = pgb_i[lo:hi]
+            fc0 = np.full((n_cand, s_pad), -_I32_BIG, np.int32)
+            fc0[:, :self.n_servers] = np.int32(self.cores_per_server)
+            out = sweep(evs, group_of, jnp.asarray(fc0),
+                        jnp.zeros((n_cand, s_pad), jnp.int32),
+                        jnp.zeros((n_cand, g_pad), jnp.int32),
+                        jnp.full((n_slots, n_cand), -1, jnp.int32),
+                        jnp.asarray(sgb), jnp.asarray(pgb))
+            rejects[lo:hi] = np.asarray(out)[:k]
+        return rejects / max(self.n_vms, 1)
+
+    # --------------------------------------------- reference trajectories --
+    def _trajectory(self, server_gb: float | None) -> _Trajectory:
+        """Replay once at (server_gb or infinity, infinite pool), recording
+        admission thresholds + strided state snapshots (lean Python loop;
+        cached, so each trajectory is built one time per engine)."""
+        key = None if server_gb is None else float(server_gb)
+        cached = self._trajs.get(key)
+        if cached is not None:
+            return cached
+        bound = key is not None
+        n_srv, n_vms, n_ev = self.n_servers, self.n_vms, self.n_events
+        group_of = self.group_of.tolist()
+        cores_of, mem_of = self._cores, self._mem
+        local_of, pool_of = self._local, self._pool
+        ev_kind, ev_vm = self._ev_kind, self._ev_vm
+
+        fc = [self.cores_per_server] * n_srv
+        um = [0.0] * n_srv
+        up = [0.0] * self.n_groups
+        n_snap = n_ev // SNAP + 1
+        need_srv = np.zeros(n_ev)
+        need_pool = np.zeros(n_ev)
+        snap_rejects = np.zeros(n_snap, np.int64)
+        snap_cores = np.empty((n_snap, n_srv))
+        snap_mem = np.empty((n_snap, n_srv))
+        snap_pool = np.empty((n_snap, self.n_groups))
+        srv = np.full(n_vms, -1, np.int64)
+        arr_idx = np.full(n_vms, n_ev, np.int64)
+        dep_idx = np.full(n_vms, n_ev, np.int64)
+        mig = np.zeros(n_vms, bool)
+        mig_idx = np.full(n_vms, n_ev, np.int64)
+        live = [False] * n_vms
+        rejects = 0
+
+        for e in range(n_ev):
+            if e % SNAP == 0:
+                i = e // SNAP
+                snap_cores[i] = fc
+                snap_mem[i] = um
+                snap_pool[i] = up
+                snap_rejects[i] = rejects
+            v = ev_vm[e]
+            kind = ev_kind[e]
+            if kind == ARRIVE:
+                arr_idx[v] = e
+                c, l = cores_of[v], local_of[v]
+                best, bv = -1, _INF
+                if bound:
+                    sgb = key
+                    for s in range(n_srv):      # best fit, first min
+                        f = fc[s]
+                        if f >= c and sgb - um[s] >= l and f < bv:
+                            best, bv = s, f
+                else:
+                    for s in range(n_srv):
+                        f = fc[s]
+                        if f >= c and f < bv:
+                            best, bv = s, f
+                if best >= 0:
+                    g = group_of[best]
+                    p = pool_of[v]
+                    fc[best] -= c
+                    um[best] += l
+                    up[g] += p
+                    srv[v] = best
+                    live[v] = True
+                    need_srv[e] = um[best]
+                    need_pool[e] = up[g]
+                    continue
+                if bound:
+                    # pool can't help here (it is infinite on this path):
+                    # the oracle's all-local fallback
+                    m = mem_of[v]
+                    for s in range(n_srv):
+                        f = fc[s]
+                        if f >= c and sgb - um[s] >= m and f < bv:
+                            best, bv = s, f
+                    if best >= 0:
+                        fc[best] -= c
+                        um[best] += m
+                        srv[v] = best
+                        live[v] = True
+                        mig[v] = True           # departs as all-local
+                        mig_idx[v] = e
+                        need_srv[e] = um[best]
+                        continue
+                rejects += 1                    # binds for every candidate
+            elif kind == DEPART:
+                dep_idx[v] = e
+                if not live[v]:
+                    continue
+                live[v] = False
+                s = int(srv[v])
+                fc[s] += cores_of[v]
+                if mig[v]:
+                    um[s] -= mem_of[v]          # pool already returned
+                else:
+                    um[s] -= local_of[v]
+                    up[group_of[s]] -= pool_of[v]
+            else:                               # MIGRATE: pool -> local if
+                if not live[v] or mig[v]:       # the host has local room
+                    if live[v] and mig[v]:
+                        # oracle quirk: a fallback-placed VM can still be
+                        # "migrated" — it moves pool_gb mem->pool
+                        s = int(srv[v])
+                        p = pool_of[v]
+                        if not bound or key - um[s] >= p:
+                            um[s] += p
+                            up[group_of[s]] -= p
+                            need_srv[e] = um[s]
+                    continue
+                s = int(srv[v])
+                p = pool_of[v]
+                if not bound or key - um[s] >= p:
+                    um[s] += p
+                    up[group_of[s]] -= p
+                    mig[v] = True
+                    mig_idx[v] = e
+                    need_srv[e] = um[s]
+        traj = _Trajectory(key, need_srv, need_pool, rejects, snap_rejects,
+                           snap_cores, snap_mem, snap_pool, srv, arr_idx,
+                           dep_idx, mig, mig_idx)
+        self._trajs[key] = traj
+        return traj
+
+    # ------------------------------------------------------------- sweep --
+    def reject_rates(self, server_gb, pool_gb,
+                     reject_cap: int | None = None,
+                     backend: str = "auto") -> np.ndarray:
+        """Reject fraction for each (server_gb, pool_gb) candidate.
+
+        Accepts scalars or broadcastable 1-D arrays; one event sweep prices
+        the whole batch.  ``backend="auto"`` uses the XLA int32 sweep when
+        jax is importable and the decisions are integral GBs (bit-exact
+        either way), falling back to the numpy divergence-window sweep.
+        With ``reject_cap`` set, the numpy backend drops candidates
+        exceeding the cap mid-sweep and reports the lower bound
+        ``(reject_cap + 1) / n_vms`` — only valid for feasibility tests
+        against a tolerance below that bound (the XLA backend always
+        returns exact rates, which satisfy the same contract).
+        """
+        t0 = time.perf_counter()
+        server_gb = np.atleast_1d(np.asarray(server_gb, float))
+        pool_gb = np.atleast_1d(np.asarray(pool_gb, float))
+        server_gb, pool_gb = np.broadcast_arrays(server_gb, pool_gb)
+        n0 = len(server_gb)
+        n_srv, n_vms, n_ev = self.n_servers, self.n_vms, self.n_events
+        denom = max(n_vms, 1)
+        if not n_ev:
+            return np.zeros(n0)
+        if backend == "auto" and self._exact and _get_jax_sweep():
+            backend = "jax"
+        if backend == "jax":
+            rates = self._reject_rates_jax(server_gb, pool_gb)
+            _STATS.sweeps += 1
+            _STATS.events += n_ev
+            _STATS.candidate_events += n_ev * n0
+            _STATS.wall_s += time.perf_counter() - t0
+            return rates
+        rates = np.empty(n0)
+
+        # pick reference trajectories + first-divergence event per
+        # candidate; never-diverging candidates are priced for free
+        entries: list[tuple[int, _Trajectory | None, np.ndarray]] = []
+        if not (self._exact and n_ev):
+            entries.append((0, None, np.arange(n0)))
+            todo = np.arange(n0)
+        else:
+            uniq = np.unique(server_gb)
+            # per-size trajectories pay off only for pool-varying batches
+            # (fewer sizes than candidates) or when every size's
+            # trajectory is already cached; a server-varying batch uses
+            # the single cores-only reference instead
+            per_sgb = len(uniq) <= MAX_TRAJS and (
+                len(uniq) < n0
+                or all(float(s) in self._trajs for s in uniq))
+            divs = np.empty(n0, np.int64)
+            diverges = np.empty(n0, bool)
+            trajs: list[tuple[_Trajectory, np.ndarray]] = []
+            if per_sgb:       # pool-varying batch at few server sizes
+                for sgb in uniq:
+                    idx = np.flatnonzero(server_gb == sgb)
+                    traj = self._trajectory(float(sgb))
+                    viol = traj.need_pool[:, None] > pool_gb[idx][None, :]
+                    dv = viol.any(axis=0)
+                    divs[idx] = np.where(dv, viol.argmax(axis=0), n_ev)
+                    diverges[idx] = dv
+                    trajs.append((traj, idx))
+            else:             # server-varying batch: cores-only reference
+                traj = self._trajectory(None)
+                viol = (traj.need_srv[:, None] > server_gb[None, :]) | \
+                       (traj.need_pool[:, None] > pool_gb[None, :])
+                diverges = viol.any(axis=0)
+                divs = np.where(diverges, viol.argmax(axis=0), n_ev)
+                trajs.append((traj, np.arange(n0)))
+            for traj, idx in trajs:
+                rates[idx[~diverges[idx]]] = traj.total_rejects / denom
+            todo = np.flatnonzero(diverges)
+            if todo.size:
+                # entry waves, earliest divergence first; entry events are
+                # snapshot-aligned (entering early is exact)
+                order = todo[np.argsort(divs[todo], kind="stable")]
+                traj_of = np.empty(n0, np.int64)
+                for ti, (_, idx) in enumerate(trajs):
+                    traj_of[idx] = ti
+                for chunk in np.array_split(
+                        order, min(MAX_WAVES, len(order))):
+                    if not len(chunk):
+                        continue
+                    ev = int(divs[chunk[0]]) // SNAP * SNAP
+                    for ti in np.unique(traj_of[chunk]):
+                        g = chunk[traj_of[chunk] == ti]
+                        entries.append((ev, trajs[ti][0], g))
+                entries.sort(key=lambda w: w[0])
+                merged: list[tuple[int, _Trajectory | None, np.ndarray]] = []
+                for ev, traj, g in entries:   # merge same (event, traj)
+                    if merged and merged[-1][0] == ev \
+                            and merged[-1][1] is traj:
+                        merged[-1] = (ev, traj,
+                                      np.concatenate([merged[-1][2], g]))
+                    else:
+                        merged.append((ev, traj, g))
+                entries = merged
+
+        if not todo.size:
+            _STATS.sweeps += 1
+            _STATS.events += n_ev
+            _STATS.wall_s += time.perf_counter() - t0
+            return rates
+        if reject_cap is not None:      # default for dropped candidates
+            rates[todo] = (reject_cap + 1) / denom
+
+        free = np.empty((0, n_srv + 1, 3))
+        placed = np.empty((0, n_vms), np.int32)
+        migrated = np.empty((0, n_vms), bool)
+        rejects = np.empty(0, np.int64)
+        alive = np.empty(0, np.int64)
+        cidx = np.empty(0, np.int64)
+        clean: set = set()              # vms fast-pathed on every live row
+        gcols = self._gcols
+        vec3s, vec2s = self._vec3, self._vec2
+        cores_of, mem_of = self._cores, self._mem
+        local_of, pool_of = self._local, self._pool
+        ev_kind, ev_vm = self._ev_kind, self._ev_vm
+        cand_events = 0
+        wi = 0
+        e = entries[0][0]
+
+        while e < n_ev:
+            while wi < len(entries) and entries[wi][0] == e:
+                ev, traj, g = entries[wi]
+                wi += 1
+                k = len(g)
+                base = np.empty((k, n_srv + 1, 3))
+                if traj is None:                # virgin start at event 0
+                    base[:, :n_srv, 0] = self.cores_per_server
+                    base[:, :n_srv, 1] = server_gb[g][:, None]
+                    base[:, :n_srv, 2] = pool_gb[g][:, None]
+                    pl_t = np.full(n_vms, -1, np.int32)
+                    mg_t = np.zeros(n_vms, bool)
+                    rej0 = 0
+                else:
+                    i = ev // SNAP
+                    base[:, :n_srv, 0] = traj.snap_cores[i]
+                    base[:, :n_srv, 1] = \
+                        server_gb[g][:, None] - traj.snap_mem[i]
+                    base[:, :n_srv, 2] = \
+                        pool_gb[g][:, None] - traj.snap_pool[i][self.group_of]
+                    pl_t = np.where((traj.arr_idx < ev)
+                                    & (traj.dep_idx >= ev)
+                                    & (traj.srv >= 0), traj.srv,
+                                    -1).astype(np.int32)
+                    mg_t = (pl_t >= 0) & traj.mig & (traj.mig_idx < ev)
+                    rej0 = int(traj.snap_rejects[i])
+                base[:, n_srv, :] = -_INF
+                # the fast departure path assumes uniform placement state
+                clean -= {v for v in clean if pl_t[v] < 0 or mg_t[v]}
+                free = np.concatenate([free, base])
+                placed = np.concatenate([placed, np.tile(pl_t, (k, 1))])
+                migrated = np.concatenate([migrated, np.tile(mg_t, (k, 1))])
+                rejects = np.concatenate(
+                    [rejects, np.full(k, rej0, np.int64)])
+                alive = np.concatenate([alive, g])
+                cidx = np.arange(len(alive))
+            cand_events += len(alive)
+            v = ev_vm[e]
+            kind = ev_kind[e]
+            if kind == DEPART:
+                if v in clean:                   # all rows placed, none
+                    s = placed[:, v]             # migrated
+                    free[cidx, s, :2] += vec2s[v]
+                    p = pool_of[v]
+                    if p > 0.0:
+                        free[cidx[:, None], gcols[s], 2] += p
+                    placed[:, v] = -1
+                    clean.discard(v)
+                    e += 1
+                    continue
+                s = placed[:, v]
+                rows = cidx[s >= 0]
+                if rows.size:
+                    sv = s[rows]
+                    mg = migrated[rows, v]
+                    free[rows, sv, 0] += cores_of[v]
+                    free[rows, sv, 1] += np.where(mg, mem_of[v],
+                                                  local_of[v])
+                    free[rows[:, None], gcols[sv], 2] += \
+                        np.where(mg, 0.0, pool_of[v])[:, None]
+                    migrated[rows, v] = False
+                placed[:, v] = -1
+                e += 1
+                continue
+            if kind == MIGRATE:
+                # QoS mitigation: copy the pooled GBs back to local if the
+                # host has room (§4.3); the VM then departs as all-local.
+                p = pool_of[v]
+                s = placed[:, v]
+                rows = cidx[s >= 0]
+                if rows.size:
+                    sv = s[rows]
+                    room = free[rows, sv, 1] >= p
+                    rows, sv = rows[room], sv[room]
+                    if rows.size:
+                        free[rows, sv, 1] -= p
+                        free[rows[:, None], gcols[sv], 2] += p
+                        migrated[rows, v] = True
+                        clean.discard(v)
+                e += 1
+                continue
+            # ---- ARRIVE: best fit by cores among servers whose free local
+            # memory fits; pool checked per group (same mask as the oracle,
+            # fused into one packed compare).
+            vec3 = vec3s[v]
+            ok = (free >= vec3).all(-1)                  # (C, S+1)
+            score = np.where(ok, free[:, :, 0], _INF)
+            s = score.argmin(1)
+            best = score[cidx, s]
+            p = pool_of[v]
+            if not np.isinf(best.max(initial=-_INF)):
+                free[cidx, s, :2] -= vec2s[v]
+                if p > 0.0:
+                    free[cidx[:, None], gcols[s], 2] -= p
+                placed[:, v] = s
+                clean.add(v)
+                e += 1
+                continue
+            infeas = np.isinf(best)
+            rows = cidx[~infeas]
+            if rows.size:
+                sv = s[rows]
+                free[rows, sv, :2] -= vec2s[v]
+                if p > 0.0:
+                    free[rows[:, None], gcols[sv], 2] -= p
+                placed[rows, v] = sv
+            # pool short -> control-plane fallback: start the VM all-local
+            # (§4.3: VM starts never block on the pool)
+            bad = cidx[infeas]
+            c, m = cores_of[v], mem_of[v]
+            sub = free[bad]                              # (B, S+1, 3)
+            ok2 = (sub[:, :, 0] >= c) & (sub[:, :, 1] >= m)
+            score2 = np.where(ok2, sub[:, :, 0], _INF)
+            s2 = score2.argmin(1)
+            inf2 = np.isinf(score2[np.arange(len(bad)), s2])
+            rows2 = bad[~inf2]
+            if rows2.size:
+                sv2 = s2[~inf2]
+                free[rows2, sv2, 0] -= c
+                free[rows2, sv2, 1] -= m
+                placed[rows2, v] = sv2
+                migrated[rows2, v] = True    # departs as all-local
+            rej = bad[inf2]
+            if rej.size:
+                rejects[rej] += 1
+                if reject_cap is not None:
+                    over = rejects > reject_cap
+                    if over.any():           # compact decided candidates
+                        keep = ~over
+                        alive = alive[keep]
+                        free = free[keep]
+                        placed = placed[keep]
+                        migrated = migrated[keep]
+                        rejects = rejects[keep]
+                        cidx = np.arange(len(alive))
+                        if not len(alive):
+                            if wi < len(entries):  # skip to next wave
+                                e = entries[wi][0]
+                                continue
+                            break
+            e += 1
+
+        rates[alive] = rejects / denom
+        _STATS.sweeps += 1
+        _STATS.events += n_ev
+        _STATS.candidate_events += cand_events
+        _STATS.wall_s += time.perf_counter() - t0
+        return rates
+
+
+# ---------------------------------------------------------------- search ---
+def search_min_batched(feasible, lo: float, hi: float,
+                       tol_frac: float = 0.02, depth: int = 4) -> float:
+    """Batched replica of the scalar ``cluster_sim._search_min`` bisection.
+
+    Reject rates near the feasibility boundary are NOT perfectly monotone
+    (placement cascades), so a different probe sequence can legitimately
+    land on a different feasible point.  To keep results bit-identical to
+    the scalar oracle search, each round evaluates the full depth-k tree
+    of dyadic bisection midpoints (computed with the same ``0.5*(lo+hi)``
+    float arithmetic the scalar uses) in ONE batched sweep — round 1 also
+    prices ``hi`` itself — then walks the k bisection decisions locally.
+    One sweep thus advances k sequential bisection steps."""
+    nodes: list[float] = []
+
+    def expand(a: float, b: float, d: int) -> None:
+        m = 0.5 * (a + b)
+        nodes.append(m)
+        if d > 1:
+            expand(a, m, d - 1)
+            expand(m, b, d - 1)
+
+    first = True
+    while (hi - lo) > tol_frac * max(hi, 1.0) or first:
+        nodes.clear()
+        expand(lo, hi, depth)
+        probes = nodes + [hi] if first else list(nodes)
+        feas = np.asarray(feasible(np.array(probes)))
+        if first:
+            if not feas[-1]:
+                return hi
+            first = False
+        fmap = dict(zip(probes, feas.tolist()))
+        for _ in range(depth):
+            if (hi - lo) <= tol_frac * max(hi, 1.0):
+                break
+            mid = 0.5 * (lo + hi)
+            if fmap[mid]:
+                hi = mid
+            else:
+                lo = mid
+    return hi
+
+
+def pool_search_batched(engine: CompiledReplay, server_grid: np.ndarray,
+                        big_pool: float, tol: float, tol_frac: float = 0.02,
+                        width: int = 12,
+                        reject_cap: int | None = None) -> np.ndarray:
+    """Minimum feasible pool_gb for EVERY server-size point, in lockstep.
+
+    Replaces the per-point independent binary searches with a batched
+    bracketing search.  The infinite-pool trajectory at each server size
+    (already cached by the engine) supplies the starting bracket for
+    free: its peak pool demand is always feasible (the replay never
+    diverges from it), and its reject count decides outright whether the
+    point is feasible at any pool size.  Each round then evaluates
+    ``width`` interior points for every unconverged point in ONE sweep.
+    Because the required pool is monotone (non-increasing) in server_gb,
+    every round warm-starts each point's bracket from its neighbors:
+    upper brackets propagate left-to-right (``min.accumulate`` over
+    increasing server sizes) and lower brackets right-to-left.  Points
+    infeasible even at ``big_pool`` return ``big_pool``."""
+    server_grid = np.asarray(server_grid, float)
+    n_pts = len(server_grid)
+    denom = max(engine.n_vms, 1)
+    lo = np.zeros(n_pts)
+    hi = np.empty(n_pts)
+    infeasible = np.zeros(n_pts, bool)
+    for i, sgb in enumerate(server_grid):
+        traj = engine._trajectory(float(sgb))
+        hi[i] = min(float(big_pool),
+                    float(traj.need_pool.max(initial=0.0)))
+        infeasible[i] = traj.total_rejects / denom > tol
+    fracs = np.arange(1, width + 1) / (width + 1.0)
+    while True:
+        # neighbor warm start between FEASIBLE points only: an infeasible
+        # point's (meaningless) brackets must not clamp its neighbors'
+        prop_hi = np.minimum.accumulate(np.where(infeasible, _INF, hi))
+        hi = np.where(infeasible, hi, np.minimum(hi, prop_hi))
+        prop_lo = np.maximum.accumulate(
+            np.where(infeasible, -_INF, lo)[::-1])[::-1]
+        lo = np.where(infeasible, lo, np.maximum(lo, prop_lo))
+        active = ~infeasible & ((hi - lo) > tol_frac * np.maximum(hi, 1.0))
+        if not active.any():
+            break
+        ai = np.flatnonzero(active)
+        grids = lo[ai, None] + (hi - lo)[ai, None] * fracs[None, :]
+        r = engine.reject_rates(
+            np.repeat(server_grid[ai], width), grids.ravel(),
+            reject_cap=reject_cap).reshape(len(ai), width)
+        f = r <= tol
+        for j, i in enumerate(ai):
+            row = f[j]
+            if row.any():
+                k = int(np.argmax(row))
+                if k > 0:
+                    lo[i] = grids[j, k - 1]
+                hi[i] = grids[j, k]
+            else:
+                lo[i] = grids[j, -1]
+    hi[infeasible] = big_pool
+    return hi

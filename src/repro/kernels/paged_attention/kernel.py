@@ -37,28 +37,34 @@ def _kernel(table_ref, lens_ref, q_ref, kp_ref, vp_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0, 0].astype(jnp.float32)               # (G, d)
-    k = kp_ref[0, 0].astype(jnp.float32)              # (page, d)
-    v = vp_ref[0, 0].astype(jnp.float32)
-    logits = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * scale   # (G, page)
-
     seq_len = lens_ref[b]
-    pos = pi * page_size + jax.lax.broadcasted_iota(
-        jnp.int32, logits.shape, 1)
-    logits = jnp.where(pos < seq_len, logits, NEG_INF)
 
-    m_prev = m_scr[...]
-    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
-    p = jnp.exp(logits - m_new[:, None])
-    corr = jnp.exp(m_prev - m_new)
-    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
-    acc_scr[...] = (acc_scr[...] * corr[:, None]
-                    + jax.lax.dot_general(
-                        p, v, (((1,), (0,)), ((), ())),
-                        preferred_element_type=jnp.float32))
-    m_scr[...] = m_new
+    # pages entirely beyond seq_len are padding (block table fills with
+    # page 0): their logits would be fully masked anyway, so skip the two
+    # dot-products and the softmax update outright.
+    @pl.when(pi * page_size < seq_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (G, d)
+        k = kp_ref[0, 0].astype(jnp.float32)          # (page, d)
+        v = vp_ref[0, 0].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, page)
+
+        pos = pi * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, 1)
+        logits = jnp.where(pos < seq_len, logits, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+        p = jnp.exp(logits - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
 
     @pl.when(pi == pl.num_programs(2) - 1)
     def _finalize():

@@ -155,9 +155,11 @@ def _operand_names(rest: str) -> list[str]:
         cur_tok += ch
         i += 1
     for tok in cur_tok.split(","):
-        tok = tok.strip()
-        if tok.startswith("%"):
-            out.append(tok[1:])
+        # older HLO text prefixes each operand with its type
+        # ("s32[] %constant.24"); newer emits the bare "%constant.24"
+        m = re.search(r"%([\w\.\-]+)", tok)
+        if m:
+            out.append(m.group(1))
     return out
 
 

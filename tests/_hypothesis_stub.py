@@ -1,0 +1,122 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The property tests in this suite only use a small strategy vocabulary
+(integers, sampled_from, booleans, floats, lists, tuples).  This module
+re-implements just enough of the ``given``/``settings``/``strategies``
+surface to run each property as a fixed, seeded sweep of examples:
+example ``i`` draws every strategy from ``numpy.random.default_rng(i)``,
+so failures reproduce exactly across runs.  No shrinking, no databases —
+if an example fails, rerun with the same seed index.
+
+Usage (at the top of a test module)::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_stub import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import inspect
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._sample(rng)))
+
+    def filter(self, pred, _tries: int = 100):
+        def sample(rng):
+            for _ in range(_tries):
+                x = self._sample(rng)
+                if pred(x):
+                    return x
+            raise ValueError("filter predicate never satisfied")
+        return _Strategy(sample)
+
+
+class strategies:
+    """Mirror of ``hypothesis.strategies`` for the subset the suite uses."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        items = list(seq)
+        return _Strategy(lambda rng: items[int(rng.integers(len(items)))])
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0,
+               **_kw) -> _Strategy:
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def sample(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elements._sample(rng) for _ in range(size)]
+        return _Strategy(sample)
+
+    @staticmethod
+    def tuples(*elements: _Strategy) -> _Strategy:
+        return _Strategy(
+            lambda rng: tuple(e._sample(rng) for e in elements))
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Records max_examples on the (already-wrapped) test function."""
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Runs the test once per example with deterministically drawn values.
+
+    Like hypothesis, positional strategies map to the test's rightmost
+    parameters; remaining parameters stay visible to pytest as fixtures.
+    """
+    def deco(fn):
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        n_pos = len(arg_strategies)
+        pos_names = names[len(names) - n_pos:] if n_pos else []
+        generated = set(pos_names) | set(kw_strategies)
+        fixture_names = [n for n in names if n not in generated]
+
+        def wrapper(**fixture_kwargs):
+            n_examples = getattr(wrapper, "_stub_max_examples",
+                                 DEFAULT_MAX_EXAMPLES)
+            for example in range(n_examples):
+                rng = np.random.default_rng(example)
+                values = dict(fixture_kwargs)
+                for name, strat in zip(pos_names, arg_strategies):
+                    values[name] = strat._sample(rng)
+                for name, strat in kw_strategies.items():
+                    values[name] = strat._sample(rng)
+                fn(**values)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__signature__ = inspect.Signature(
+            [sig.parameters[n] for n in fixture_names])
+        wrapper._stub_max_examples = DEFAULT_MAX_EXAMPLES
+        return wrapper
+    return deco

@@ -45,9 +45,9 @@ step0 = rt.jit_train_step(model, ocfg, ctx0, donate=False)
 p0b, o0b, m0 = step0(p0, o0, {"tokens": jnp.asarray(batch_np)})
 loss0 = float(m0["loss"])
 
-# sharded: 2x4 mesh
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+# sharded: 2x4 mesh (version-portable helper: AxisType is jax >= 0.5)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 ctx = ShardCtx(mesh=mesh, pod_axis=None)
 rules = default_rules(ctx, mode="train")
 pspec = partition_tree(model.specs(), rules, mesh)
@@ -65,8 +65,7 @@ out["loss_sharded"] = loss1
 import tempfile
 with tempfile.TemporaryDirectory() as d:
     ckpt.save(d, 1, p1b)
-    mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2 = make_mesh((4, 2), ("data", "model"))
     ctx2 = ShardCtx(mesh=mesh2, pod_axis=None)
     psh2 = jax.tree.map(lambda s: NamedSharding(mesh2, s),
                         partition_tree(model.specs(),

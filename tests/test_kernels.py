@@ -1,10 +1,15 @@
 """Pallas kernel validation: interpret-mode execution against the pure-jnp
-oracles, shape/dtype sweeps via hypothesis."""
+oracles, shape/dtype sweeps via hypothesis (or the deterministic stub
+when hypothesis is not installed)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention.kernel import flash_attention_kernel

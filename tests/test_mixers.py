@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.configs.base import (ArchConfig, Block, LayerGroup, MLAConfig,
                                 MoEConfig, SSMConfig)
@@ -122,8 +125,8 @@ def test_moe_sharded_matches_dense_degenerate_mesh(shared):
     x = jax.random.normal(jax.random.key(1), (2, 8, 32), jnp.float32)
     yd, auxd = jax.jit(lambda p, xx: moe_mod.moe_dense(p, xx, cfg))(
         params, x)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     ctx = ShardCtx(mesh=mesh, pod_axis=None)
     ys, auxs = jax.jit(lambda p, xx: moe_mod.moe_sharded(p, xx, cfg, ctx))(
         params, x)
@@ -144,8 +147,8 @@ def test_moe_capacity_drops_tokens():
                           materialize(moe_mod.moe_specs(cfg),
                                       jax.random.key(0)))
     x = jax.random.normal(jax.random.key(1), (4, 32, 32), jnp.float32)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     ctx = ShardCtx(mesh=mesh, pod_axis=None)
     ys, _ = jax.jit(lambda p, xx: moe_mod.moe_sharded(
         p, xx, cfg, ctx, capacity_factor=0.1))(params, x)

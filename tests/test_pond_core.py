@@ -2,7 +2,10 @@
 manager flows, EMC blast radius, zNUMA bias, latency model (Fig 7/8)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core import latency_model as lm
 from repro.core.pool_manager import PoolManager

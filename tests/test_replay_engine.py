@@ -1,0 +1,163 @@
+"""Batched replay engine vs the scalar oracle: bit-exact equivalence.
+
+The engine (core/replay_engine.py) must reproduce
+``cluster_sim.replay_reject_rate`` EXACTLY — same event order, tie-breaks
+and float semantics — on both its backends (XLA int32 sweep and numpy
+divergence-window sweep), across trace seeds and policies, including
+QoS-migration events and the all-local fallback path (tight pools force
+it).  The engine-backed ``savings_analysis`` must agree with the
+scalar-oracle search within search tolerance.
+"""
+import numpy as np
+import pytest
+
+from repro.core import cluster_sim, replay_engine, traces
+from repro.core.control_plane import ControlPlane, ControlPlaneConfig
+from repro.core.pool_manager import PoolManager
+from repro.core.predictors.models import (LatencySensitivityModel,
+                                          UntouchedMemoryModel)
+
+HORIZON = 4 * 86400
+CFG = cluster_sim.ClusterConfig(n_servers=8, pool_sockets=8,
+                                gb_per_core=4.75)
+
+
+@pytest.fixture(scope="module")
+def models():
+    pop = traces.Population(seed=0)
+    train = pop.sample_vms(500, HORIZON, seed=11)
+    li = LatencySensitivityModel(pdm=0.05).fit(
+        traces.pmu_matrix(train), traces.slowdowns(train, 182))
+    hist = traces.build_history(train)
+    um = UntouchedMemoryModel(0.05).fit(
+        traces.metadata_features(train, hist),
+        np.array([v.untouched for v in train]))
+    return li, um, hist
+
+
+def _world(seed: int, policy: str, models):
+    pop = traces.Population(seed=0)
+    n = cluster_sim.arrivals_for_util(CFG, 0.8, HORIZON)
+    vms = pop.sample_vms(n, HORIZON, seed=seed, start_id=10 ** 6)
+    if policy == "pond":
+        li, um, hist = models
+        cp = ControlPlane(
+            ControlPlaneConfig(li_threshold=0.05, um_quantile=0.05),
+            li, um, PoolManager(pool_gb=4096, buffer_gb=64),
+            history=dict(hist))
+    else:
+        cp = None
+    decisions, _ = cluster_sim.policy_decisions(
+        vms, policy, cp, static_pool_frac=0.25)
+    return vms, decisions
+
+
+# candidate frontier: hi-capacity, mid, tight-local, zero pool (forces the
+# all-local fallback for every pooled VM), tight pool, infeasible
+_SERVER = np.array([768.0, 200.0, 140.0, 250.0, 180.0, 60.0, 219.7, 0.0])
+_POOL = np.array([6144.0, 300.0, 150.0, 0.0, 40.0, 6144.0, 83.3, 100.0])
+
+
+@pytest.mark.parametrize("policy", ["static", "pond"])
+@pytest.mark.parametrize("seed", [3, 4, 5])
+def test_engine_matches_scalar_oracle_exactly(seed, policy, models):
+    vms, decisions = _world(seed, policy, models)
+    if policy == "pond":
+        # the trace must exercise QoS-migration events
+        assert any(d.t_migrate is not None for d in decisions)
+    assert any(d.pool_gb > 0 for d in decisions)
+    eng = replay_engine.CompiledReplay(vms, decisions, CFG)
+    oracle = np.array([
+        cluster_sim.replay_reject_rate(vms, decisions, CFG, s, p)
+        for s, p in zip(_SERVER, _POOL)])
+    got_auto = eng.reject_rates(_SERVER, _POOL)
+    assert got_auto.tolist() == oracle.tolist()
+    got_np = eng.reject_rates(_SERVER, _POOL, backend="numpy")
+    assert got_np.tolist() == oracle.tolist()
+
+
+def test_reject_cap_preserves_feasibility_classification(models):
+    vms, decisions = _world(3, "static", models)
+    eng = replay_engine.CompiledReplay(vms, decisions, CFG)
+    oracle = eng.reject_rates(_SERVER, _POOL)
+    tol = float(oracle.min()) + 0.005
+    cap = int(np.floor(tol * len(vms)))
+    capped = eng.reject_rates(_SERVER, _POOL, reject_cap=cap,
+                              backend="numpy")
+    assert ((capped <= tol) == (oracle <= tol)).all()
+
+
+def test_scalar_broadcast_and_single_candidate(models):
+    vms, decisions = _world(4, "static", models)
+    eng = replay_engine.CompiledReplay(vms, decisions, CFG)
+    one = eng.reject_rates(250.0, 100.0)
+    assert one.shape == (1,)
+    assert one[0] == cluster_sim.replay_reject_rate(
+        vms, decisions, CFG, 250.0, 100.0)
+
+
+def test_search_min_batched_replicates_scalar_bisection(models):
+    vms, decisions = _world(5, "static", models)
+    eng = replay_engine.CompiledReplay(vms, decisions, CFG)
+    big_pool = 768.0 * CFG.n_servers
+    tol = float(eng.reject_rates(768.0, big_pool)[0]) + 0.005
+    got = replay_engine.search_min_batched(
+        lambda g: eng.reject_rates(g, big_pool) <= tol, 0.0, 768.0)
+    want = cluster_sim._search_min(
+        lambda g: cluster_sim.replay_reject_rate(
+            vms, decisions, CFG, g, big_pool) <= tol, 0.0, 768.0)
+    assert got == want          # bitwise: same probes, same outcomes
+
+
+@pytest.mark.parametrize("policy", ["local", "static"])
+def test_savings_analysis_matches_scalar_search(policy, models):
+    vms, _ = _world(3, "static", models)
+    r_eng = cluster_sim.savings_analysis(vms, CFG, policy,
+                                         static_pool_frac=0.25)
+    r_sc = cluster_sim.savings_analysis(vms, CFG, policy,
+                                        static_pool_frac=0.25,
+                                        use_engine=False)
+    # server searches replicate the scalar bisection bit-for-bit
+    assert r_eng.baseline_server_gb == r_sc.baseline_server_gb
+    assert r_eng.server_gb == r_sc.server_gb
+    # the pool search uses a different (batched, warm-started) probe
+    # sequence, and reject rates are not perfectly monotone near the
+    # boundary: both searches land on feasible points whose totals — and
+    # hence savings — agree within the search tolerance
+    assert abs(r_eng.pool_group_gb - r_sc.pool_group_gb) <= \
+        0.15 * max(r_sc.pool_group_gb, 1.0) + 32.0
+    assert abs(r_eng.savings - r_sc.savings) <= 0.02
+    if policy == "local":
+        # reject_rate for 'local' is the cores-bound floor r0
+        assert r_eng.reject_rate == r_sc.reject_rate
+    else:
+        # the reported rate IS the oracle's rate at the solution
+        decisions, _ = cluster_sim.policy_decisions(
+            vms, policy, static_pool_frac=0.25)
+        rr = cluster_sim.replay_reject_rate(
+            vms, decisions, CFG, r_eng.server_gb, r_eng.pool_group_gb)
+        assert rr == r_eng.reject_rate
+
+
+def test_compiled_arrive_depart_matches_tuple_sort(models):
+    vms, _ = _world(4, "static", models)
+    times, kinds, vmidx = replay_engine.compiled_arrive_depart(vms)
+    events = []
+    for i, vm in enumerate(vms):
+        events.append((vm.arrival, 0, i))
+        events.append((vm.departure, 1, i))
+    events.sort(key=lambda e: (e[0], e[1]))
+    assert times.tolist() == [e[0] for e in events]
+    assert kinds.tolist() == [e[1] for e in events]
+    assert vmidx.tolist() == [e[2] for e in events]
+
+
+def test_engine_stats_accumulate(models):
+    vms, decisions = _world(3, "static", models)
+    eng = replay_engine.CompiledReplay(vms, decisions, CFG)
+    replay_engine.stats_reset()
+    eng.reject_rates(np.array([200.0, 300.0]), np.array([100.0, 200.0]))
+    s = replay_engine.stats_snapshot()
+    assert s["sweeps"] == 1
+    assert s["events"] == eng.n_events
+    assert s["candidate_events"] > 0
