@@ -94,6 +94,18 @@ def replay_table(path: str = "experiments/BENCH_replay.json") -> str:
         f"{r.get('events_per_sec', '—')} | "
         f"{r.get('replay_speedup_vs_scalar', '—')}x | "
         f"{'PASS' if r.get('claims_pass') else 'FAIL'} |")
+    if r.get("batched_k"):
+        lines += ["", "### Multi-trace batch (one vmapped sweep vs "
+                  "per-seed engine loop)", "",
+                  "| K seeds | narrow-probe speedup | frontier speedup | "
+                  "batched cand-events/s | bit-exact |",
+                  "|---|---|---|---|---|",
+                  f"| {r['batched_k']} | "
+                  f"{r.get('batched_speedup_vs_seed_loop', '—')}x "
+                  f"({r.get('batched_speedup_shape', '')}) | "
+                  f"{r.get('batched_frontier_speedup', '—')}x | "
+                  f"{r.get('batched_events_per_sec', '—')} | "
+                  f"{'yes' if r.get('batched_bit_exact') else 'NO'} |"]
     return "\n".join(lines)
 
 

@@ -33,11 +33,20 @@ MODULES = [
 
 
 def perf_smoke():
-    """Time the fig3 quick path; emit experiments/BENCH_replay.json."""
+    """Time the fig3 quick path; emit experiments/BENCH_replay.json.
+
+    Alongside the single-trace engine numbers this records the
+    multi-trace batch benchmark: the K=8 seed batch priced in ONE
+    vmapped sweep vs looping the engine per seed, on a 16-point frontier
+    and on the narrow 2-probe shape (bracket checks / final rates) where
+    per-seed sweeps are fixed-cost-dominated.
+    """
     from benchmarks import fig3_poolsize
     t0 = time.time()
     res = fig3_poolsize.run(quick=True)
     wall = time.time() - t0
+    batched = res.get("batched", {})
+    narrow = batched.get("narrow2", {})
     bench = {
         "benchmark": "fig3_poolsize.quick",
         "wall_s": round(wall, 3),
@@ -45,14 +54,25 @@ def perf_smoke():
         "events_per_sec": res.get("engine", {}).get("events_per_sec"),
         "candidate_events": res.get("engine", {}).get("candidate_events"),
         "replay_speedup_vs_scalar": res.get("replay_speedup"),
+        "batched_k": batched.get("k"),
+        "batched_bit_exact": all(
+            batched.get(s, {}).get("bit_exact", False)
+            for s in ("frontier16", "narrow2")),
+        "batched_speedup_vs_seed_loop": narrow.get("speedup"),
+        "batched_speedup_shape": "narrow2 (2 probes/seed)",
+        "batched_frontier_speedup": batched.get("frontier16",
+                                                {}).get("speedup"),
+        "batched_events_per_sec": batched.get("frontier16",
+                                              {}).get("events_per_sec"),
         "claims_pass": all(c["ok"] for c in res.get("claims", [])),
     }
     os.makedirs("experiments", exist_ok=True)
     with open("experiments/BENCH_replay.json", "w") as f:
         json.dump(bench, f, indent=1)
     print(f"perf-smoke: {wall:.1f}s wall, "
-          f"{bench['events_per_sec']} candidate-events/s "
-          f"-> experiments/BENCH_replay.json")
+          f"{bench['events_per_sec']} candidate-events/s, batched K="
+          f"{bench['batched_k']} {bench['batched_speedup_vs_seed_loop']}x"
+          f" vs seed loop -> experiments/BENCH_replay.json")
     return bench
 
 

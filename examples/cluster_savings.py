@@ -1,12 +1,20 @@
 """Paper Fig 21 in miniature: DRAM savings of Pond vs static vs all-local,
 priced on the event-compiled batched replay engine.
 
-The demo also shows the engine API directly: compile a (vms, decisions)
-pair once, then price a whole frontier of (server_gb, pool_gb)
-candidates in one event sweep.
+The demo shows the engine API directly: compile a (vms, decisions) pair
+once, price a whole frontier of (server_gb, pool_gb) candidates in one
+event sweep, then batch several trace seeds into ONE vmapped sweep and
+report mean ± spread savings across the seed batch.
 
   PYTHONPATH=src python examples/cluster_savings.py
+  PYTHONPATH=src python examples/cluster_savings.py --seeds 4
+  PYTHONPATH=src python examples/cluster_savings.py \\
+      --trace-file path/to/trace.csv        # real-trace replay
+      (columns: arrival, lifetime, cores, mem_gb — Azure public-trace
+       spellings like vmcreated/vmdeleted/vmcorecount are aliased; try
+       the bundled fixture via --trace-file fixture)
 """
+import argparse
 import time
 
 import numpy as np
@@ -18,30 +26,7 @@ from repro.core.predictors.models import (LatencySensitivityModel,
                                           UntouchedMemoryModel)
 
 
-def main():
-    horizon = 5 * 86400
-    cfg = cluster_sim.ClusterConfig(n_servers=16, pool_sockets=16,
-                                    gb_per_core=4.75)
-    pop = traces.Population(seed=0)
-    n = cluster_sim.arrivals_for_util(cfg, 0.8, horizon)
-    vms = pop.sample_vms(n, horizon, seed=2, start_id=10 ** 6)
-
-    # --- 1. price one candidate frontier in a single compiled sweep ----
-    decisions, _ = cluster_sim.policy_decisions(vms, "static",
-                                                static_pool_frac=0.15)
-    eng = replay_engine.CompiledReplay(vms, decisions, cfg)
-    server_gb = np.linspace(200.0, 400.0, 9)
-    pool_gb = np.linspace(0.0, 800.0, 9)
-    eng.reject_rates(server_gb, pool_gb)        # warm the XLA compile
-    t0 = time.perf_counter()
-    rates = eng.reject_rates(server_gb, pool_gb)
-    dt = time.perf_counter() - t0
-    print(f"one sweep priced {len(rates)} (server_gb, pool_gb) candidates "
-          f"in {dt * 1e3:.0f}ms over {eng.n_events} events:")
-    for s, p, r in zip(server_gb, pool_gb, rates):
-        print(f"  server={s:5.0f}GB pool={p:5.0f}GB -> reject {r:.4f}")
-
-    # --- 2. full provisioning searches, engine-backed -------------------
+def _models(pop, horizon):
     train = pop.sample_vms(1200, horizon, seed=1)
     li = LatencySensitivityModel(pdm=0.05).fit(
         traces.pmu_matrix(train), traces.slowdowns(train, 182))
@@ -49,27 +34,103 @@ def main():
     um = UntouchedMemoryModel(0.05).fit(
         traces.metadata_features(train, hist),
         np.array([v.untouched for v in train]))
+    return li, um, hist
 
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace-file", default=None,
+                    help="replay a real VM trace file (CSV/parquet with "
+                         "arrival, lifetime, cores, mem_gb columns; "
+                         "'fixture' uses the bundled miniature trace)")
+    ap.add_argument("--seeds", type=int, default=3,
+                    help="synthetic trace seeds priced in one batched "
+                         "sweep (ignored with --trace-file)")
+    ap.add_argument("--servers", type=int, default=None,
+                    help="cluster size (default 16, or 4 for the small "
+                         "fixture trace)")
+    args = ap.parse_args(argv)
+
+    horizon = 5 * 86400
+    pop = traces.Population(seed=0)
+    if args.trace_file:
+        path = traces.fixture_trace_path() \
+            if args.trace_file == "fixture" else args.trace_file
+        vms_list = [traces.load_trace_file(path)]
+        n_servers = args.servers or \
+            (4 if path == traces.fixture_trace_path() else 16)
+        label = path
+    else:
+        cfg0 = cluster_sim.ClusterConfig(n_servers=args.servers or 16)
+        n = cluster_sim.arrivals_for_util(cfg0, 0.8, horizon)
+        vms_list = [pop.sample_vms(n, horizon, seed=2 + i,
+                                   start_id=10 ** 6)
+                    for i in range(args.seeds)]
+        n_servers = args.servers or 16
+        label = f"{args.seeds} synthetic seeds"
+    cfg = cluster_sim.ClusterConfig(n_servers=n_servers, pool_sockets=16,
+                                    gb_per_core=4.75)
+
+    # --- 1. price one candidate frontier in a single compiled sweep ----
+    decisions, _ = cluster_sim.policy_decisions(vms_list[0], "static",
+                                                static_pool_frac=0.15)
+    eng = replay_engine.CompiledReplay(vms_list[0], decisions, cfg)
+    hi = cfg.cores_per_server * 6.0      # per-server DRAM probe ceiling
+    server_gb = np.linspace(hi * 0.5, hi, 9)
+    pool_gb = np.linspace(0.0, 2.0 * hi, 9)
+    eng.reject_rates(server_gb, pool_gb)        # warm the XLA compile
+    t0 = time.perf_counter()
+    rates = eng.reject_rates(server_gb, pool_gb)
+    dt = time.perf_counter() - t0
+    print(f"[{label}] one sweep priced {len(rates)} (server_gb, pool_gb) "
+          f"candidates in {dt * 1e3:.0f}ms over {eng.n_events} events:")
+    for s, p, r in zip(server_gb, pool_gb, rates):
+        print(f"  server={s:5.0f}GB pool={p:5.0f}GB -> reject {r:.4f}")
+
+    # --- 2. multi-trace batch: K seeds in ONE vmapped sweep ------------
+    if len(vms_list) > 1:
+        engines = [replay_engine.CompiledReplay(
+            v, cluster_sim.policy_decisions(v, "static",
+                                            static_pool_frac=0.15)[0],
+            cfg) for v in vms_list]
+        batch = replay_engine.CompiledReplayBatch(engines)
+        batch.reject_rates(server_gb, pool_gb)  # warm
+        t0 = time.perf_counter()
+        br = batch.reject_rates(server_gb, pool_gb)
+        dt = time.perf_counter() - t0
+        print(f"\nbatched sweep priced {br.shape[0]} traces x "
+              f"{br.shape[1]} candidates in {dt * 1e3:.0f}ms "
+              f"(reject mean±std across seeds):")
+        for j, (s, p) in enumerate(zip(server_gb, pool_gb)):
+            print(f"  server={s:5.0f}GB pool={p:5.0f}GB -> "
+                  f"{br[:, j].mean():.4f}±{br[:, j].std():.4f}")
+
+    # --- 3. full provisioning searches, engine-backed ------------------
+    li, um, hist = _models(pop, horizon)
     replay_engine.stats_reset()
     cache: dict = {}
     t0 = time.perf_counter()
-    r_local = cluster_sim.savings_analysis(vms, cfg, "local", cache=cache)
-    r_static = cluster_sim.savings_analysis(vms, cfg, "static",
-                                            static_pool_frac=0.15,
-                                            cache=cache)
-    cp = ControlPlane(
+    r_local = cluster_sim.savings_analysis_batched(
+        vms_list, cfg, "local", cache=cache)
+    r_static = cluster_sim.savings_analysis_batched(
+        vms_list, cfg, "static", static_pool_frac=0.15, cache=cache)
+    cps = [ControlPlane(
         ControlPlaneConfig(li_threshold=0.05, um_quantile=0.05), li, um,
         PoolManager(pool_gb=4096, buffer_gb=64), history=dict(hist))
-    r_pond = cluster_sim.savings_analysis(vms, cfg, "pond",
-                                          control_plane=cp, cache=cache)
+        for _ in vms_list]
+    r_pond = cluster_sim.savings_analysis_batched(
+        vms_list, cfg, "pond", control_planes=cps, cache=cache)
     dt = time.perf_counter() - t0
     stats = replay_engine.stats_snapshot()
-    print(f"\nthree policy searches in {dt:.2f}s "
-          f"({stats['events_per_sec']:.0f} candidate-events/s):")
-    for r in (r_local, r_static, r_pond):
-        print(f"  {r.name:6s}: server={r.server_gb:5.1f}GB "
-              f"pool/group={r.pool_group_gb:6.1f}GB "
-              f"savings={r.savings:+.3f} reject={r.reject_rate:.4f}")
+    print(f"\nthree policy searches x {len(vms_list)} trace(s) in "
+          f"{dt:.2f}s ({stats['events_per_sec']:.0f} candidate-events/s):")
+    for results in (r_local, r_static, r_pond):
+        s = cluster_sim.summarize_savings(results)
+        print(f"  {results[0].name:6s}: "
+              f"server={s['server_gb_mean']:6.1f}GB "
+              f"pool/group={s['pool_group_gb_mean']:6.1f}GB "
+              f"savings={s['savings_mean']:+.3f}±{s['savings_std']:.3f} "
+              f"reject={s['reject_rate_mean']:.4f}")
 
 
 if __name__ == "__main__":

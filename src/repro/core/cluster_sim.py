@@ -27,6 +27,12 @@ rebuilding Python tuple lists per probe.
   ``use_engine=False`` to run the original scalar-oracle search (kept as
   the equivalence reference; ~10-20x slower).
 
+* ``savings_analysis_batched`` prices K traces (synthetic seeds or
+  ingested real traces) at once on a ``CompiledReplayBatch``: every
+  search round issues ONE vmapped sweep covering all traces' probes, and
+  fig3/fig21 report mean ± std savings across the seed batch via
+  ``summarize_savings``.
+
 * ``stranding_analysis`` replays compiled per-server event streams with a
   closed-form clamped-cumsum (the capped accumulator ``min(y + dm, cap)``
   unrolls to ``cumsum + running-min``), then samples snapshots via
@@ -428,3 +434,124 @@ def savings_analysis(vms, cfg: ClusterConfig, policy: str,
     return PolicyResult(policy, float(server_grid[b]), float(pool_grid[b]),
                         base_gb, cfg.n_servers, cfg.n_groups, mispred,
                         mitig, float(rates[b]))
+
+
+def savings_analysis_batched(vms_list, cfg: ClusterConfig, policy: str,
+                             control_planes=None,
+                             static_pool_frac: float = 0.15,
+                             latency: int = 182, pdm: float = 0.05,
+                             spill_harm_prob: float = 0.25,
+                             reject_tol: float = 0.005,
+                             cache: dict | None = None
+                             ) -> list[PolicyResult]:
+    """``savings_analysis`` for K traces at once — one sweep instead of K.
+
+    Pond's headline savings (§4, Figs 3/21) are statistical claims over
+    many workload mixes.  This entry point prices a whole batch of
+    traces (synthetic seeds or ingested real traces, see
+    ``traces.load_trace_file``) in lockstep on a
+    ``replay_engine.CompiledReplayBatch``: every search round issues ONE
+    vmapped event sweep covering all K traces' probes, and the pool
+    frontier search needs no per-trace reference-trajectory replays at
+    all.  Returns one :class:`PolicyResult` per trace (summarize with
+    :func:`summarize_savings`); per-trace server bisections replicate
+    the scalar probe sequence bit-for-bit, pool searches land within the
+    usual search tolerance of the single-trace path.
+
+    ``control_planes``: one (fresh) ControlPlane per trace for the
+    ``pond`` policy — decisions mutate per-customer history, so traces
+    must not share one.  ``cache``: share the all-local baseline batch
+    across policies of the SAME trace list (like ``savings_analysis``).
+    """
+    k = len(vms_list)
+    if not k:
+        return []
+    cps = list(control_planes) if control_planes is not None \
+        else [None] * k
+    per = [policy_decisions(vms, policy, cp, static_pool_frac, latency,
+                            pdm, spill_harm_prob)
+           for vms, cp in zip(vms_list, cps)]
+    decisions = [d for d, _ in per]
+    mispred = [m for _, m in per]
+    mitig = [len(cp.mitigation.log) if cp else 0 for cp in cps]
+    hi_server = cfg.cores_per_server * 12.0
+    big_pool = hi_server * cfg.n_servers
+    hi_vec = np.full(k, hi_server)
+
+    batch = replay_engine.CompiledReplayBatch(
+        [replay_engine.CompiledReplay(v, d, cfg)
+         for v, d in zip(vms_list, decisions)])
+    # cores-bound reject floor per trace; tolerance is on top of it
+    r0 = batch.reject_rates(hi_server, big_pool)[:, 0]
+    tol = r0 + reject_tol
+
+    def results(server_gb, pool_gb, base_gb, rates):
+        return [PolicyResult(policy, float(server_gb[i]),
+                             float(pool_gb[i]), float(base_gb[i]),
+                             cfg.n_servers, cfg.n_groups, mispred[i],
+                             mitig[i], float(rates[i]))
+                for i in range(k)]
+
+    if policy == "local":
+        base_gb = replay_engine.search_min_multi(
+            lambda g: batch.reject_rates(g, np.zeros_like(g))
+            <= tol[:, None], np.zeros(k), hi_vec)
+        if cache is not None:
+            cache["local_batch"] = batch
+            cache[("base_gb_multi", tuple(tol))] = base_gb
+        return results(base_gb, np.zeros(k), base_gb, r0)
+
+    min_server = replay_engine.search_min_multi(
+        lambda g: batch.reject_rates(g, np.full_like(g, big_pool))
+        <= tol[:, None], np.zeros(k), hi_vec)
+    # the all-local baseline ignores the pool: share its batch + search
+    # across policies of one trace list
+    if cache is not None and "local_batch" in cache:
+        local_batch = cache["local_batch"]
+    else:
+        local_batch = replay_engine.CompiledReplayBatch(
+            [replay_engine.CompiledReplay(
+                vms, [VMDecision(vm.mem_gb, 0.0, False, None)
+                      for vm in vms], cfg) for vms in vms_list])
+        if cache is not None:
+            cache["local_batch"] = local_batch
+    base_gb = cache.get(("base_gb_multi", tuple(tol))) \
+        if cache is not None else None
+    if base_gb is None:
+        base_gb = replay_engine.search_min_multi(
+            lambda g: local_batch.reject_rates(g, np.zeros_like(g))
+            <= tol[:, None], np.zeros(k), hi_vec)
+        if cache is not None:
+            cache[("base_gb_multi", tuple(tol))] = base_gb
+    # joint provisioning sweep, one lockstep bracketing search for all
+    # (trace, server-size) points (see savings_analysis for why the
+    # optimum is not the (min server, min pool) corner)
+    n_pts = 7
+    server_grids = np.linspace(min_server, base_gb, n_pts, axis=1)
+    pool_grids = replay_engine.pool_search_multi(
+        batch, server_grids, big_pool, tol)
+    totals = cfg.n_servers * server_grids + cfg.n_groups * pool_grids
+    b = totals.argmin(axis=1)
+    rows = np.arange(k)
+    sgb = server_grids[rows, b]
+    pgb = pool_grids[rows, b]
+    rates = batch.reject_rates(sgb[:, None], pgb[:, None])[:, 0]
+    return results(sgb, pgb, base_gb, rates)
+
+
+def summarize_savings(results) -> dict:
+    """Mean ± spread of a seed batch's PolicyResults (Fig 3/21 rows)."""
+    sv = np.array([r.savings for r in results])
+    return {"n_seeds": len(results),
+            "savings_mean": float(sv.mean()),
+            "savings_std": float(sv.std()),
+            "savings_min": float(sv.min()),
+            "savings_max": float(sv.max()),
+            "server_gb_mean": float(np.mean([r.server_gb
+                                             for r in results])),
+            "pool_group_gb_mean": float(np.mean([r.pool_group_gb
+                                                 for r in results])),
+            "reject_rate_mean": float(np.mean([r.reject_rate
+                                               for r in results])),
+            "mispred_mean": float(np.mean([r.mispredictions
+                                           for r in results]))}

@@ -68,6 +68,18 @@ pricing whole dyadic probe trees per sweep; ``pool_search_batched`` runs
 all server-size points' pool searches in lockstep, bracketed for free by
 each size's infinite-pool trajectory and warm-started from neighbors
 (required pool is monotone non-increasing in server_gb).
+
+* **Trace batch axis** — ``CompiledReplayBatch`` stacks K compiled
+  traces (synthetic seeds or ingested real traces, see
+  ``core/traces.py``) into one ``(K, E_max)`` padded event tensor and
+  prices every trace's candidate batch in a single vmapped ``lax.scan``
+  — XLA turns the vmap into one scan with a batched carry, so a K-seed
+  frontier costs one pass over the event axis instead of K.  Row ``k``
+  is bit-exact vs ``engines[k]`` alone.  ``search_min_multi`` and
+  ``pool_search_multi`` run the provisioning searches for all K traces
+  in lockstep on top of it (one sweep per search round), which is what
+  ``cluster_sim.savings_analysis_batched`` uses to report mean ± spread
+  savings across a seed batch.  See ``docs/replay_engine.md``.
 """
 from __future__ import annotations
 
@@ -81,17 +93,23 @@ PAD = 3               # no-op event kind used to pad the XLA event stream
 MAX_WAVES = 12        # state-rebuild budget per sweep (numpy backend)
 MAX_TRAJS = 16        # per-server-size trajectories per sweep
 SNAP = 64             # snapshot stride (events) in trajectories
-JAX_CHUNK = 96        # candidate buckets per compiled sweep: 16 or 96
+JAX_CHUNK = 96        # max candidate bucket per compiled sweep
+_BUCKETS = (2, 4, 16, 32, JAX_CHUNK)   # padded candidate widths (lazy
+# compiles, one per width actually used; the small buckets matter for
+# narrow probe batches — bracket checks and final-rate evaluations are
+# fixed-cost-dominated per sweep, so padding 1-2 probes to 16 lanes
+# would waste most of the sweep)
 _INF = np.inf
 _I32_BIG = 1 << 30    # "infinite" capacity in the int32 sweep
 
 
 # ----------------------------------------------------------- XLA backend ---
-_JAX_SWEEP = None     # jitted sweep, or False when jax is unavailable
+_JAX_SWEEP = None        # jitted sweep, or False when jax is unavailable
+_JAX_BATCH_SWEEP = None  # jitted vmapped sweep (leading trace axis)
 
 
-def _get_jax_sweep():
-    """Build (once) the jitted int32 event-sweep.
+def _build_sweep():
+    """Build the (unjitted) int32 event-sweep function.
 
     Because every VM memory quantity is an integral GB, admission tests
     like ``free_mem >= local_gb`` are equivalent to
@@ -101,17 +119,15 @@ def _get_jax_sweep():
     ``(n_slots, C)`` array (VMs are mapped to reusable slots sized by
     peak concurrency, far smaller than n_vms) updated with leading-axis
     dynamic_update_slice so the scan carry stays in place.
+
+    The returned function is pure over jax arrays: ``_get_jax_sweep``
+    jits it directly; ``_get_jax_batch_sweep`` vmaps it over a leading
+    trace axis (event streams and candidate capacities per trace, shared
+    initial state) so K traces price their candidate batches in ONE
+    ``lax.scan``.
     """
-    global _JAX_SWEEP
-    if _JAX_SWEEP is not None:
-        return _JAX_SWEEP or None
-    try:
-        import jax
-        import jax.numpy as jnp
-        from jax import lax
-    except Exception:                                # pragma: no cover
-        _JAX_SWEEP = False
-        return None
+    import jax.numpy as jnp
+    from jax import lax
     big = jnp.int32(_I32_BIG)
     zero = jnp.int32(0)
 
@@ -172,8 +188,54 @@ def _get_jax_sweep():
         out, _ = lax.scan(body, init, evs)
         return out[4]
 
-    _JAX_SWEEP = jax.jit(sweep)
+    return sweep
+
+
+def _get_jax_sweep():
+    """Jitted single-trace sweep, or None when jax is unavailable."""
+    global _JAX_SWEEP
+    if _JAX_SWEEP is not None:
+        return _JAX_SWEEP or None
+    try:
+        import jax
+    except Exception:                                # pragma: no cover
+        _JAX_SWEEP = False
+        return None
+    _JAX_SWEEP = jax.jit(_build_sweep())
     return _JAX_SWEEP
+
+
+def _get_jax_batch_sweep():
+    """Jitted sweep vmapped over a leading trace axis (K traces at once).
+
+    Per-trace inputs: the 6 event streams and the candidate capacity
+    vectors ``(K, n_cand)``.  Shared (broadcast) inputs: the group map
+    and the all-free initial state — identical across traces because the
+    batch requires one cluster shape.  vmap of ``lax.scan`` compiles to a
+    SINGLE scan with a batched carry, so the whole K-trace sweep costs
+    one pass over the padded event axis instead of K.
+    """
+    global _JAX_BATCH_SWEEP
+    if _JAX_BATCH_SWEEP is not None:
+        return _JAX_BATCH_SWEEP or None
+    try:
+        import jax
+    except Exception:                                # pragma: no cover
+        _JAX_BATCH_SWEEP = False
+        return None
+    _JAX_BATCH_SWEEP = jax.jit(jax.vmap(
+        _build_sweep(),
+        in_axes=((0, 0, 0, 0, 0, 0), None, None, None, None, None, 0, 0)))
+    return _JAX_BATCH_SWEEP
+
+
+def _bucket(k: int) -> int:
+    """Padded candidate width for a k-candidate chunk (fixed buckets keep
+    XLA recompiles rare; small buckets matter for narrow probe batches)."""
+    for b in _BUCKETS:
+        if k <= b:
+            return b
+    return _BUCKETS[-1]
 
 
 # ------------------------------------------------------------ statistics ---
@@ -286,12 +348,20 @@ class CompiledReplay:
 
         # events in the oracle's insertion order: per VM —
         # (arrival, ARRIVE), (t_migrate, MIGRATE)?, (departure, DEPART) —
-        # then one stable lexsort by (time, kind).
+        # then one stable lexsort by (time, kind).  MIGRATE events outside
+        # [arrival, departure) are guaranteed no-ops in the scalar oracle
+        # (the VM is not placed) and are dropped here: the XLA backend
+        # addresses VMs by reusable slot, so a stale MIGRATE after
+        # departure would otherwise hit whichever VM reused the slot.
         times = np.empty(3 * n)
         times[0::3] = np.fromiter((vm.arrival for vm in vms), float, n)
-        times[1::3] = np.fromiter(
+        t_mig = np.fromiter(
             (np.nan if d.t_migrate is None else d.t_migrate
              for d in decisions), float, n)
+        t_mig[(t_mig < times[0::3])
+              | (t_mig >= np.fromiter((vm.departure for vm in vms),
+                                      float, n))] = np.nan
+        times[1::3] = t_mig
         times[2::3] = np.fromiter((vm.departure for vm in vms), float, n)
         kinds = np.tile(np.array([ARRIVE, MIGRATE, DEPART], np.int64), n)
         vmidx = np.repeat(np.arange(n, dtype=np.int64), 3)
@@ -304,6 +374,26 @@ class CompiledReplay:
         self.n_events = len(self._ev_kind)
         self._trajs: dict[float | None, _Trajectory] = {}
         self._jax_ev = None
+        self._peak_pool = None
+
+    def peak_pool_demand(self) -> float:
+        """Cheap upper bound on the pool any candidate can ever need.
+
+        Peak of the prefix sum of +pool_gb at arrival / -pool_gb at
+        departure over the compiled event order: every group's actual
+        usage is pointwise <= this naive concurrent demand (rejected and
+        fallback VMs contribute 0, migrations only return pool early),
+        so at pool_gb >= peak the pool never binds.  Used by
+        ``pool_search_multi`` as a free feasible upper bracket in place
+        of per-trace trajectory replays.
+        """
+        if self._peak_pool is None:
+            kind = np.asarray(self._ev_kind)
+            p = np.asarray(self._pool)[np.asarray(self._ev_vm)]
+            delta = np.where(kind == ARRIVE, p,
+                             np.where(kind == DEPART, -p, 0.0))
+            self._peak_pool = float(np.cumsum(delta).max(initial=0.0))
+        return self._peak_pool
 
     # ------------------------------------------------------ XLA compile --
     def _jax_events(self):
@@ -369,7 +459,7 @@ class CompiledReplay:
         for lo in range(0, n0, JAX_CHUNK):
             hi = min(lo + JAX_CHUNK, n0)
             k = hi - lo
-            n_cand = 16 if k <= 16 else JAX_CHUNK
+            n_cand = _bucket(k)
             sgb = np.full(n_cand, sgb_i[hi - 1], np.int32)
             pgb = np.full(n_cand, pgb_i[hi - 1], np.int32)
             sgb[:k] = sgb_i[lo:hi]
@@ -524,6 +614,12 @@ class CompiledReplay:
         ``(reject_cap + 1) / n_vms`` — only valid for feasibility tests
         against a tolerance below that bound (the XLA backend always
         returns exact rates, which satisfy the same contract).
+
+        Usage (price a 9-point frontier in one sweep)::
+
+            eng = CompiledReplay(vms, decisions, cfg)
+            rates = eng.reject_rates(np.linspace(200., 400., 9),
+                                     np.linspace(0., 800., 9))
         """
         t0 = time.perf_counter()
         server_gb = np.atleast_1d(np.asarray(server_gb, float))
@@ -782,7 +878,146 @@ class CompiledReplay:
         return rates
 
 
+# ----------------------------------------------------------- trace batch ---
+class CompiledReplayBatch:
+    """K compiled traces priced side by side in one padded event tensor.
+
+    Stacks the per-trace slot-mapped event streams of K
+    :class:`CompiledReplay` engines (same cluster shape required) into a
+    ``(K, E_max)`` tensor — shorter traces pad with no-op events — and
+    sweeps all traces' candidate batches in a single vmapped ``lax.scan``.
+    Candidate capacities may be shared across traces (1-D) or per-trace
+    (``(K, n_cand)``, the shape lockstep searches need).
+
+    Bit-exactness contract: row ``k`` of :meth:`reject_rates` equals
+    ``engines[k].reject_rates(...)`` bit-for-bit — padding events are
+    no-ops and each candidate's int32 replay is independent of its batch
+    neighbors (asserted in ``tests/test_replay_engine.py``).
+
+    Usage::
+
+        engines = [CompiledReplay(vms_k, dec_k, cfg) for ...]
+        batch = CompiledReplayBatch(engines)
+        rates = batch.reject_rates([200., 300.], [100., 100.])  # (K, 2)
+    """
+
+    def __init__(self, engines):
+        if not engines:
+            raise ValueError("CompiledReplayBatch needs >= 1 engine")
+        e0 = engines[0]
+        shape = (e0.n_servers, e0.n_groups, e0.cores_per_server)
+        for e in engines[1:]:
+            if (e.n_servers, e.n_groups, e.cores_per_server) != shape:
+                raise ValueError(
+                    "all traces in a batch must share one cluster shape; "
+                    f"got {(e.n_servers, e.n_groups, e.cores_per_server)} "
+                    f"vs {shape}")
+        self.engines = list(engines)
+        self.k = len(engines)
+        self.n_servers = e0.n_servers
+        self.cores_per_server = e0.cores_per_server
+        self.n_vms = np.array([e.n_vms for e in engines], np.int64)
+        self.n_events = np.array([e.n_events for e in engines], np.int64)
+        self._exact = all(e._exact for e in engines)
+        self._jax_batch = None
+
+    def _jax_batch_events(self):
+        """Stack per-trace padded event streams to one (K, E_max) tensor."""
+        if self._jax_batch is not None:
+            return self._jax_batch
+        import jax.numpy as jnp
+        per = [e._jax_events() for e in self.engines]
+        e_max = max(p[0][0].shape[0] for p in per)
+        n_slots = max(p[2] for p in per)
+        s_pad, g_pad = per[0][3], per[0][4]
+        fills = (PAD, 0, 0, 0, 0, 0)     # kind pads with no-op events
+        streams = []
+        for j, fill in enumerate(fills):
+            col = np.full((self.k, e_max), fill, np.int32)
+            for i, p in enumerate(per):
+                arr = np.asarray(p[0][j])
+                col[i, :arr.shape[0]] = arr
+            streams.append(jnp.asarray(col))
+        self._jax_batch = (tuple(streams), per[0][1], n_slots, s_pad, g_pad)
+        return self._jax_batch
+
+    def _broadcast(self, server_gb, pool_gb):
+        """Normalize candidates to float (K, n_cand) arrays."""
+        s = np.atleast_1d(np.asarray(server_gb, float))
+        p = np.atleast_1d(np.asarray(pool_gb, float))
+        s, p = np.broadcast_arrays(s, p)
+        if s.ndim == 1:
+            s = np.broadcast_to(s, (self.k,) + s.shape)
+            p = np.broadcast_to(p, (self.k,) + p.shape)
+        if s.ndim != 2 or s.shape[0] != self.k:
+            raise ValueError(
+                f"candidates must be 1-D (shared) or ({self.k}, n_cand) "
+                f"per-trace; got shape {s.shape}")
+        return np.ascontiguousarray(s), np.ascontiguousarray(p)
+
+    def reject_rates(self, server_gb, pool_gb,
+                     backend: str = "auto") -> np.ndarray:
+        """Reject fraction per (trace, candidate): shape ``(K, n_cand)``.
+
+        ``server_gb``/``pool_gb`` broadcast like the single-trace API and
+        additionally accept ``(K, n_cand)`` per-trace candidate grids.
+        ``backend="auto"`` prices all K traces in ONE vmapped int32
+        ``lax.scan`` when jax is importable and every trace's decisions
+        are integral GBs; otherwise it falls back to looping the
+        per-trace numpy divergence-window sweep (same bit-exact rates,
+        just K sweeps instead of one).
+        """
+        server_gb, pool_gb = self._broadcast(server_gb, pool_gb)
+        n0 = server_gb.shape[1]
+        if backend == "auto" and self._exact and _get_jax_batch_sweep():
+            backend = "jax"
+        if backend != "jax":
+            return np.stack([
+                eng.reject_rates(server_gb[i], pool_gb[i], backend=backend)
+                for i, eng in enumerate(self.engines)])
+        t0 = time.perf_counter()
+        sweep = _get_jax_batch_sweep()
+        import jax.numpy as jnp
+        evs, group_of, n_slots, s_pad, g_pad = self._jax_batch_events()
+        rejects = np.empty((self.k, n0), np.int64)
+        sgb_i = np.clip(np.floor(server_gb), -_I32_BIG, _I32_BIG)
+        pgb_i = np.clip(np.floor(pool_gb), -_I32_BIG, _I32_BIG)
+        for lo in range(0, n0, JAX_CHUNK):
+            hi = min(lo + JAX_CHUNK, n0)
+            kc = hi - lo
+            n_cand = _bucket(kc)
+            sgb = np.repeat(sgb_i[:, hi - 1:hi], n_cand, 1).astype(np.int32)
+            pgb = np.repeat(pgb_i[:, hi - 1:hi], n_cand, 1).astype(np.int32)
+            sgb[:, :kc] = sgb_i[:, lo:hi]
+            pgb[:, :kc] = pgb_i[:, lo:hi]
+            fc0 = np.full((n_cand, s_pad), -_I32_BIG, np.int32)
+            fc0[:, :self.n_servers] = np.int32(self.cores_per_server)
+            out = sweep(evs, group_of, jnp.asarray(fc0),
+                        jnp.zeros((n_cand, s_pad), jnp.int32),
+                        jnp.zeros((n_cand, g_pad), jnp.int32),
+                        jnp.full((n_slots, n_cand), -1, jnp.int32),
+                        jnp.asarray(sgb), jnp.asarray(pgb))
+            rejects[:, lo:hi] = np.asarray(out)[:, :kc]
+        rates = rejects / np.maximum(self.n_vms, 1)[:, None]
+        _STATS.sweeps += 1
+        _STATS.events += int(self.n_events.max(initial=0))
+        _STATS.candidate_events += int(self.n_events.sum()) * n0
+        _STATS.wall_s += time.perf_counter() - t0
+        return rates
+
+
 # ---------------------------------------------------------------- search ---
+def _dyadic_nodes(lo: float, hi: float, depth: int, nodes: list) -> None:
+    """Append the depth-k tree of bisection midpoints of ``[lo, hi]``,
+    computed with the same ``0.5 * (lo + hi)`` float arithmetic the
+    scalar search uses (pre-order, so replays walk it bit-for-bit)."""
+    m = 0.5 * (lo + hi)
+    nodes.append(m)
+    if depth > 1:
+        _dyadic_nodes(lo, m, depth - 1, nodes)
+        _dyadic_nodes(m, hi, depth - 1, nodes)
+
+
 def search_min_batched(feasible, lo: float, hi: float,
                        tol_frac: float = 0.02, depth: int = 4) -> float:
     """Batched replica of the scalar ``cluster_sim._search_min`` bisection.
@@ -794,20 +1029,19 @@ def search_min_batched(feasible, lo: float, hi: float,
     of dyadic bisection midpoints (computed with the same ``0.5*(lo+hi)``
     float arithmetic the scalar uses) in ONE batched sweep — round 1 also
     prices ``hi`` itself — then walks the k bisection decisions locally.
-    One sweep thus advances k sequential bisection steps."""
+    One sweep thus advances k sequential bisection steps.
+
+    Usage (least feasible uniform server DRAM)::
+
+        eng = CompiledReplay(vms, decisions, cfg)
+        gb = search_min_batched(
+            lambda g: eng.reject_rates(g, big_pool) <= tol, 0.0, 768.0)
+    """
     nodes: list[float] = []
-
-    def expand(a: float, b: float, d: int) -> None:
-        m = 0.5 * (a + b)
-        nodes.append(m)
-        if d > 1:
-            expand(a, m, d - 1)
-            expand(m, b, d - 1)
-
     first = True
     while (hi - lo) > tol_frac * max(hi, 1.0) or first:
         nodes.clear()
-        expand(lo, hi, depth)
+        _dyadic_nodes(lo, hi, depth, nodes)
         probes = nodes + [hi] if first else list(nodes)
         feas = np.asarray(feasible(np.array(probes)))
         if first:
@@ -843,7 +1077,13 @@ def pool_search_batched(engine: CompiledReplay, server_grid: np.ndarray,
     every round warm-starts each point's bracket from its neighbors:
     upper brackets propagate left-to-right (``min.accumulate`` over
     increasing server sizes) and lower brackets right-to-left.  Points
-    infeasible even at ``big_pool`` return ``big_pool``."""
+    infeasible even at ``big_pool`` return ``big_pool``.
+
+    Usage (pool frontier over a server-size grid)::
+
+        grid = np.linspace(min_server, base_gb, 7)
+        pool = pool_search_batched(eng, grid, big_pool=12288.0, tol=0.01)
+    """
     server_grid = np.asarray(server_grid, float)
     n_pts = len(server_grid)
     denom = max(engine.n_vms, 1)
@@ -882,5 +1122,122 @@ def pool_search_batched(engine: CompiledReplay, server_grid: np.ndarray,
                 hi[i] = grids[j, k]
             else:
                 lo[i] = grids[j, -1]
+    hi[infeasible] = big_pool
+    return hi
+
+
+# ------------------------------------------------- multi-trace searches ---
+def search_min_multi(feasible, lo, hi, tol_frac: float = 0.02,
+                     depth: int = 4) -> np.ndarray:
+    """K independent ``_search_min`` bisections advanced in lockstep.
+
+    Per-trace replica of :func:`search_min_batched`: each round builds
+    every unconverged trace's depth-k dyadic probe tree (round 1 also
+    prices each trace's ``hi``) and evaluates ALL trees in one call to
+    ``feasible`` — with a :class:`CompiledReplayBatch` behind it, that is
+    one vmapped event sweep per round instead of K.  Each trace's probe
+    sequence (and thus its result) is bit-identical to running the
+    scalar bisection on that trace alone.  Traces infeasible at ``hi``
+    return ``hi``.
+
+    ``feasible`` maps a ``(K, n_probes)`` capacity array to ``(K,
+    n_probes)`` bools, e.g.::
+
+        base_gb = search_min_multi(
+            lambda g: batch.reject_rates(g, 0.0) <= tol[:, None],
+            np.zeros(batch.k), np.full(batch.k, 768.0))
+    """
+    lo = np.array(lo, float)
+    hi = np.array(hi, float)
+    k = len(lo)
+    n_nodes = 2 ** depth - 1
+    done = np.zeros(k, bool)
+    first = True
+    while True:
+        active = ~done & ((hi - lo) > tol_frac * np.maximum(hi, 1.0))
+        if first:
+            active = ~done
+        if not active.any():
+            break
+        nodes = np.empty((k, n_nodes))
+        for i in range(k):
+            # converged rows re-price their frozen tree (uniform probe
+            # width keeps the sweep one rectangular batch); their
+            # brackets are no longer updated
+            row: list[float] = []
+            _dyadic_nodes(float(lo[i]), float(hi[i]), depth, row)
+            nodes[i] = row
+        probes = np.concatenate([nodes, hi[:, None]], 1) if first else nodes
+        feas = np.asarray(feasible(probes))
+        if first:
+            done |= ~feas[:, -1]          # infeasible even at hi
+            first = False
+        for i in np.flatnonzero(active & ~done):
+            fmap = dict(zip(probes[i].tolist(), feas[i].tolist()))
+            for _ in range(depth):
+                if (hi[i] - lo[i]) <= tol_frac * max(hi[i], 1.0):
+                    break
+                mid = 0.5 * (float(lo[i]) + float(hi[i]))
+                if fmap[mid]:
+                    hi[i] = mid
+                else:
+                    lo[i] = mid
+    return hi
+
+
+def pool_search_multi(batch: CompiledReplayBatch, server_grids,
+                      big_pool: float, tol, tol_frac: float = 0.02,
+                      width: int = 4) -> np.ndarray:
+    """Minimum feasible pool_gb per (trace, server-size) point, lockstep.
+
+    Multi-trace analogue of :func:`pool_search_batched`: one bracketing
+    search over a ``(K, n_pts)`` server grid, evaluating ``width``
+    interior points for every point of every trace in ONE vmapped sweep
+    per round.  Brackets start at ``[0, peak_pool_demand]`` per trace —
+    a vectorized prefix-sum bound that replaces the per-trace trajectory
+    replays of the single-trace search — and warm-start from neighbors
+    within each trace (required pool is monotone non-increasing in
+    server_gb).  Points infeasible even at the upper bracket return
+    ``big_pool``.
+    """
+    sg = np.asarray(server_grids, float)
+    if sg.ndim != 2 or sg.shape[0] != batch.k:
+        raise ValueError(f"server_grids must be (K={batch.k}, n_pts); "
+                         f"got {sg.shape}")
+    k, n_pts = sg.shape
+    tol = np.asarray(tol, float).reshape(k, 1)
+    lo = np.zeros((k, n_pts))
+    peaks = np.array([min(float(big_pool), e.peak_pool_demand())
+                      for e in batch.engines])
+    hi = np.broadcast_to(peaks[:, None], (k, n_pts)).copy()
+    infeasible = batch.reject_rates(sg, hi) > tol
+    fracs = np.arange(1, width + 1) / (width + 1.0)
+    while True:
+        prop_hi = np.minimum.accumulate(
+            np.where(infeasible, _INF, hi), axis=1)
+        hi = np.where(infeasible, hi, np.minimum(hi, prop_hi))
+        prop_lo = np.maximum.accumulate(
+            np.where(infeasible, -_INF, lo)[:, ::-1], axis=1)[:, ::-1]
+        lo = np.where(infeasible, lo, np.maximum(lo, prop_lo))
+        active = ~infeasible & ((hi - lo) > tol_frac * np.maximum(hi, 1.0))
+        if not active.any():
+            break
+        # converged points re-price their frozen bracket: the sweep needs
+        # one rectangular (K, n_pts * width) candidate block per round
+        grids = lo[..., None] + (hi - lo)[..., None] * fracs
+        r = batch.reject_rates(
+            np.repeat(sg, width, axis=1),
+            grids.reshape(k, n_pts * width)).reshape(k, n_pts, width)
+        f = r <= tol[:, :, None]
+        for i in range(k):
+            for j in np.flatnonzero(active[i]):
+                row = f[i, j]
+                if row.any():
+                    q = int(np.argmax(row))
+                    if q > 0:
+                        lo[i, j] = grids[i, j, q - 1]
+                    hi[i, j] = grids[i, j, q]
+                else:
+                    lo[i, j] = grids[i, j, -1]
     hi[infeasible] = big_pool
     return hi

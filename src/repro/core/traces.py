@@ -1,4 +1,5 @@
-"""Synthetic Azure-like VM traces, calibrated to Pond's published stats.
+"""Synthetic Azure-like VM traces, calibrated to Pond's published stats,
+plus ingestion of real VM trace files.
 
 Calibration targets (asserted in benchmarks/tests):
   * untouched memory: ~50% of VMs touch less than 50% of their DRAM
@@ -8,10 +9,23 @@ Calibration targets (asserted in benchmarks/tests):
   * PMU/TMA counters correlated with slowdown but with deliberate
     counterexamples (Finding 4: >20% slowdown at 2% DRAM-bound).
   * VM shapes: 2-48 cores, 2-8 GB/core, lognormal lifetimes.
+
+Real-trace ingestion (``load_trace_file``): external VM traces — e.g.
+the Azure public VM traces — load into the same :class:`VM` record
+format the synthetic sampler emits, so the replay engine, cluster
+simulator and control plane run on them unchanged.  The replay only
+needs ``(arrival, lifetime, cores, mem_gb)`` columns; workload fields
+the file does not carry (untouched memory, slowdowns, PMU counters) are
+synthesized from a :class:`Population` prior so policy code keeps
+working.  A miniature fixture trace ships with the package
+(``fixture_trace_path()``) for tests and quickstarts.
 """
 from __future__ import annotations
 
+import csv
 import dataclasses
+import gzip
+import os
 
 import numpy as np
 
@@ -174,3 +188,232 @@ def build_history(vms) -> dict:
     for vm in vms:
         hist.setdefault(vm.customer, []).append(vm.untouched)
     return {c: np.asarray(v) for c, v in hist.items()}
+
+
+# ------------------------------------------------- real-trace ingestion ----
+class TraceSchemaError(ValueError):
+    """A trace file failed schema validation (missing/bad columns, bad
+    values).  Subclasses ValueError so callers can catch either."""
+
+
+#: canonical columns the replay engine needs; a ``departure`` column may
+#: substitute for ``lifetime`` (lifetime = departure - arrival)
+TRACE_COLUMNS = ("arrival", "lifetime", "cores", "mem_gb")
+
+#: lowercase header aliases -> canonical names (Azure public-trace
+#: spellings included: vmcreated/vmdeleted timestamps, core/memory counts)
+_COLUMN_ALIASES = {
+    "arrival": "arrival", "start": "arrival", "starttime": "arrival",
+    "created": "arrival", "vmcreated": "arrival", "start_time": "arrival",
+    "lifetime": "lifetime", "duration": "lifetime", "life": "lifetime",
+    "departure": "departure", "end": "departure", "endtime": "departure",
+    "deleted": "departure", "vmdeleted": "departure",
+    "end_time": "departure",
+    "cores": "cores", "core_count": "cores", "vmcorecount": "cores",
+    "vcpus": "cores", "vmcorecountbucket": "cores",
+    "mem_gb": "mem_gb", "mem": "mem_gb", "memory": "mem_gb",
+    "memory_gb": "mem_gb", "vmmemory": "mem_gb",
+    "vmmemorybucket": "mem_gb",
+    "customer": "customer", "customer_id": "customer",
+    "subscriptionid": "customer", "tenant": "customer",
+    "vm_id": "vm_id", "vmid": "vm_id",
+    "untouched": "untouched", "untouched_frac": "untouched",
+}
+
+
+def fixture_trace_path() -> str:
+    """Path of the bundled miniature trace (CSV, ~50 VMs over two days).
+
+    Useful for tests and quickstarts::
+
+        vms = traces.load_trace_file(traces.fixture_trace_path())
+    """
+    return os.path.join(os.path.dirname(__file__), "data",
+                        "azure_mini.csv")
+
+
+def _read_table(path: str) -> dict[str, list]:
+    """Read a CSV (optionally .gz) or parquet file into {column: values}.
+
+    Column names are lowercased/stripped and mapped through the alias
+    table; unknown columns are kept under their lowercase name.
+    """
+    lower = path.lower()
+    if lower.endswith((".parquet", ".pq")):
+        try:
+            import pyarrow.parquet as pq
+        except Exception as e:                       # pragma: no cover
+            raise TraceSchemaError(
+                f"{path}: reading parquet traces requires pyarrow, which "
+                f"is not installed ({e}); convert the trace to CSV or "
+                f"install pyarrow") from e
+        table = pq.read_table(path)
+        raw = {name: col.to_pylist()
+               for name, col in zip(table.column_names, table.columns)}
+    elif lower.endswith((".csv", ".csv.gz")):
+        opener = gzip.open if lower.endswith(".gz") else open
+        with opener(path, "rt", newline="") as f:
+            reader = csv.DictReader(f)
+            if reader.fieldnames is None:
+                raise TraceSchemaError(f"{path}: empty file (no header)")
+            raw = {name: [] for name in reader.fieldnames}
+            for row in reader:
+                for name in raw:
+                    raw[name].append(row[name])
+    else:
+        raise TraceSchemaError(
+            f"{path}: unsupported trace format (expected .csv, .csv.gz, "
+            f".parquet or .pq)")
+    out: dict[str, list] = {}
+    for name, vals in raw.items():
+        key = name.strip().lower()
+        out[_COLUMN_ALIASES.get(key, key)] = vals
+    return out
+
+
+def _numeric(cols: dict, name: str, path: str) -> np.ndarray:
+    vals = cols[name]
+    out = np.empty(len(vals))
+    for i, v in enumerate(vals):
+        try:
+            out[i] = float(v)
+        except (TypeError, ValueError):
+            raise TraceSchemaError(
+                f"{path}: row {i + 1}: column {name!r}: {v!r} is not "
+                f"numeric") from None
+    if not np.isfinite(out).all():
+        i = int(np.flatnonzero(~np.isfinite(out))[0])
+        raise TraceSchemaError(
+            f"{path}: row {i + 1}: column {name!r}: non-finite value")
+    return out
+
+
+def load_trace_file(path: str, max_vms: int | None = None,
+                    start_id: int = 0, seed: int = 0,
+                    population: "Population | None" = None) -> list[VM]:
+    """Load an external VM trace file into ``sample_vms``-format records.
+
+    Accepts CSV (optionally gzipped) or parquet with columns ``(arrival,
+    lifetime, cores, mem_gb)`` — common spellings are aliased, e.g. the
+    Azure public traces' ``vmcreated``/``vmdeleted`` (``lifetime`` is
+    then ``departure - arrival``), ``vmcorecount`` and ``vmmemory``.
+    Optional ``customer``, ``vm_id`` and ``untouched`` columns are used
+    when present.  Workload fields a trace cannot carry (untouched
+    memory without an ``untouched`` column, slowdowns, PMU counters) are
+    synthesized deterministically (``seed``) from a
+    :class:`Population` prior so the Pond control plane and predictors
+    run on real traces unchanged; replay-engine results depend only on
+    the four schema columns.
+
+    Raises :class:`TraceSchemaError` (a ``ValueError``) on missing
+    columns, non-numeric/non-finite cells, non-positive lifetimes,
+    cores < 1, or mem_gb <= 0 — with the offending row in the message.
+
+    Usage::
+
+        vms = traces.load_trace_file("azure_2019.csv.gz", max_vms=50_000)
+        eng = replay_engine.CompiledReplay(vms, decisions, cfg)
+    """
+    cols = _read_table(path)
+    missing = [c for c in ("arrival", "cores", "mem_gb") if c not in cols]
+    if "lifetime" not in cols and "departure" not in cols:
+        missing.append("lifetime (or departure)")
+    if missing:
+        raise TraceSchemaError(
+            f"{path}: missing required column(s) {missing}; found "
+            f"{sorted(cols)} (accepted aliases: "
+            f"{sorted(set(_COLUMN_ALIASES))})")
+    n = len(cols["arrival"])
+    if n == 0:
+        raise TraceSchemaError(f"{path}: trace has no rows")
+
+    arrival = _numeric(cols, "arrival", path)
+    if "lifetime" in cols:
+        lifetime = _numeric(cols, "lifetime", path)
+    else:
+        lifetime = _numeric(cols, "departure", path) - arrival
+    cores = _numeric(cols, "cores", path)
+    mem = _numeric(cols, "mem_gb", path)
+    for name, arr, ok, req in (
+            ("arrival", arrival, arrival >= 0.0, ">= 0"),
+            ("lifetime", lifetime, lifetime > 0.0, "> 0"),
+            ("cores", cores, cores >= 1.0, ">= 1"),
+            ("mem_gb", mem, mem > 0.0, "> 0")):
+        if not ok.all():
+            i = int(np.flatnonzero(~ok)[0])
+            raise TraceSchemaError(
+                f"{path}: row {i + 1}: column {name!r}: {arr[i]:g} must "
+                f"be {req}")
+
+    pop = population or Population(n_customers=64, seed=seed)
+    rng = np.random.default_rng(seed)
+    if "customer" in cols:
+        cust_raw = cols["customer"]
+        cust_map: dict = {}
+        custs = np.array([cust_map.setdefault(c, len(cust_map))
+                          for c in cust_raw]) % pop.n_customers
+    else:
+        custs = rng.choice(pop.n_customers, n, p=pop.cust_popularity)
+    untouched_col = (_numeric(cols, "untouched", path)
+                     if "untouched" in cols else None)
+    if "vm_id" in cols:
+        try:
+            vm_ids = [start_id + int(float(v)) for v in cols["vm_id"]]
+        except (TypeError, ValueError):
+            # opaque string ids (e.g. Azure vmid hashes): stable remap
+            id_map: dict = {}
+            vm_ids = [start_id + id_map.setdefault(v, len(id_map))
+                      for v in cols["vm_id"]]
+        seen: set = set()
+        for i, v in enumerate(vm_ids):
+            if v in seen:
+                raise TraceSchemaError(
+                    f"{path}: row {i + 1}: duplicate vm_id "
+                    f"{cols['vm_id'][i]!r} — the replay keys placement "
+                    f"by vm_id, so each VM needs one record")
+            seen.add(v)
+    else:
+        vm_ids = [start_id + i for i in range(n)]
+
+    # synthesized workload fields, vectorized over the whole trace
+    u_all = np.clip(pop.cust_u[custs] + rng.normal(0, 0.02, n),
+                    0, 0.999999)
+    if untouched_col is not None:
+        untouched_all = np.clip(untouched_col, 0.0, 1.0)
+    else:
+        untouched_all = np.clip(
+            pop.cust_untouched[custs] + rng.normal(0, 0.10, n), 0, 1)
+    slow182_all = _piecewise(u_all, _BANDS_182)
+    slow222_all = _piecewise(u_all, _BANDS_222)
+
+    order = np.argsort(arrival, kind="stable")
+    if max_vms is not None:
+        order = order[:max_vms]
+    vms = []
+    for i in order.tolist():
+        c = int(custs[i])
+        vms.append(VM(
+            vm_id=vm_ids[i], customer=c,
+            vm_type=int(pop.cust_type[c]),
+            location=int(pop.cust_loc[c]),
+            guest_os=int(pop.cust_os[c]),
+            cores=int(round(cores[i])), mem_gb=float(mem[i]),
+            arrival=float(arrival[i]), lifetime=float(lifetime[i]),
+            untouched=float(untouched_all[i]),
+            slow182=float(slow182_all[i]),
+            slow222=float(slow222_all[i]),
+            pmu=pop._pmu(float(u_all[i]), rng)))
+    return vms
+
+
+def save_trace_csv(vms, path: str) -> None:
+    """Write VMs as a CSV the :func:`load_trace_file` schema round-trips
+    (arrival, lifetime, cores, mem_gb + customer/vm_id/untouched)."""
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["vm_id", "customer", "arrival", "lifetime", "cores",
+                    "mem_gb", "untouched"])
+        for vm in vms:
+            w.writerow([vm.vm_id, vm.customer, f"{vm.arrival:.3f}",
+                        f"{vm.lifetime:.3f}", vm.cores,
+                        f"{vm.mem_gb:g}", f"{vm.untouched:.4f}"])

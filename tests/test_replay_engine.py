@@ -161,3 +161,139 @@ def test_engine_stats_accumulate(models):
     assert s["sweeps"] == 1
     assert s["events"] == eng.n_events
     assert s["candidate_events"] > 0
+
+
+def test_stale_migrate_after_departure_is_dropped(models):
+    """A t_migrate past the VM's departure is a no-op in the scalar
+    oracle; the slot-addressed XLA backend must not let it corrupt
+    whichever VM reused the slot (regression: short-lived ingested VMs
+    under the pond policy)."""
+    pop = traces.Population(seed=0)
+    base = pop.sample_vms(3, 100.0, seed=1)
+    for vm, (arr, life, cores, mem) in zip(
+            base, [(0.0, 10.0, 2, 8.0), (20.0, 100.0, 2, 8.0),
+                   (35.0, 50.0, 2, 8.0)]):
+        vm.arrival, vm.lifetime, vm.cores, vm.mem_gb = \
+            arr, life, cores, mem
+    decisions = [
+        cluster_sim.VMDecision(4.0, 4.0, False, 30.0),   # after departure
+        cluster_sim.VMDecision(4.0, 4.0, False, None),
+        cluster_sim.VMDecision(4.0, 4.0, False, None)]
+    cfg = cluster_sim.ClusterConfig(n_servers=1, pool_sockets=2,
+                                    gb_per_core=4.75)
+    eng = replay_engine.CompiledReplay(base, decisions, cfg)
+    for s, p in ((16.0, 16.0), (12.0, 4.0), (8.0, 16.0)):
+        want = cluster_sim.replay_reject_rate(base, decisions, cfg, s, p)
+        got = eng.reject_rates(s, p)
+        got_np = eng.reject_rates(s, p, backend="numpy")
+        assert got[0] == want and got_np[0] == want, (s, p)
+
+
+# ------------------------------------------------------- trace batching ---
+@pytest.fixture(scope="module")
+def seed_batch(models):
+    """Three compiled trace seeds (static policy) + their batch."""
+    worlds = [_world(seed, "static", models) for seed in (3, 4, 5)]
+    engines = [replay_engine.CompiledReplay(v, d, CFG)
+               for v, d in worlds]
+    return worlds, engines, replay_engine.CompiledReplayBatch(engines)
+
+
+def test_batched_rows_match_single_trace_sweeps_bitwise(seed_batch):
+    _, engines, batch = seed_batch
+    got = batch.reject_rates(_SERVER, _POOL)
+    want = np.stack([e.reject_rates(_SERVER, _POOL) for e in engines])
+    assert got.shape == (len(engines), len(_SERVER))
+    assert got.tolist() == want.tolist()
+    # numpy fallback backend: same rows, K sweeps instead of one
+    got_np = batch.reject_rates(_SERVER[:4], _POOL[:4], backend="numpy")
+    want_np = np.stack([e.reject_rates(_SERVER[:4], _POOL[:4],
+                                       backend="numpy")
+                        for e in engines])
+    assert got_np.tolist() == want_np.tolist()
+
+
+def test_batched_per_trace_candidates_and_narrow_batches(seed_batch):
+    _, engines, batch = seed_batch
+    # per-trace candidate grids: row k prices its own (server, pool)
+    per_s = np.stack([_SERVER + 8.0 * i for i in range(len(engines))])
+    got = batch.reject_rates(per_s, _POOL)
+    want = np.stack([e.reject_rates(per_s[i], _POOL)
+                     for i, e in enumerate(engines)])
+    assert got.tolist() == want.tolist()
+    # narrow probe batches route through the small candidate buckets
+    got1 = batch.reject_rates(250.0, 100.0)
+    assert got1.shape == (len(engines), 1)
+    for i, e in enumerate(engines):
+        assert got1[i, 0] == e.reject_rates(250.0, 100.0)[0]
+
+
+def test_batch_rejects_mismatched_cluster_shapes(models):
+    vms, decisions = _world(3, "static", models)
+    eng = replay_engine.CompiledReplay(vms, decisions, CFG)
+    other_cfg = cluster_sim.ClusterConfig(n_servers=4, pool_sockets=8,
+                                          gb_per_core=4.75)
+    other = replay_engine.CompiledReplay(vms, decisions, other_cfg)
+    with pytest.raises(ValueError, match="cluster shape"):
+        replay_engine.CompiledReplayBatch([eng, other])
+    with pytest.raises(ValueError):
+        replay_engine.CompiledReplayBatch([])
+
+
+def test_search_min_multi_replicates_scalar_bisection(seed_batch):
+    worlds, engines, batch = seed_batch
+    big_pool = 768.0 * CFG.n_servers
+    tol = batch.reject_rates(768.0, big_pool)[:, 0] + 0.005
+    got = replay_engine.search_min_multi(
+        lambda g: batch.reject_rates(g, np.full_like(g, big_pool))
+        <= tol[:, None], np.zeros(len(engines)),
+        np.full(len(engines), 768.0))
+    for i, (vms, decisions) in enumerate(worlds):
+        want = cluster_sim._search_min(
+            lambda g: cluster_sim.replay_reject_rate(
+                vms, decisions, CFG, g, big_pool) <= tol[i], 0.0, 768.0)
+        assert got[i] == want       # bitwise: same probes, same outcomes
+
+
+def test_peak_pool_demand_bounds_required_pool(seed_batch):
+    worlds, engines, batch = seed_batch
+    for (vms, decisions), eng in zip(worlds, engines):
+        peak = eng.peak_pool_demand()
+        assert peak > 0.0
+        # at pool >= peak the pool never binds: same rates as "infinite"
+        big = 768.0 * CFG.n_servers
+        assert eng.reject_rates(np.array([200.0]),
+                                np.array([peak]))[0] == \
+            eng.reject_rates(np.array([200.0]), np.array([big]))[0]
+
+
+def test_savings_analysis_batched_matches_per_seed(models):
+    vms_a, _ = _world(3, "static", models)
+    vms_b, _ = _world(4, "static", models)
+    batched = cluster_sim.savings_analysis_batched(
+        [vms_a, vms_b], CFG, "static", static_pool_frac=0.25)
+    singles = [cluster_sim.savings_analysis(v, CFG, "static",
+                                            static_pool_frac=0.25)
+               for v in (vms_a, vms_b)]
+    for got, want in zip(batched, singles):
+        # baseline server search replicates the scalar bisection
+        assert got.baseline_server_gb == want.baseline_server_gb
+        # pool probes differ (trajectory-free brackets) and reject rates
+        # are not perfectly monotone near the boundary: totals — hence
+        # savings — agree within search tolerance
+        assert abs(got.savings - want.savings) <= 0.04
+        assert got.reject_rate <= want.reject_rate + 0.006
+    s = cluster_sim.summarize_savings(batched)
+    assert s["n_seeds"] == 2
+    assert s["savings_min"] <= s["savings_mean"] <= s["savings_max"]
+
+
+def test_savings_analysis_batched_local_policy(models):
+    vms_a, _ = _world(5, "static", models)
+    cache: dict = {}
+    res = cluster_sim.savings_analysis_batched(
+        [vms_a], CFG, "local", cache=cache)
+    single = cluster_sim.savings_analysis(vms_a, CFG, "local")
+    assert res[0].server_gb == single.server_gb
+    assert res[0].savings == 0.0
+    assert "local_batch" in cache
