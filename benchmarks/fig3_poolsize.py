@@ -71,6 +71,45 @@ def batched_sweep_bench(vms_list, cfg, static_pool_frac=0.30):
     return out
 
 
+def streaming_sweep_bench(vms, cfg, max_events_per_shard=1024,
+                          static_pool_frac=0.30, n_cand=8):
+    """Time the sharded streaming sweep against the monolithic engine.
+
+    The stream's contract is bounded peak event-tensor memory, not
+    speed; the recorded numbers (events/s, shard count, peak shard
+    bytes, overhead vs monolithic) track what the bound costs.  Rates
+    are asserted bit-exact against ``CompiledReplay``.
+    """
+    dec = cluster_sim.policy_decisions(vms, "static",
+                                       static_pool_frac=static_pool_frac)[0]
+    eng = replay_engine.CompiledReplay(vms, dec, cfg)
+    stream = replay_engine.CompiledReplayStream(
+        vms, dec, cfg, max_events_per_shard=max_events_per_shard)
+    probe_s = np.linspace(150.0, 700.0, n_cand)
+    probe_p = np.linspace(0.0, 2000.0, n_cand)
+    eng.reject_rates(probe_s, probe_p)              # warm compiles
+    stream.reject_rates(probe_s, probe_p)
+    t_m, t_s = [], []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        rm = eng.reject_rates(probe_s, probe_p)
+        t_m.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        rs = stream.reject_rates(probe_s, probe_p)
+        t_s.append(time.perf_counter() - t0)
+    return {
+        "n_events": int(stream.n_events),
+        "n_shards": int(stream.n_shards),
+        "max_events_per_shard": int(max_events_per_shard),
+        "peak_shard_bytes": int(stream.peak_shard_bytes),
+        "monolithic_ms": round(min(t_m) * 1e3, 2),
+        "stream_ms": round(min(t_s) * 1e3, 2),
+        "overhead_vs_monolithic": round(min(t_s) / min(t_m), 2),
+        "events_per_sec": round(stream.n_events * n_cand / min(t_s), 1),
+        "bit_exact": rs.tolist() == rm.tolist(),
+    }
+
+
 def run(quick: bool = True) -> dict:
     print("== Fig 3: pool size vs DRAM savings (static pooling, "
           "seed-batched) ==")
@@ -122,6 +161,16 @@ def run(quick: bool = True) -> dict:
               f"vs seed loop {b['seed_loop_ms']}ms -> {b['speedup']}x "
               f"(bit_exact={b['bit_exact']})")
 
+    # sharded streaming replay vs the monolithic sweep (bounded memory)
+    streaming = streaming_sweep_bench(bench_traces[0], cfg16)
+    print(f"  streaming {streaming['n_shards']} shards of <= "
+          f"{streaming['max_events_per_shard']} events "
+          f"({streaming['peak_shard_bytes'] / 2 ** 10:.0f} KiB peak "
+          f"tensor): {streaming['stream_ms']}ms vs monolithic "
+          f"{streaming['monolithic_ms']}ms "
+          f"({streaming['events_per_sec']:.0f} cand-events/s, "
+          f"bit_exact={streaming['bit_exact']})")
+
     # measured speedup vs the scalar oracle, on the same probe frontier
     decisions, _ = cluster_sim.policy_decisions(vms_list[0], "static",
                                                 static_pool_frac=0.30)
@@ -146,7 +195,8 @@ def run(quick: bool = True) -> dict:
            "table": {str(kf): v for kf, v in table.items()},
            "spread": {str(kf): v for kf, v in spread.items()},
            "wall_s": round(wall, 3), "engine": stats,
-           "replay_speedup": round(speedup, 2), "batched": batched}
+           "replay_speedup": round(speedup, 2), "batched": batched,
+           "streaming": streaming}
     common.claim(res, "savings grow with pool size (diminishing)",
                  all(table[f][-1] >= table[f][0] - 0.01 for f in fracs),
                  str(table))
@@ -164,4 +214,7 @@ def run(quick: bool = True) -> dict:
                  batched["narrow2"]["speedup"] >= 3.0,
                  f"narrow2 {batched['narrow2']['speedup']}x, frontier16 "
                  f"{batched['frontier16']['speedup']}x")
+    common.claim(res, "sharded streaming replay bit-exact vs monolithic",
+                 streaming["bit_exact"] and streaming["n_shards"] > 1,
+                 f"{streaming['n_shards']} shards")
     return res

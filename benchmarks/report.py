@@ -106,6 +106,19 @@ def replay_table(path: str = "experiments/BENCH_replay.json") -> str:
                   f"{r.get('batched_frontier_speedup', '—')}x | "
                   f"{r.get('batched_events_per_sec', '—')} | "
                   f"{'yes' if r.get('batched_bit_exact') else 'NO'} |"]
+    if r.get("streaming_n_shards"):
+        peak = r.get("streaming_peak_shard_bytes") or 0
+        lines += ["", "### Streaming shards (bounded-memory out-of-core "
+                  "replay, carried state)", "",
+                  "| shards | shard budget (events) | peak shard tensor | "
+                  "cand-events/s | overhead vs monolithic | bit-exact |",
+                  "|---|---|---|---|---|---|",
+                  f"| {r['streaming_n_shards']} | "
+                  f"{r.get('streaming_max_events_per_shard', '—')} | "
+                  f"{peak / 2 ** 10:.0f} KiB | "
+                  f"{r.get('streaming_events_per_sec', '—')} | "
+                  f"{r.get('streaming_overhead_vs_monolithic', '—')}x | "
+                  f"{'yes' if r.get('streaming_bit_exact') else 'NO'} |"]
     return "\n".join(lines)
 
 

@@ -36,10 +36,13 @@ def perf_smoke():
     """Time the fig3 quick path; emit experiments/BENCH_replay.json.
 
     Alongside the single-trace engine numbers this records the
-    multi-trace batch benchmark: the K=8 seed batch priced in ONE
+    multi-trace batch benchmark (the K=8 seed batch priced in ONE
     vmapped sweep vs looping the engine per seed, on a 16-point frontier
-    and on the narrow 2-probe shape (bracket checks / final rates) where
-    per-seed sweeps are fixed-cost-dominated.
+    and on the narrow 2-probe shape where per-seed sweeps are
+    fixed-cost-dominated) and the sharded streaming benchmark
+    (``CompiledReplayStream``: events/s, shard count, peak shard bytes,
+    overhead vs the monolithic sweep — the cost of bounding peak
+    event-tensor memory).
     """
     from benchmarks import fig3_poolsize
     t0 = time.time()
@@ -47,6 +50,7 @@ def perf_smoke():
     wall = time.time() - t0
     batched = res.get("batched", {})
     narrow = batched.get("narrow2", {})
+    streaming = res.get("streaming", {})
     bench = {
         "benchmark": "fig3_poolsize.quick",
         "wall_s": round(wall, 3),
@@ -64,6 +68,14 @@ def perf_smoke():
                                                 {}).get("speedup"),
         "batched_events_per_sec": batched.get("frontier16",
                                               {}).get("events_per_sec"),
+        "streaming_n_shards": streaming.get("n_shards"),
+        "streaming_max_events_per_shard":
+            streaming.get("max_events_per_shard"),
+        "streaming_peak_shard_bytes": streaming.get("peak_shard_bytes"),
+        "streaming_events_per_sec": streaming.get("events_per_sec"),
+        "streaming_overhead_vs_monolithic":
+            streaming.get("overhead_vs_monolithic"),
+        "streaming_bit_exact": streaming.get("bit_exact"),
         "claims_pass": all(c["ok"] for c in res.get("claims", [])),
     }
     os.makedirs("experiments", exist_ok=True)
@@ -72,7 +84,9 @@ def perf_smoke():
     print(f"perf-smoke: {wall:.1f}s wall, "
           f"{bench['events_per_sec']} candidate-events/s, batched K="
           f"{bench['batched_k']} {bench['batched_speedup_vs_seed_loop']}x"
-          f" vs seed loop -> experiments/BENCH_replay.json")
+          f" vs seed loop, streaming {bench['streaming_n_shards']} "
+          f"shards {bench['streaming_events_per_sec']} ev/s "
+          f"-> experiments/BENCH_replay.json")
     return bench
 
 

@@ -13,6 +13,12 @@ report mean ± spread savings across the seed batch.
       (columns: arrival, lifetime, cores, mem_gb — Azure public-trace
        spellings like vmcreated/vmdeleted/vmcorecount are aliased; try
        the bundled fixture via --trace-file fixture)
+  PYTHONPATH=src python examples/cluster_savings.py \\
+      --trace-file big.csv.gz --max-events-per-shard 250000
+      # Azure-scale files: chunked ingestion (iter_trace_chunks) +
+      # sharded streaming replay (CompiledReplayStream) — bounded
+      # parse memory and a fixed event-tensor budget; fetch a real
+      # trace with scripts/fetch_azure_trace.py
 """
 import argparse
 import time
@@ -49,6 +55,16 @@ def main(argv=None):
     ap.add_argument("--servers", type=int, default=None,
                     help="cluster size (default 16, or 4 for the small "
                          "fixture trace)")
+    ap.add_argument("--max-events-per-shard", type=int, default=None,
+                    help="stream the replay in bounded event shards "
+                         "(CompiledReplayStream) once a trace exceeds "
+                         "this budget: peak EVENT-TENSOR memory stays "
+                         "fixed and --trace-file ingestion goes through "
+                         "the chunked reader (the VM records themselves "
+                         "stay in memory for the provisioning searches)")
+    ap.add_argument("--chunk-vms", type=int, default=65536,
+                    help="rows per ingestion chunk when streaming a "
+                         "--trace-file out of core")
     args = ap.parse_args(argv)
 
     horizon = 5 * 86400
@@ -56,7 +72,13 @@ def main(argv=None):
     if args.trace_file:
         path = traces.fixture_trace_path() \
             if args.trace_file == "fixture" else args.trace_file
-        vms_list = [traces.load_trace_file(path)]
+        if args.max_events_per_shard:
+            # one chunked pass (bounded parse memory); the records feed
+            # both the stream demo and the policy searches below
+            vms_list = [[v for chunk in traces.iter_trace_chunks(
+                path, chunk_vms=args.chunk_vms) for v in chunk]]
+        else:
+            vms_list = [traces.load_trace_file(path)]
         n_servers = args.servers or \
             (4 if path == traces.fixture_trace_path() else 16)
         label = path
@@ -74,7 +96,19 @@ def main(argv=None):
     # --- 1. price one candidate frontier in a single compiled sweep ----
     decisions, _ = cluster_sim.policy_decisions(vms_list[0], "static",
                                                 static_pool_frac=0.15)
-    eng = replay_engine.CompiledReplay(vms_list[0], decisions, cfg)
+    budget = args.max_events_per_shard
+    n_events = 2 * len(vms_list[0]) + \
+        sum(1 for d in decisions if d.t_migrate is not None)
+    if budget is not None and n_events > budget:
+        # sharded path: event tensors of <= budget events, carried state
+        eng = replay_engine.CompiledReplayStream(
+            vms_list[0], decisions, cfg, max_events_per_shard=budget)
+        print(f"[{label}] streaming: {eng.n_events} events in "
+              f"{eng.n_shards} shards of <= {budget} "
+              f"({eng.peak_shard_bytes / 2 ** 20:.1f} MiB peak event "
+              f"tensor)")
+    else:
+        eng = replay_engine.CompiledReplay(vms_list[0], decisions, cfg)
     hi = cfg.cores_per_server * 6.0      # per-server DRAM probe ceiling
     server_gb = np.linspace(hi * 0.5, hi, 9)
     pool_gb = np.linspace(0.0, 2.0 * hi, 9)
@@ -111,15 +145,18 @@ def main(argv=None):
     cache: dict = {}
     t0 = time.perf_counter()
     r_local = cluster_sim.savings_analysis_batched(
-        vms_list, cfg, "local", cache=cache)
+        vms_list, cfg, "local", cache=cache,
+        max_events_per_shard=budget)
     r_static = cluster_sim.savings_analysis_batched(
-        vms_list, cfg, "static", static_pool_frac=0.15, cache=cache)
+        vms_list, cfg, "static", static_pool_frac=0.15, cache=cache,
+        max_events_per_shard=budget)
     cps = [ControlPlane(
         ControlPlaneConfig(li_threshold=0.05, um_quantile=0.05), li, um,
         PoolManager(pool_gb=4096, buffer_gb=64), history=dict(hist))
         for _ in vms_list]
     r_pond = cluster_sim.savings_analysis_batched(
-        vms_list, cfg, "pond", control_planes=cps, cache=cache)
+        vms_list, cfg, "pond", control_planes=cps, cache=cache,
+        max_events_per_shard=budget)
     dt = time.perf_counter() - t0
     stats = replay_engine.stats_snapshot()
     print(f"\nthree policy searches x {len(vms_list)} trace(s) in "

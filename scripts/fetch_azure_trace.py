@@ -1,0 +1,171 @@
+"""Fetch/subset the public Azure packing trace into the ingestible schema.
+
+Pond's headline numbers are measured over production Azure traces
+(~100 days, millions of VM arrivals).  This helper turns the public
+`AzureTracesForPacking2020 <https://github.com/Azure/AzurePublicDataset>`_
+dump (the packing trace Octopus evaluates against, arXiv:2501.09020)
+into an arrival-sorted CSV(.gz) that ``repro.core.traces`` ingests
+directly — monolithically via ``load_trace_file`` or out-of-core via
+``iter_trace_chunks`` + ``replay_engine.CompiledReplayStream``:
+
+  # download the ~2 GB sqlite dump, keep the first 14 days, write CSV.gz
+  python scripts/fetch_azure_trace.py --out azure_packing.csv.gz --days 14
+
+  # reuse an already-downloaded dump, cap the VM count
+  python scripts/fetch_azure_trace.py \\
+      --sqlite packing_trace_zone_a_v1.sqlite --max-vms 500000 \\
+      --out azure_packing.csv.gz
+
+  # then replay it with bounded memory
+  PYTHONPATH=src python examples/cluster_savings.py \\
+      --trace-file azure_packing.csv.gz --max-events-per-shard 250000
+
+The packing trace stores per-VM lifetimes as fractional DAYS
+(``starttime``/``endtime``, possibly negative / NULL at the trace
+edges) and per-type core/memory as FRACTIONS of one machine, so the
+converter scales by a machine shape (``--machine-cores``,
+``--machine-gb``; defaults match the simulator's 2-socket servers),
+rounds to integral cores/GBs (the replay engine's int sweeps rely on
+integral GBs), clamps trace-edge VMs into the window, and sorts by
+arrival — the ordering ``iter_trace_chunks`` requires.  Everything
+runs on the standard library (sqlite3 + urllib + gzip); rows stream
+through a cursor so memory stays bounded.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import gzip
+import os
+import sqlite3
+import sys
+import urllib.request
+
+# From the AzurePublicDataset repo (AzureTracesForPacking2020.md); the
+# blob is ~2 GB.  Override with --url if Microsoft moves it.
+DEFAULT_URL = ("https://azurepublicdatasettraces.blob.core.windows.net/"
+               "azurepublicdatasetv2/trace_data/"
+               "packing_trace_zone_a_v1.sqlite")
+
+#: vm join vmType, one row per VM; vmType repeats per candidate machine,
+#: so take the max normalized core/memory per type (the shape the
+#: packing problem must fit).  NULL endtime = alive past the trace end.
+_QUERY = """
+SELECT v.vmId, v.tenantId, v.starttime, v.endtime, t.core, t.memory
+FROM vm v
+JOIN (SELECT vmTypeId, MAX(core) AS core, MAX(memory) AS memory
+      FROM vmType GROUP BY vmTypeId) t
+ON v.vmTypeId = t.vmTypeId
+ORDER BY v.starttime
+"""
+
+
+def download(url: str, dest: str, quiet: bool = False) -> str:
+    """Fetch ``url`` to ``dest`` (skipped when the file already exists)."""
+    if os.path.exists(dest):
+        if not quiet:
+            print(f"reusing existing {dest}")
+        return dest
+    if not quiet:
+        print(f"downloading {url} -> {dest} (this is a ~2 GB file)")
+
+    def report(blocks, bsize, total):
+        if quiet or total <= 0:
+            return
+        done = blocks * bsize * 100 // total
+        sys.stdout.write(f"\r  {min(done, 100)}%")
+        sys.stdout.flush()
+
+    tmp = dest + ".part"
+    urllib.request.urlretrieve(url, tmp, reporthook=report)
+    os.replace(tmp, dest)
+    if not quiet:
+        print()
+    return dest
+
+
+def convert(sqlite_path: str, out_path: str, days: float | None = None,
+            max_vms: int | None = None, machine_cores: int = 64,
+            machine_gb: int = 384, quiet: bool = False) -> int:
+    """Convert the packing-trace sqlite dump to the ingestible CSV schema.
+
+    Writes ``(vm_id, customer, arrival, lifetime, cores, mem_gb)`` rows
+    sorted by arrival (seconds), scaled to one ``machine_cores`` x
+    ``machine_gb`` machine shape and rounded to integral cores/GBs.
+    VMs starting before the window clamp to arrival 0; VMs without an
+    endtime (or ending past ``--days``) depart at the window edge —
+    without ``--days`` that edge is the latest endtime in the dump, so
+    lifetimes stay finite and the loaders' ``lifetime > 0`` /
+    finiteness validation passes.  Returns the number of rows written.
+    """
+    con = sqlite3.connect(f"file:{sqlite_path}?mode=ro", uri=True)
+    if days is not None:
+        horizon_days = float(days)
+    else:
+        row = con.execute("SELECT MAX(endtime) FROM vm").fetchone()
+        horizon_days = float(row[0]) if row and row[0] is not None \
+            else 14.0
+    opener = gzip.open if out_path.lower().endswith(".gz") else open
+    n = 0
+    try:
+        cur = con.execute(_QUERY)
+        with opener(out_path, "wt", newline="") as f:
+            w = csv.writer(f)
+            w.writerow(["vm_id", "customer", "arrival", "lifetime",
+                        "cores", "mem_gb"])
+            for vm_id, tenant, start, end, core, mem in cur:
+                if start is None or core is None or mem is None:
+                    continue
+                start = max(0.0, float(start))
+                if start >= horizon_days:
+                    break                      # rows are start-sorted
+                end = horizon_days if end is None \
+                    else min(float(end), horizon_days)
+                life_s = (end - start) * 86400.0
+                if life_s <= 0.0:
+                    continue
+                w.writerow([vm_id, tenant,
+                            f"{start * 86400.0:.3f}", f"{life_s:.3f}",
+                            max(1, round(float(core) * machine_cores)),
+                            max(1, round(float(mem) * machine_gb))])
+                n += 1
+                if max_vms is not None and n >= max_vms:
+                    break
+    finally:
+        con.close()
+    if not quiet:
+        print(f"wrote {n} VMs -> {out_path}")
+    return n
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--out", default="azure_packing.csv.gz",
+                    help="output CSV (gzipped when the name ends in .gz)")
+    ap.add_argument("--sqlite", default="packing_trace_zone_a_v1.sqlite",
+                    help="local sqlite dump path (downloaded when absent)")
+    ap.add_argument("--url", default=DEFAULT_URL,
+                    help="trace blob URL (see the AzurePublicDataset "
+                         "repo if the default 404s)")
+    ap.add_argument("--days", type=float, default=None,
+                    help="keep only VMs arriving in the first N days")
+    ap.add_argument("--max-vms", type=int, default=None,
+                    help="cap the number of emitted VMs")
+    ap.add_argument("--machine-cores", type=int, default=64,
+                    help="cores of the machine shape the trace's "
+                         "normalized demands scale to")
+    ap.add_argument("--machine-gb", type=int, default=384,
+                    help="DRAM GB of the machine shape")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    if not os.path.exists(args.sqlite):
+        download(args.url, args.sqlite, quiet=args.quiet)
+    convert(args.sqlite, args.out, days=args.days, max_vms=args.max_vms,
+            machine_cores=args.machine_cores, machine_gb=args.machine_gb,
+            quiet=args.quiet)
+
+
+if __name__ == "__main__":
+    main()

@@ -233,9 +233,9 @@ def policy_decisions(vms, policy: str,
             local_gb, fully = vm.mem_gb - pool_gb, False
         elif policy == "pond":
             local_gb, pool_gb, fully, _ = control_plane.decide(vm)
-            h = list(control_plane.history.get(vm.customer, []))
-            h.append(vm.untouched)
-            control_plane.history[vm.customer] = h
+            # in-place append (record_untouched): the old copy-append
+            # per VM was quadratic in VMs-per-customer at trace scale
+            control_plane.record_untouched(vm.customer, vm.untouched)
             if pool_gb > 0:
                 spilled = fully or pool_gb > vm.untouched * vm.mem_gb + 1e-9
                 mit = control_plane.monitor.check(
@@ -337,7 +337,9 @@ def savings_analysis(vms, cfg: ClusterConfig, policy: str,
                      spill_harm_prob: float = 0.25,
                      reject_tol: float = 0.005,
                      use_engine: bool = True,
-                     cache: dict | None = None) -> PolicyResult:
+                     cache: dict | None = None,
+                     max_events_per_shard: int | None = None
+                     ) -> PolicyResult:
     """Minimum uniform (server_gb, pool_gb) that schedules the trace.
 
     With ``use_engine=True`` (default) the feasibility searches run on the
@@ -349,11 +351,28 @@ def savings_analysis(vms, cfg: ClusterConfig, policy: str,
     infinite-pool trajectory.  ``use_engine=False`` runs the original
     scalar-oracle searches (slow; kept as the equivalence reference).
 
+    ``max_events_per_shard``: memory budget for Azure-scale traces.
+    When set and the trace's event count (2 per VM + 1 per QoS
+    migration) would overflow one padded event tensor, every search
+    transparently runs on a
+    ``replay_engine.CompiledReplayStream`` — time-windowed shards with
+    the placement state carried shard to shard — so peak event-tensor
+    memory stays bounded while reject rates remain bit-exact vs the
+    monolithic engine (pool searches then bracket with the vectorized
+    peak-pool-demand bound instead of per-size trajectories).
+
     ``cache``: optional dict shared across calls on the SAME trace and
     server shape (callers pricing several policies/pool sizes over one
     trace, like fig3/fig21).  It memoizes the all-local engine and the
     baseline provisioning search, which do not depend on policy or pool
-    topology."""
+    topology.
+
+    Usage (stream a large ingested trace with a ~250k-event budget)::
+
+        vms = traces.load_trace_file("azure_packing.csv.gz")
+        res = savings_analysis(vms, cfg, "static",
+                               max_events_per_shard=250_000)
+    """
     decisions, mispred = policy_decisions(
         vms, policy, control_plane, static_pool_frac, latency, pdm,
         spill_harm_prob)
@@ -362,6 +381,19 @@ def savings_analysis(vms, cfg: ClusterConfig, policy: str,
     mitig = len(control_plane.mitigation.log) if control_plane else 0
     dec_local = [VMDecision(vm.mem_gb, 0.0, False, None) for vm in vms]
     n_pts = 7
+
+    def _compile(vms_, dec_):
+        # past the shard budget, stream instead of materializing one
+        # monolithic padded event tensor (2 events per VM + 1 per QoS
+        # migration — count them, pond traces run well past 2/VM)
+        n_events = 2 * len(vms_) + \
+            sum(1 for d in dec_ if d.t_migrate is not None)
+        if max_events_per_shard is not None and \
+                n_events > max_events_per_shard:
+            return replay_engine.CompiledReplayStream(
+                vms_, dec_, cfg,
+                max_events_per_shard=max_events_per_shard)
+        return replay_engine.CompiledReplay(vms_, dec_, cfg)
 
     if not use_engine:                       # scalar-oracle reference path
         # cores-bound reject floor: memory tolerance is on top of it
@@ -389,7 +421,7 @@ def savings_analysis(vms, cfg: ClusterConfig, policy: str,
         return PolicyResult(policy, server_gb, pool_gb, base_gb,
                             cfg.n_servers, cfg.n_groups, mispred, mitig, rr)
 
-    eng = replay_engine.CompiledReplay(vms, decisions, cfg)
+    eng = _compile(vms, decisions)
     # cores-bound reject floor: memory tolerance is measured on top of it
     r0 = float(eng.reject_rates(hi_server, big_pool)[0])
     tol = r0 + reject_tol
@@ -412,7 +444,7 @@ def savings_analysis(vms, cfg: ClusterConfig, policy: str,
     if cache is not None and "local_engine" in cache:
         eng_local = cache["local_engine"]
     else:
-        eng_local = replay_engine.CompiledReplay(vms, dec_local, cfg)
+        eng_local = _compile(vms, dec_local)
         if cache is not None:
             cache["local_engine"] = eng_local
     base_gb = cache.get(("base_gb", tol)) if cache is not None else None
@@ -442,7 +474,8 @@ def savings_analysis_batched(vms_list, cfg: ClusterConfig, policy: str,
                              latency: int = 182, pdm: float = 0.05,
                              spill_harm_prob: float = 0.25,
                              reject_tol: float = 0.005,
-                             cache: dict | None = None
+                             cache: dict | None = None,
+                             max_events_per_shard: int | None = None
                              ) -> list[PolicyResult]:
     """``savings_analysis`` for K traces at once — one sweep instead of K.
 
@@ -462,12 +495,42 @@ def savings_analysis_batched(vms_list, cfg: ClusterConfig, policy: str,
     ``pond`` policy — decisions mutate per-customer history, so traces
     must not share one.  ``cache``: share the all-local baseline batch
     across policies of the SAME trace list (like ``savings_analysis``).
+
+    ``max_events_per_shard``: when set and any trace's event count
+    (bounded above by 3 per VM) may exceed the budget, each trace is
+    priced sequentially on a
+    bounded-memory ``CompiledReplayStream`` via ``savings_analysis``
+    (lockstep vmapped batching needs the whole padded event tensor in
+    memory, which is exactly what the budget rules out); per-trace
+    sub-caches still share the all-local baseline across policies.
+
+    Usage (stream a K-seed batch past the shard budget)::
+
+        res = savings_analysis_batched(vms_list, cfg, "static",
+                                       max_events_per_shard=200_000)
+        print(summarize_savings(res))
     """
     k = len(vms_list)
     if not k:
         return []
     cps = list(control_planes) if control_planes is not None \
         else [None] * k
+    # conservative 3 events/VM bound (decisions — and thus the exact
+    # MIGRATE count — are not computed yet here; the per-trace calls
+    # below re-check with exact counts and may still run monolithic)
+    if max_events_per_shard is not None and any(
+            3 * len(v) > max_events_per_shard for v in vms_list):
+        out = []
+        for i, (vms, cp) in enumerate(zip(vms_list, cps)):
+            sub = cache.setdefault(("stream", i), {}) \
+                if cache is not None else None
+            out.append(savings_analysis(
+                vms, cfg, policy, control_plane=cp,
+                static_pool_frac=static_pool_frac, latency=latency,
+                pdm=pdm, spill_harm_prob=spill_harm_prob,
+                reject_tol=reject_tol, cache=sub,
+                max_events_per_shard=max_events_per_shard))
+        return out
     per = [policy_decisions(vms, policy, cp, static_pool_frac, latency,
                             pdm, spill_harm_prob)
            for vms, cp in zip(vms_list, cps)]

@@ -48,6 +48,8 @@ class ControlPlane:
         self.um_model = um_model
         self.pm = pool_manager
         self.history = history or {}
+        self._owned_hist: set = set()   # customers whose history list
+        # is private to this plane (see record_untouched)
         self.mitigation = MitigationManager()
         self.monitor = QoSMonitor(
             cfg.pdm,
@@ -84,14 +86,39 @@ class ControlPlane:
         self.placements[vm.vm_id] = pl
         return pl
 
+    def record_untouched(self, customer: int, untouched: float) -> None:
+        """Append one untouched-memory observation to a customer's
+        history, in place (amortized O(1) per VM).
+
+        Seeded histories (``traces.build_history`` arrays, or plain
+        lists) may be SHARED across control planes via shallow
+        ``dict(hist)`` copies, so this plane's FIRST write per customer
+        copies the stored sequence to a private list — siblings keep
+        seeing the seed data only, whatever type it was.  Callers that
+        want to rewind observations use :meth:`reset_history`.
+        """
+        h = self.history.get(customer)
+        if customer not in self._owned_hist:
+            h = [] if h is None else list(h)
+            self.history[customer] = h
+            self._owned_hist.add(customer)
+        h.append(untouched)
+
+    def reset_history(self, history: dict | None = None) -> None:
+        """Reset hook for :meth:`record_untouched`'s in-place appends:
+        drop every recorded observation and (optionally) re-seed from a
+        fresh per-customer mapping, e.g. ``traces.build_history`` output.
+        The mapping is shallow-copied, matching the constructor (the
+        next write per customer makes a private copy)."""
+        self.history = dict(history) if history is not None else {}
+        self._owned_hist = set()
+
     def on_departure(self, vm: traces.VM, now: float):
         pl = self.placements.pop(vm.vm_id, None)
         if pl is not None and pl.pool_gb > 0:
             self.pm.release_capacity(pl.host, now, gb=pl.pool_gb)
         if pl is not None:
-            h = list(self.history.get(vm.customer, []))
-            h.append(vm.untouched)
-            self.history[vm.customer] = h
+            self.record_untouched(vm.customer, vm.untouched)
 
     # ------------------------------------------------------------- B flow -
     def monitor_step(self, vm: traces.VM, now: float):

@@ -80,6 +80,18 @@ each size's infinite-pool trajectory and warm-started from neighbors
   in lockstep on top of it (one sweep per search round), which is what
   ``cluster_sim.savings_analysis_batched`` uses to report mean ± spread
   savings across a seed batch.  See ``docs/replay_engine.md``.
+
+* **Streaming shards** — ``CompiledReplayStream`` prices traces whose
+  padded event tensor would not fit memory: events compile into
+  time-windowed shards of at most ``max_events_per_shard`` and the
+  packed placement state threads from shard to shard as the scan
+  carry, so N shards replay exactly like one monolithic sweep (reject
+  rates bit-exact vs ``CompiledReplay``).  Chunked construction from
+  ``traces.iter_trace_chunks`` keeps ingestion memory bounded too.
+  Sweep state packs to int16 when server capacities permit (half the
+  CPU memory traffic), with an automatic int32 fallback — both the
+  stream and the monolithic XLA sweep use the same
+  ``_pick_state_dtype`` overflow rules.
 """
 from __future__ import annotations
 
@@ -101,15 +113,18 @@ _BUCKETS = (2, 4, 16, 32, JAX_CHUNK)   # padded candidate widths (lazy
 # would waste most of the sweep)
 _INF = np.inf
 _I32_BIG = 1 << 30    # "infinite" capacity in the int32 sweep
+_I16_BIG = 1 << 14    # best-fit score sentinel in the int16 sweep
+_I16_SAFE = 30000     # int16 headroom bound: capacity + payload must fit
 
 
 # ----------------------------------------------------------- XLA backend ---
-_JAX_SWEEP = None        # jitted sweep, or False when jax is unavailable
+_JAX_OK = None           # tri-state: None unknown, then True/False
+_JAX_SWEEPS: dict = {}   # (state_dtype, with_carry) -> jitted sweep
 _JAX_BATCH_SWEEP = None  # jitted vmapped sweep (leading trace axis)
 
 
-def _build_sweep():
-    """Build the (unjitted) int32 event-sweep function.
+def _build_sweep(state_dtype: str = "int32", with_carry: bool = False):
+    """Build the (unjitted) integer event-sweep function.
 
     Because every VM memory quantity is an integral GB, admission tests
     like ``free_mem >= local_gb`` are equivalent to
@@ -120,6 +135,19 @@ def _build_sweep():
     peak concurrency, far smaller than n_vms) updated with leading-axis
     dynamic_update_slice so the scan carry stays in place.
 
+    ``state_dtype="int16"`` packs the carry (free cores, used local GB,
+    used pool GB, placement slots) to int16, halving the sweep's memory
+    traffic.  The int16 sweep is bit-equivalent to int32 whenever no
+    intermediate can overflow; callers must check
+    ``CompiledReplay._pick_state_dtype`` (capacity + per-VM payload
+    headroom within ``_I16_SAFE``) before selecting it.  Candidate
+    events stay int32 and are cast inside the body; the reject counters
+    stay int32 (a trace can reject more than 2^15 VMs).
+
+    ``with_carry=True`` returns the shard variant used by
+    :class:`CompiledReplayStream`: it takes AND returns the full packed
+    state, so consecutive time-windowed shards thread the carry.
+
     The returned function is pure over jax arrays: ``_get_jax_sweep``
     jits it directly; ``_get_jax_batch_sweep`` vmaps it over a leading
     trace axis (event streams and candidate capacities per trace, shared
@@ -128,12 +156,16 @@ def _build_sweep():
     """
     import jax.numpy as jnp
     from jax import lax
-    big = jnp.int32(_I32_BIG)
-    zero = jnp.int32(0)
+    dt = jnp.int16 if state_dtype == "int16" else jnp.int32
+    big = jnp.asarray(_I16_BIG if state_dtype == "int16" else _I32_BIG,
+                      dt)
+    zero = jnp.asarray(0, dt)
 
     def body(carry, ev):
         fc, um, up, slots, rejects, sgb, pgb, group_of = carry
         kind, sl, c, l, p, m = ev
+        c, l, p, m = (c.astype(dt), l.astype(dt), p.astype(dt),
+                      m.astype(dt))
         is_arr, is_dep, is_mig = kind == ARRIVE, kind == DEPART, \
             kind == MIGRATE
         val = slots[sl]                              # (C,) packed s*2+mig
@@ -178,9 +210,15 @@ def _build_sweep():
         new_val = jnp.where(is_arr, aval,
                             jnp.where(is_dep, -1,
                                       jnp.where(act_mig, val | 1, val)))
-        slots = lax.dynamic_update_index_in_dim(slots, new_val, sl, 0)
+        slots = lax.dynamic_update_index_in_dim(
+            slots, new_val.astype(slots.dtype), sl, 0)
         rejects = rejects + (is_arr & ~feas1 & ~feas2)
         return (fc, um, up, slots, rejects, sgb, pgb, group_of), None
+
+    def sweep_carry(evs, group_of, fc0, um0, up0, slots0, rej0, sgb, pgb):
+        init = (fc0, um0, up0, slots0, rej0, sgb, pgb, group_of)
+        out, _ = lax.scan(body, init, evs)
+        return out[0], out[1], out[2], out[3], out[4]
 
     def sweep(evs, group_of, fc0, um0, up0, slots0, sgb, pgb):
         init = (fc0, um0, up0, slots0,
@@ -188,21 +226,32 @@ def _build_sweep():
         out, _ = lax.scan(body, init, evs)
         return out[4]
 
-    return sweep
+    return sweep_carry if with_carry else sweep
 
 
-def _get_jax_sweep():
-    """Jitted single-trace sweep, or None when jax is unavailable."""
-    global _JAX_SWEEP
-    if _JAX_SWEEP is not None:
-        return _JAX_SWEEP or None
-    try:
-        import jax
-    except Exception:                                # pragma: no cover
-        _JAX_SWEEP = False
+def _jax_importable() -> bool:
+    global _JAX_OK
+    if _JAX_OK is None:
+        try:
+            import jax                               # noqa: F401
+            _JAX_OK = True
+        except Exception:                            # pragma: no cover
+            _JAX_OK = False
+    return _JAX_OK
+
+
+def _get_jax_sweep(state_dtype: str = "int32", with_carry: bool = False):
+    """Jitted single-trace sweep (per state dtype / carry variant), or
+    None when jax is unavailable.  Compiled lazily, one jit per key."""
+    if not _jax_importable():
         return None
-    _JAX_SWEEP = jax.jit(_build_sweep())
-    return _JAX_SWEEP
+    key = (state_dtype, with_carry)
+    fn = _JAX_SWEEPS.get(key)
+    if fn is None:
+        import jax
+        fn = jax.jit(_build_sweep(state_dtype, with_carry))
+        _JAX_SWEEPS[key] = fn
+    return fn
 
 
 def _get_jax_batch_sweep():
@@ -218,11 +267,10 @@ def _get_jax_batch_sweep():
     global _JAX_BATCH_SWEEP
     if _JAX_BATCH_SWEEP is not None:
         return _JAX_BATCH_SWEEP or None
-    try:
-        import jax
-    except Exception:                                # pragma: no cover
+    if not _jax_importable():                        # pragma: no cover
         _JAX_BATCH_SWEEP = False
         return None
+    import jax
     _JAX_BATCH_SWEEP = jax.jit(jax.vmap(
         _build_sweep(),
         in_axes=((0, 0, 0, 0, 0, 0), None, None, None, None, None, 0, 0)))
@@ -345,6 +393,11 @@ class CompiledReplay:
             and p.is_integer()
             for c, m, l, p in zip(self._cores, self._mem, self._local,
                                   self._pool))
+        # per-VM payload maxima: the int16 state-packing overflow check
+        # bounds every admission intermediate by capacity + payload
+        self._pay_mem_max = max(max(self._mem, default=0.0),
+                                max(self._local, default=0.0))
+        self._pay_pool_max = max(self._pool, default=0.0)
 
         # events in the oracle's insertion order: per VM —
         # (arrival, ARRIVE), (t_migrate, MIGRATE)?, (departure, DEPART) —
@@ -362,6 +415,7 @@ class CompiledReplay:
               | (t_mig >= np.fromiter((vm.departure for vm in vms),
                                       float, n))] = np.nan
         times[1::3] = t_mig
+        self._has_migrate = bool((~np.isnan(t_mig)).any())
         times[2::3] = np.fromiter((vm.departure for vm in vms), float, n)
         kinds = np.tile(np.array([ARRIVE, MIGRATE, DEPART], np.int64), n)
         vmidx = np.repeat(np.arange(n, dtype=np.int64), 3)
@@ -446,30 +500,65 @@ class CompiledReplay:
         self._jax_ev = (evs, jnp.asarray(group_np), n_slots, s_pad, g_pad)
         return self._jax_ev
 
-    def _reject_rates_jax(self, server_gb, pool_gb) -> np.ndarray:
-        """XLA sweep over the whole batch, in candidate chunks of 16/96."""
+    def _pick_state_dtype(self, sgb_i: np.ndarray,
+                          pgb_i: np.ndarray) -> str:
+        """``"int16"`` when every sweep intermediate provably fits int16.
+
+        The admission tests compute at most ``capacity + one payload``
+        (used mem is invariantly <= server_gb, used pool <= pool_gb), so
+        int16 is bit-equivalent to int32 whenever the candidate maxima
+        plus the per-VM payload maxima stay within ``_I16_SAFE``, the
+        best-fit score sentinel exceeds every free-cores value, and the
+        packed slot values (server * 2 + 1) fit.  One more exclusion:
+        traces with MIGRATE events always run int32 — the oracle's
+        fallback-migrate quirk returns pool a fallback-placed VM never
+        consumed, driving the used-pool carry negative without bound
+        over the trace, so no static capacity check can rule out int16
+        underflow there.  Anything else falls back to int32
+        automatically.
+        """
+        if (not self._has_migrate
+                and self.cores_per_server < _I16_BIG
+                and self.n_servers * 2 + 1 < _I16_BIG
+                and len(sgb_i) and sgb_i.min() >= 0 and pgb_i.min() >= 0
+                and sgb_i.max() + self._pay_mem_max <= _I16_SAFE
+                and pgb_i.max() + self._pay_pool_max <= _I16_SAFE):
+            return "int16"
+        return "int32"
+
+    def _reject_rates_jax(self, server_gb, pool_gb,
+                          state_dtype: str | None = None) -> np.ndarray:
+        """XLA sweep over the whole batch, in candidate chunks of 16/96.
+
+        Carry state packs to int16 when capacities permit (half the
+        sweep's memory traffic) and falls back to int32 otherwise;
+        ``state_dtype`` forces one packing (testing hook).
+        """
         import jax.numpy as jnp
-        sweep = _get_jax_sweep()
         evs, group_of, n_slots, s_pad, g_pad = self._jax_events()
         n0 = len(server_gb)
         rejects = np.empty(n0, np.int64)
         # integral quantities: floor() keeps admission tests identical
         sgb_i = np.clip(np.floor(server_gb), -_I32_BIG, _I32_BIG)
         pgb_i = np.clip(np.floor(pool_gb), -_I32_BIG, _I32_BIG)
+        dt_name = state_dtype or self._pick_state_dtype(sgb_i, pgb_i)
+        np_dt = np.int16 if dt_name == "int16" else np.int32
+        neg_big = _I16_BIG if dt_name == "int16" else _I32_BIG
+        sweep = _get_jax_sweep(dt_name)
         for lo in range(0, n0, JAX_CHUNK):
             hi = min(lo + JAX_CHUNK, n0)
             k = hi - lo
             n_cand = _bucket(k)
-            sgb = np.full(n_cand, sgb_i[hi - 1], np.int32)
-            pgb = np.full(n_cand, pgb_i[hi - 1], np.int32)
+            sgb = np.full(n_cand, sgb_i[hi - 1], np_dt)
+            pgb = np.full(n_cand, pgb_i[hi - 1], np_dt)
             sgb[:k] = sgb_i[lo:hi]
             pgb[:k] = pgb_i[lo:hi]
-            fc0 = np.full((n_cand, s_pad), -_I32_BIG, np.int32)
-            fc0[:, :self.n_servers] = np.int32(self.cores_per_server)
+            fc0 = np.full((n_cand, s_pad), -neg_big, np_dt)
+            fc0[:, :self.n_servers] = np_dt(self.cores_per_server)
             out = sweep(evs, group_of, jnp.asarray(fc0),
-                        jnp.zeros((n_cand, s_pad), jnp.int32),
-                        jnp.zeros((n_cand, g_pad), jnp.int32),
-                        jnp.full((n_slots, n_cand), -1, jnp.int32),
+                        jnp.zeros((n_cand, s_pad), np_dt),
+                        jnp.zeros((n_cand, g_pad), np_dt),
+                        jnp.full((n_slots, n_cand), -1, np_dt),
                         jnp.asarray(sgb), jnp.asarray(pgb))
             rejects[lo:hi] = np.asarray(out)[:k]
         return rejects / max(self.n_vms, 1)
@@ -602,13 +691,18 @@ class CompiledReplay:
     # ------------------------------------------------------------- sweep --
     def reject_rates(self, server_gb, pool_gb,
                      reject_cap: int | None = None,
-                     backend: str = "auto") -> np.ndarray:
+                     backend: str = "auto",
+                     state_dtype: str | None = None) -> np.ndarray:
         """Reject fraction for each (server_gb, pool_gb) candidate.
 
         Accepts scalars or broadcastable 1-D arrays; one event sweep prices
-        the whole batch.  ``backend="auto"`` uses the XLA int32 sweep when
-        jax is importable and the decisions are integral GBs (bit-exact
-        either way), falling back to the numpy divergence-window sweep.
+        the whole batch.  ``backend="auto"`` uses the XLA integer sweep
+        when jax is importable and the decisions are integral GBs
+        (bit-exact either way), falling back to the numpy
+        divergence-window sweep.  The XLA carry packs to int16 when the
+        candidate capacities (plus payload headroom) permit — half the
+        memory traffic — and falls back to int32 automatically;
+        ``state_dtype`` ("int16"/"int32") forces one packing for tests.
         With ``reject_cap`` set, the numpy backend drops candidates
         exceeding the cap mid-sweep and reports the lower bound
         ``(reject_cap + 1) / n_vms`` — only valid for feasibility tests
@@ -633,7 +727,8 @@ class CompiledReplay:
         if backend == "auto" and self._exact and _get_jax_sweep():
             backend = "jax"
         if backend == "jax":
-            rates = self._reject_rates_jax(server_gb, pool_gb)
+            rates = self._reject_rates_jax(server_gb, pool_gb,
+                                           state_dtype=state_dtype)
             _STATS.sweeps += 1
             _STATS.events += n_ev
             _STATS.candidate_events += n_ev * n0
@@ -878,6 +973,475 @@ class CompiledReplay:
         return rates
 
 
+# ------------------------------------------------------------- streaming ---
+def _np_stream_sweep(shard, gcols, free, placed, migrated, rejects):
+    """Numpy shard sweep over carried state (float64, oracle-ordered ops).
+
+    Vectorized over candidates like the divergence-window backend's wave
+    loop, but slot-indexed and carry-threaded: ``free`` is the packed
+    ``(C, n_servers + 1, 3)`` free-capacity array (cores / local GB /
+    mirrored group pool GB; the +1 dummy column absorbs ragged pool
+    groups), ``placed``/``migrated`` are ``(C, n_slots)`` placement
+    state, ``rejects`` the per-candidate counters — all mutated in
+    place so consecutive shards continue one replay.  Tracking FREE
+    capacities (not usage) keeps the float adds/subtracts in the scalar
+    oracle's exact order, so non-integral decisions stay bit-exact too.
+    """
+    kind, slot = shard["kind"], shard["slot"]
+    cs, ls, ps, ms = shard["c"], shard["l"], shard["p"], shard["m"]
+    cidx = np.arange(free.shape[0])
+    for e in range(len(kind)):
+        k = kind[e]
+        if k == PAD:
+            continue
+        sl = slot[e]
+        if k == DEPART:
+            s = placed[:, sl]
+            rows = cidx[s >= 0]
+            if rows.size:
+                sv = s[rows]
+                mg = migrated[rows, sl]
+                free[rows, sv, 0] += cs[e]
+                free[rows, sv, 1] += np.where(mg, ms[e], ls[e])
+                free[rows[:, None], gcols[sv], 2] += \
+                    np.where(mg, 0.0, ps[e])[:, None]
+                migrated[rows, sl] = False
+            placed[:, sl] = -1
+            continue
+        if k == MIGRATE:
+            p = ps[e]
+            s = placed[:, sl]
+            rows = cidx[s >= 0]
+            if rows.size:
+                sv = s[rows]
+                room = free[rows, sv, 1] >= p
+                rows, sv = rows[room], sv[room]
+                if rows.size:
+                    free[rows, sv, 1] -= p
+                    free[rows[:, None], gcols[sv], 2] += p
+                    migrated[rows, sl] = True
+            continue
+        # ARRIVE: best fit by cores among servers whose free local memory
+        # and group pool fit (same fused compare as the wave loop)
+        vec3 = np.array([cs[e], ls[e], ps[e]])
+        ok = (free >= vec3).all(-1)
+        score = np.where(ok, free[:, :, 0], _INF)
+        s = score.argmin(1)
+        best = score[cidx, s]
+        p = ps[e]
+        feas = ~np.isinf(best)
+        rows = cidx[feas]
+        if rows.size:
+            sv = s[rows]
+            free[rows, sv, 0] -= cs[e]
+            free[rows, sv, 1] -= ls[e]
+            if p > 0.0:
+                free[rows[:, None], gcols[sv], 2] -= p
+            placed[rows, sl] = sv
+        bad = cidx[~feas]
+        if bad.size:
+            # pool short -> control-plane fallback: start the VM all-local
+            c, m = cs[e], ms[e]
+            sub = free[bad]
+            ok2 = (sub[:, :, 0] >= c) & (sub[:, :, 1] >= m)
+            score2 = np.where(ok2, sub[:, :, 0], _INF)
+            s2 = score2.argmin(1)
+            inf2 = np.isinf(score2[np.arange(len(bad)), s2])
+            rows2 = bad[~inf2]
+            if rows2.size:
+                sv2 = s2[~inf2]
+                free[rows2, sv2, 0] -= c
+                free[rows2, sv2, 1] -= m
+                placed[rows2, sl] = sv2
+                migrated[rows2, sl] = True       # departs as all-local
+            rejects[bad[inf2]] += 1
+
+
+class CompiledReplayStream:
+    """Out-of-core replay: time-windowed event shards, carried state.
+
+    Prices arbitrarily long traces with peak event-tensor memory set by
+    ``max_events_per_shard``: events compile into fixed-size shards and
+    the packed placement state (free cores, used local/pool GB, the
+    slot array, reject counters) threads from shard to shard as the
+    ``lax.scan`` carry, so N shards replay EXACTLY like one monolithic
+    sweep — reject rates are bit-exact vs :class:`CompiledReplay` on
+    any trace that fits both paths (asserted in
+    ``tests/test_replay_stream.py``).  The carry packs to int16 when
+    server capacities permit (automatic int32 fallback, same rules as
+    the monolithic sweep); without jax (or with non-integral GB
+    decisions) a numpy shard sweep carries the same state in float64.
+
+    Two construction modes:
+
+    * **in-memory** — drop-in for :class:`CompiledReplay` when only the
+      padded event tensor (not the VM list) outgrows memory::
+
+          stream = CompiledReplayStream(vms, decisions, cfg,
+                                        max_events_per_shard=100_000)
+          rates = stream.reject_rates([300.0, 350.0], [512.0, 256.0])
+
+    * **chunked** — bounded-memory ingestion from an iterator of VM
+      chunks (e.g. ``traces.iter_trace_chunks``); chunk arrivals must be
+      non-decreasing across chunk boundaries, and ``decide`` maps each
+      chunk to its per-VM decisions (default: all-local)::
+
+          stream = CompiledReplayStream(
+              traces.iter_trace_chunks("azure.csv.gz", chunk_vms=10**5),
+              None, cfg, max_events_per_shard=250_000,
+              decide=lambda chunk: cluster_sim.policy_decisions(
+                  chunk, "static", static_pool_frac=0.15)[0])
+
+    Chunk ingestion keeps compact per-event arrays (~40 host bytes per
+    event), per-VM payload scalars (5 machine words per VM) and the
+    pending-departure buffer; the heavyweight VM records (PMU vectors
+    etc.) of a consumed chunk are dropped before the next chunk loads,
+    and only ONE shard's padded event tensor is ever materialized for
+    the sweep — that last quantity is what ``max_events_per_shard``
+    bounds.  ``scripts/fetch_azure_trace.py`` emits arrival-sorted
+    trace files that stream through this path unchanged.
+    """
+
+    def __init__(self, vms, decisions=None, cfg=None, *,
+                 max_events_per_shard: int = 262_144, decide=None):
+        if cfg is None:
+            raise TypeError("CompiledReplayStream(vms, decisions, cfg): "
+                            "cfg is required")
+        if max_events_per_shard < 256:
+            raise ValueError("max_events_per_shard must be >= 256")
+        self.cfg = cfg
+        # floored to a multiple of 256 (the shard pad granularity) so
+        # the padded per-sweep tensor NEVER exceeds the stated budget
+        self.max_events_per_shard = int(max_events_per_shard) // 256 * 256
+        self.n_servers = n_srv = cfg.n_servers
+        self.n_groups = cfg.n_groups
+        self.group_of = np.arange(n_srv) // cfg.servers_per_group
+        self.cores_per_server = float(cfg.cores_per_server)
+        spg_max = int(np.bincount(self.group_of).max())
+        self._gcols = np.full((n_srv, spg_max), n_srv, np.int64)
+        for s in range(n_srv):
+            members = np.flatnonzero(self.group_of == self.group_of[s])
+            self._gcols[s, :len(members)] = members
+
+        # ingest state
+        self.n_vms = 0
+        self._cores: list[float] = []
+        self._local: list[float] = []
+        self._pool: list[float] = []
+        self._mem: list[float] = []
+        self._exact = True
+        self._pend_t: list[float] = []
+        self._pend_k: list[int] = []
+        self._pend_v: list[int] = []
+        self._t_seen = -_INF          # latest arrival ingested
+        self._t_flushed = -_INF       # events < this are already compiled
+        self._slot_of: list[int] = []
+        self._free_slots: list[int] = []
+        self._next_slot = 0
+        self._buf: dict[str, list] = {k: [] for k in
+                                      ("kind", "slot", "c", "l", "p", "m")}
+        self._shards: list[dict] = []
+        self.n_events = 0
+        self._pool_cum = 0.0
+        self._peak_pool = 0.0
+        self._pay_mem_max = 0.0
+        self._pay_pool_max = 0.0
+        self._has_migrate = False
+
+        it = iter(vms)
+        first = next(it, None)
+        if first is None:
+            pass                                    # empty trace
+        elif hasattr(first, "arrival"):             # flat VM list
+            allvms = [first, *it]
+            if decisions is not None and len(decisions) != len(allvms):
+                raise ValueError("decisions must align with vms")
+            self._ingest_chunk(allvms, decisions)
+        else:                                       # iterator of chunks
+            if decisions is not None:
+                raise ValueError(
+                    "pass decisions=None with a chunk iterator; supply a "
+                    "decide(chunk) callback instead")
+            for chunk in ([first] if first else []):
+                self._ingest_chunk(chunk,
+                                   decide(chunk) if decide else None)
+            for chunk in it:
+                if chunk:
+                    self._ingest_chunk(chunk,
+                                       decide(chunk) if decide else None)
+        self._finish()
+
+    # ------------------------------------------------------------ ingest --
+    def _ingest_chunk(self, chunk, decisions) -> None:
+        if decisions is not None and len(decisions) != len(chunk):
+            raise ValueError("decisions must align with the chunk")
+        t_min = _INF
+        for i, vm in enumerate(chunk):
+            dec = decisions[i] if decisions is not None else None
+            v = self.n_vms
+            self.n_vms += 1
+            c = float(vm.cores)
+            m = float(vm.mem_gb)
+            l = m if dec is None else float(dec.local_gb)
+            p = 0.0 if dec is None else float(dec.pool_gb)
+            t_mig = None if dec is None else dec.t_migrate
+            arrival = float(vm.arrival)
+            dep = arrival + float(vm.lifetime)
+            self._cores.append(c)
+            self._local.append(l)
+            self._pool.append(p)
+            self._mem.append(m)
+            self._slot_of.append(-1)
+            self._exact = self._exact and c.is_integer() \
+                and m.is_integer() and l.is_integer() and p.is_integer()
+            self._pay_mem_max = max(self._pay_mem_max, m, l)
+            self._pay_pool_max = max(self._pay_pool_max, p)
+            t_min = min(t_min, arrival)
+            self._t_seen = max(self._t_seen, arrival)
+            self._pend_t.append(arrival)
+            self._pend_k.append(ARRIVE)
+            self._pend_v.append(v)
+            # MIGRATE events outside [arrival, departure) are no-ops in
+            # the oracle and are dropped, like the monolithic compile
+            if t_mig is not None and arrival <= t_mig < dep:
+                self._has_migrate = True
+                self._pend_t.append(float(t_mig))
+                self._pend_k.append(MIGRATE)
+                self._pend_v.append(v)
+            self._pend_t.append(dep)
+            self._pend_k.append(DEPART)
+            self._pend_v.append(v)
+        if t_min < self._t_flushed:
+            raise ValueError(
+                f"chunk arrivals must be non-decreasing across chunks: "
+                f"got {t_min:g} after events were compiled up to "
+                f"{self._t_flushed:g} (sort the trace by arrival)")
+        self._flush(self._t_seen)
+
+    def _flush(self, t_max: float, final: bool = False) -> None:
+        """Compile every pending event strictly before ``t_max`` (all of
+        them when ``final``) in the monolithic (time, kind, vm) order."""
+        if not self._pend_t:
+            return
+        t = np.asarray(self._pend_t)
+        k = np.asarray(self._pend_k, np.int64)
+        v = np.asarray(self._pend_v, np.int64)
+        if final:
+            take = np.ones(len(t), bool)
+        else:
+            take = t < t_max
+            self._t_flushed = max(self._t_flushed, t_max)
+        if not take.any():
+            return
+        ts, ks, vs = t[take], k[take], v[take]
+        order = np.lexsort((vs, ks, ts))
+        self._emit(ks[order].tolist(), vs[order].tolist())
+        keep = ~take
+        self._pend_t = t[keep].tolist()
+        self._pend_k = k[keep].tolist()
+        self._pend_v = v[keep].tolist()
+
+    def _emit(self, kinds, vidx) -> None:
+        buf = self._buf
+        budget = self.max_events_per_shard
+        for k, v in zip(kinds, vidx):
+            if k == ARRIVE:
+                if self._free_slots:
+                    sl = self._free_slots.pop()
+                else:
+                    sl = self._next_slot
+                    self._next_slot += 1
+                self._slot_of[v] = sl
+                self._pool_cum += self._pool[v]
+                self._peak_pool = max(self._peak_pool, self._pool_cum)
+            else:
+                sl = self._slot_of[v]
+                if k == DEPART:
+                    self._free_slots.append(sl)
+                    self._pool_cum -= self._pool[v]
+            buf["kind"].append(k)
+            buf["slot"].append(sl)
+            buf["c"].append(self._cores[v])
+            buf["l"].append(self._local[v])
+            buf["p"].append(self._pool[v])
+            buf["m"].append(self._mem[v])
+            self.n_events += 1
+            if len(buf["kind"]) == budget:
+                self._close_shard()
+
+    def _close_shard(self) -> None:
+        b = self._buf
+        if not b["kind"]:
+            return
+        self._shards.append({
+            "kind": np.asarray(b["kind"], np.int32),
+            "slot": np.asarray(b["slot"], np.int32),
+            "c": np.asarray(b["c"]), "l": np.asarray(b["l"]),
+            "p": np.asarray(b["p"]), "m": np.asarray(b["m"])})
+        for key in b:        # reset in place: _emit holds a reference
+            b[key] = []
+
+    def _finish(self) -> None:
+        self._flush(_INF, final=True)
+        self._close_shard()
+        self.n_shards = len(self._shards)
+        self._n_slots = max(32, (self._next_slot + 31) // 32 * 32)
+        self._s_pad = max(16, (self.n_servers + 15) // 16 * 16)
+        self._g_pad = max(16, (self.n_groups + 15) // 16 * 16)
+        longest = max((len(s["kind"]) for s in self._shards), default=0)
+        self.shard_pad_events = max(256, (longest + 255) // 256 * 256)
+        #: per-sweep device footprint of one shard's event tensor
+        #: (6 int32 streams) — THE quantity max_events_per_shard bounds
+        self.peak_shard_bytes = 6 * 4 * self.shard_pad_events
+        for s in self._shards:           # pad in place, once
+            n = len(s["kind"])
+            pad = self.shard_pad_events - n
+            if pad:
+                s["kind"] = np.concatenate(
+                    [s["kind"], np.full(pad, PAD, np.int32)])
+                for key in ("slot",):
+                    s[key] = np.concatenate(
+                        [s[key], np.zeros(pad, np.int32)])
+                for key in ("c", "l", "p", "m"):
+                    s[key] = np.concatenate([s[key], np.zeros(pad)])
+            if self._exact:
+                # integral payloads: store int32 once so sweeps upload
+                # without a per-call astype (the numpy backend computes
+                # the same float64 results from them)
+                for key in ("c", "l", "p", "m"):
+                    s[key] = s[key].astype(np.int32)
+        group_np = np.zeros(self._s_pad, np.int32)
+        group_np[:self.n_servers] = self.group_of
+        self._group_np = group_np
+
+    # -------------------------------------------------------------- query --
+    def peak_pool_demand(self) -> float:
+        """Naive concurrent pool demand peak over the compiled event
+        order (same bound as ``CompiledReplay.peak_pool_demand``):
+        feasible upper bracket for any pool search."""
+        return float(self._peak_pool)
+
+    # int16 state-packing rules are shared with the monolithic engine
+    # (the check reads only cluster shape + payload maxima, which this
+    # class mirrors attribute-for-attribute)
+    _pick_state_dtype = CompiledReplay._pick_state_dtype
+
+    def reject_rates(self, server_gb, pool_gb,
+                     reject_cap: int | None = None,
+                     backend: str = "auto",
+                     state_dtype: str | None = None) -> np.ndarray:
+        """Reject fraction per candidate, streamed shard by shard.
+
+        Same contract and broadcasting as
+        :meth:`CompiledReplay.reject_rates`; one pass over the shards
+        prices the whole candidate batch, threading the packed state
+        between shards, with peak event-tensor memory
+        ``peak_shard_bytes`` (bounded by ``max_events_per_shard``).
+        With ``reject_cap`` set the stream stops early once EVERY
+        candidate exceeds the cap (each reported rate is then its exact
+        count so far — a lower bound at or above
+        ``(reject_cap + 1) / n_vms``, satisfying the same
+        feasibility-test contract as the other backends).
+
+        Usage::
+
+            stream = CompiledReplayStream(vms, decisions, cfg,
+                                          max_events_per_shard=65_536)
+            rates = stream.reject_rates(
+                np.linspace(200., 400., 9), np.linspace(0., 800., 9))
+        """
+        t0 = time.perf_counter()
+        server_gb = np.atleast_1d(np.asarray(server_gb, float))
+        pool_gb = np.atleast_1d(np.asarray(pool_gb, float))
+        server_gb, pool_gb = np.broadcast_arrays(server_gb, pool_gb)
+        n0 = len(server_gb)
+        denom = max(self.n_vms, 1)
+        if not self.n_events:
+            return np.zeros(n0)
+        if backend == "auto":
+            backend = "jax" if (self._exact and _get_jax_sweep()) \
+                else "numpy"
+        if backend == "jax":
+            rejects, cand_events = self._sweep_jax(
+                server_gb, pool_gb, reject_cap, state_dtype)
+        else:
+            rejects, cand_events = self._sweep_numpy(
+                server_gb, pool_gb, reject_cap)
+        _STATS.sweeps += 1
+        _STATS.events += self.n_events
+        _STATS.candidate_events += cand_events
+        _STATS.wall_s += time.perf_counter() - t0
+        return rejects / denom
+
+    def _sweep_jax(self, server_gb, pool_gb, reject_cap, state_dtype):
+        import jax.numpy as jnp
+        n0 = len(server_gb)
+        rejects = np.empty(n0, np.int64)
+        sgb_i = np.clip(np.floor(server_gb), -_I32_BIG, _I32_BIG)
+        pgb_i = np.clip(np.floor(pool_gb), -_I32_BIG, _I32_BIG)
+        dt_name = state_dtype or self._pick_state_dtype(sgb_i, pgb_i)
+        np_dt = np.int16 if dt_name == "int16" else np.int32
+        neg_big = _I16_BIG if dt_name == "int16" else _I32_BIG
+        sweep = _get_jax_sweep(dt_name, with_carry=True)
+        group_j = jnp.asarray(self._group_np)
+        cand_events = 0
+        for lo in range(0, n0, JAX_CHUNK):
+            hi = min(lo + JAX_CHUNK, n0)
+            k = hi - lo
+            n_cand = _bucket(k)
+            sgb = np.full(n_cand, sgb_i[hi - 1], np_dt)
+            pgb = np.full(n_cand, pgb_i[hi - 1], np_dt)
+            sgb[:k] = sgb_i[lo:hi]
+            pgb[:k] = pgb_i[lo:hi]
+            fc0 = np.full((n_cand, self._s_pad), -neg_big, np_dt)
+            fc0[:, :self.n_servers] = np_dt(self.cores_per_server)
+            carry = (jnp.asarray(fc0),
+                     jnp.zeros((n_cand, self._s_pad), np_dt),
+                     jnp.zeros((n_cand, self._g_pad), np_dt),
+                     jnp.full((self._n_slots, n_cand), -1, np_dt),
+                     jnp.zeros(n_cand, jnp.int32))
+            sgb_j, pgb_j = jnp.asarray(sgb), jnp.asarray(pgb)
+            for shard in self._shards:
+                # ONE shard's padded tensor lives on device at a time
+                # (rebuilt per candidate chunk by design: caching every
+                # shard's device tensor would void the memory bound)
+                def _i32(a):
+                    return jnp.asarray(
+                        a if a.dtype == np.int32 else a.astype(np.int32))
+                evs = (jnp.asarray(shard["kind"]),
+                       jnp.asarray(shard["slot"]),
+                       _i32(shard["c"]), _i32(shard["l"]),
+                       _i32(shard["p"]), _i32(shard["m"]))
+                carry = sweep(evs, group_j, *carry, sgb_j, pgb_j)
+                cand_events += self.shard_pad_events * n_cand
+                if reject_cap is not None:
+                    rej_now = np.asarray(carry[4])[:k]
+                    if (rej_now > reject_cap).all():
+                        break                   # every candidate decided
+            rejects[lo:hi] = np.asarray(carry[4])[:k]
+        return rejects, cand_events
+
+    def _sweep_numpy(self, server_gb, pool_gb, reject_cap):
+        n0 = len(server_gb)
+        n_srv = self.n_servers
+        free = np.empty((n0, n_srv + 1, 3))
+        free[:, :n_srv, 0] = self.cores_per_server
+        free[:, :n_srv, 1] = server_gb[:, None]
+        free[:, :n_srv, 2] = pool_gb[:, None]
+        free[:, n_srv, :] = -_INF
+        placed = np.full((n0, self._n_slots), -1, np.int32)
+        migrated = np.zeros((n0, self._n_slots), bool)
+        rejects = np.zeros(n0, np.int64)
+        cand_events = 0
+        for shard in self._shards:
+            _np_stream_sweep(shard, self._gcols, free, placed, migrated,
+                             rejects)
+            cand_events += len(shard["kind"]) * n0
+            if reject_cap is not None and (rejects > reject_cap).all():
+                break
+        return rejects, cand_events
+
+
 # ----------------------------------------------------------- trace batch ---
 class CompiledReplayBatch:
     """K compiled traces priced side by side in one padded event tensor.
@@ -1060,7 +1624,7 @@ def search_min_batched(feasible, lo: float, hi: float,
     return hi
 
 
-def pool_search_batched(engine: CompiledReplay, server_grid: np.ndarray,
+def pool_search_batched(engine, server_grid: np.ndarray,
                         big_pool: float, tol: float, tol_frac: float = 0.02,
                         width: int = 12,
                         reject_cap: int | None = None) -> np.ndarray:
@@ -1079,6 +1643,13 @@ def pool_search_batched(engine: CompiledReplay, server_grid: np.ndarray,
     increasing server sizes) and lower brackets right-to-left.  Points
     infeasible even at ``big_pool`` return ``big_pool``.
 
+    ``engine`` may also be a :class:`CompiledReplayStream` (the path
+    ``savings_analysis`` takes past the shard budget): streams keep no
+    Python reference trajectories, so the upper bracket comes from the
+    vectorized ``peak_pool_demand`` prefix-sum bound instead (one extra
+    sweep decides which grid points are infeasible outright), like the
+    multi-trace search.
+
     Usage (pool frontier over a server-size grid)::
 
         grid = np.linspace(min_server, base_gb, 7)
@@ -1089,12 +1660,17 @@ def pool_search_batched(engine: CompiledReplay, server_grid: np.ndarray,
     denom = max(engine.n_vms, 1)
     lo = np.zeros(n_pts)
     hi = np.empty(n_pts)
-    infeasible = np.zeros(n_pts, bool)
-    for i, sgb in enumerate(server_grid):
-        traj = engine._trajectory(float(sgb))
-        hi[i] = min(float(big_pool),
-                    float(traj.need_pool.max(initial=0.0)))
-        infeasible[i] = traj.total_rejects / denom > tol
+    if isinstance(engine, CompiledReplayStream):
+        hi[:] = min(float(big_pool), engine.peak_pool_demand())
+        infeasible = engine.reject_rates(
+            server_grid, hi, reject_cap=reject_cap) > tol
+    else:
+        infeasible = np.zeros(n_pts, bool)
+        for i, sgb in enumerate(server_grid):
+            traj = engine._trajectory(float(sgb))
+            hi[i] = min(float(big_pool),
+                        float(traj.need_pool.max(initial=0.0)))
+            infeasible[i] = traj.total_rejects / denom > tol
     fracs = np.arange(1, width + 1) / (width + 1.0)
     while True:
         # neighbor warm start between FEASIBLE points only: an infeasible

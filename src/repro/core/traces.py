@@ -271,7 +271,8 @@ def _read_table(path: str) -> dict[str, list]:
     return out
 
 
-def _numeric(cols: dict, name: str, path: str) -> np.ndarray:
+def _numeric(cols: dict, name: str, path: str,
+             row_offset: int = 0) -> np.ndarray:
     vals = cols[name]
     out = np.empty(len(vals))
     for i, v in enumerate(vals):
@@ -279,13 +280,49 @@ def _numeric(cols: dict, name: str, path: str) -> np.ndarray:
             out[i] = float(v)
         except (TypeError, ValueError):
             raise TraceSchemaError(
-                f"{path}: row {i + 1}: column {name!r}: {v!r} is not "
-                f"numeric") from None
+                f"{path}: row {row_offset + i + 1}: column {name!r}: "
+                f"{v!r} is not numeric") from None
     if not np.isfinite(out).all():
         i = int(np.flatnonzero(~np.isfinite(out))[0])
         raise TraceSchemaError(
-            f"{path}: row {i + 1}: column {name!r}: non-finite value")
+            f"{path}: row {row_offset + i + 1}: column {name!r}: "
+            f"non-finite value")
     return out
+
+
+def _require_schema(cols: dict, path: str) -> None:
+    """Raise on missing required columns (shared by both readers)."""
+    missing = [c for c in ("arrival", "cores", "mem_gb") if c not in cols]
+    if "lifetime" not in cols and "departure" not in cols:
+        missing.append("lifetime (or departure)")
+    if missing:
+        raise TraceSchemaError(
+            f"{path}: missing required column(s) {missing}; found "
+            f"{sorted(cols)} (accepted aliases: "
+            f"{sorted(set(_COLUMN_ALIASES))})")
+
+
+def _schema_arrays(cols: dict, path: str, row_offset: int = 0):
+    """Validated (arrival, lifetime, cores, mem_gb) float arrays for a
+    raw column dict, with the offending GLOBAL row in every error."""
+    arrival = _numeric(cols, "arrival", path, row_offset)
+    if "lifetime" in cols:
+        lifetime = _numeric(cols, "lifetime", path, row_offset)
+    else:
+        lifetime = _numeric(cols, "departure", path, row_offset) - arrival
+    cores = _numeric(cols, "cores", path, row_offset)
+    mem = _numeric(cols, "mem_gb", path, row_offset)
+    for name, arr, ok, req in (
+            ("arrival", arrival, arrival >= 0.0, ">= 0"),
+            ("lifetime", lifetime, lifetime > 0.0, "> 0"),
+            ("cores", cores, cores >= 1.0, ">= 1"),
+            ("mem_gb", mem, mem > 0.0, "> 0")):
+        if not ok.all():
+            i = int(np.flatnonzero(~ok)[0])
+            raise TraceSchemaError(
+                f"{path}: row {row_offset + i + 1}: column {name!r}: "
+                f"{arr[i]:g} must be {req}")
+    return arrival, lifetime, cores, mem
 
 
 def load_trace_file(path: str, max_vms: int | None = None,
@@ -315,35 +352,12 @@ def load_trace_file(path: str, max_vms: int | None = None,
         eng = replay_engine.CompiledReplay(vms, decisions, cfg)
     """
     cols = _read_table(path)
-    missing = [c for c in ("arrival", "cores", "mem_gb") if c not in cols]
-    if "lifetime" not in cols and "departure" not in cols:
-        missing.append("lifetime (or departure)")
-    if missing:
-        raise TraceSchemaError(
-            f"{path}: missing required column(s) {missing}; found "
-            f"{sorted(cols)} (accepted aliases: "
-            f"{sorted(set(_COLUMN_ALIASES))})")
+    _require_schema(cols, path)
     n = len(cols["arrival"])
     if n == 0:
         raise TraceSchemaError(f"{path}: trace has no rows")
 
-    arrival = _numeric(cols, "arrival", path)
-    if "lifetime" in cols:
-        lifetime = _numeric(cols, "lifetime", path)
-    else:
-        lifetime = _numeric(cols, "departure", path) - arrival
-    cores = _numeric(cols, "cores", path)
-    mem = _numeric(cols, "mem_gb", path)
-    for name, arr, ok, req in (
-            ("arrival", arrival, arrival >= 0.0, ">= 0"),
-            ("lifetime", lifetime, lifetime > 0.0, "> 0"),
-            ("cores", cores, cores >= 1.0, ">= 1"),
-            ("mem_gb", mem, mem > 0.0, "> 0")):
-        if not ok.all():
-            i = int(np.flatnonzero(~ok)[0])
-            raise TraceSchemaError(
-                f"{path}: row {i + 1}: column {name!r}: {arr[i]:g} must "
-                f"be {req}")
+    arrival, lifetime, cores, mem = _schema_arrays(cols, path)
 
     pop = population or Population(n_customers=64, seed=seed)
     rng = np.random.default_rng(seed)
@@ -406,10 +420,210 @@ def load_trace_file(path: str, max_vms: int | None = None,
     return vms
 
 
+def _iter_raw_chunks(path: str, chunk_vms: int):
+    """Yield raw alias-mapped column dicts of <= ``chunk_vms`` rows.
+
+    Bounded-memory pendant of :func:`_read_table`: CSV (optionally .gz)
+    rows stream through ``csv.DictReader``; parquet files read via
+    ``pyarrow.ParquetFile.iter_batches`` so only one row-group batch is
+    materialized at a time.
+    """
+    lower = path.lower()
+    if lower.endswith((".parquet", ".pq")):
+        try:
+            import pyarrow.parquet as pq
+        except Exception as e:                       # pragma: no cover
+            raise TraceSchemaError(
+                f"{path}: reading parquet traces requires pyarrow, which "
+                f"is not installed ({e}); convert the trace to CSV or "
+                f"install pyarrow") from e
+        pf = pq.ParquetFile(path)
+        for batch in pf.iter_batches(batch_size=chunk_vms):
+            raw = {name: col.to_pylist()
+                   for name, col in zip(batch.schema.names,
+                                        batch.columns)}
+            yield {_COLUMN_ALIASES.get(k.strip().lower(),
+                                       k.strip().lower()): v
+                   for k, v in raw.items()}
+        return
+    if not lower.endswith((".csv", ".csv.gz")):
+        raise TraceSchemaError(
+            f"{path}: unsupported trace format (expected .csv, .csv.gz, "
+            f".parquet or .pq)")
+    opener = gzip.open if lower.endswith(".gz") else open
+    with opener(path, "rt", newline="") as f:
+        reader = csv.DictReader(f)
+        if reader.fieldnames is None:
+            raise TraceSchemaError(f"{path}: empty file (no header)")
+        # when two headers alias to one canonical column (e.g. the Azure
+        # vmtable's vmcorecount + vmcorecountbucket) the LAST header
+        # wins, exactly like _read_table's dict overwrite
+        canon_src: dict[str, str] = {}
+        for n in reader.fieldnames:
+            canon_src[_COLUMN_ALIASES.get(n.strip().lower(),
+                                          n.strip().lower())] = n
+        names = [(orig, canon) for canon, orig in canon_src.items()]
+        chunk = {canon: [] for _, canon in names}
+        count = 0
+        for row in reader:
+            for name, canon in names:
+                chunk[canon].append(row[name])
+            count += 1
+            if count == chunk_vms:
+                yield chunk
+                chunk = {canon: [] for _, canon in names}
+                count = 0
+        if count:
+            yield chunk
+
+
+def iter_trace_chunks(path: str, chunk_vms: int = 65536,
+                      max_vms: int | None = None, start_id: int = 0,
+                      seed: int = 0,
+                      population: "Population | None" = None):
+    """Stream a trace file as bounded-memory chunks of ``VM`` records.
+
+    Out-of-core pendant of :func:`load_trace_file` for traces that do
+    not fit one in-memory table (e.g. the full Azure public packing
+    trace, see ``scripts/fetch_azure_trace.py``): the file is read
+    ``chunk_vms`` rows at a time through the same column-alias and
+    schema-validation machinery, so errors still name the offending
+    GLOBAL row.  Each yielded chunk is a ``load_trace_file``-format VM
+    list sorted by arrival; customer and string-vm-id remaps are shared
+    across chunks, so concatenating every chunk of an arrival-sorted
+    file reproduces ``load_trace_file``'s ``(vm_id, arrival, lifetime,
+    cores, mem_gb)`` columns exactly.  Synthesized workload fields
+    (untouched/slowdowns/PMU without the optional columns) are
+    deterministic in ``(seed, chunk_vms)`` but drawn from a different
+    RNG stream than the monolithic loader — replay reject rates depend
+    only on the four schema columns, so schema-only policies (local /
+    static) price identically either way.
+
+    Chunked ingestion requires arrivals to be non-decreasing ACROSS
+    chunk boundaries (rows within a chunk may be unsorted); a violation
+    raises :class:`TraceSchemaError` naming the row — sort the file or
+    fall back to :func:`load_trace_file`.
+
+    Usage (bounded-memory replay of an arbitrarily long trace)::
+
+        stream = replay_engine.CompiledReplayStream(
+            traces.iter_trace_chunks("azure_packing.csv.gz",
+                                     chunk_vms=100_000),
+            None, cfg, max_events_per_shard=250_000)
+        rates = stream.reject_rates([300.0], [512.0])
+    """
+    pop = population or Population(n_customers=64, seed=seed)
+    rng = np.random.default_rng(seed)
+    cust_map: dict = {}
+    id_map: dict = {}
+    id_numeric: bool | None = None       # decided on first vm_id chunk
+    seen_ids: set = set()
+    prev_max = -np.inf
+    row_offset = 0
+    emitted = 0
+    any_rows = False
+    for cols in _iter_raw_chunks(path, chunk_vms):
+        _require_schema(cols, path)
+        n = len(cols["arrival"])
+        if n == 0:
+            continue
+        any_rows = True
+        arrival, lifetime, cores, mem = _schema_arrays(
+            cols, path, row_offset)
+        bad = arrival < prev_max
+        if bad.any():
+            i = int(np.flatnonzero(bad)[0])
+            raise TraceSchemaError(
+                f"{path}: row {row_offset + i + 1}: column 'arrival': "
+                f"{arrival[i]:g} is earlier than a previous chunk's "
+                f"latest arrival ({prev_max:g}); chunked ingestion needs "
+                f"arrivals non-decreasing across chunk boundaries — sort "
+                f"the trace by arrival (scripts/fetch_azure_trace.py "
+                f"emits sorted files) or use load_trace_file")
+        prev_max = max(prev_max, float(arrival.max()))
+
+        if "customer" in cols:
+            custs = np.array([cust_map.setdefault(c, len(cust_map))
+                              for c in cols["customer"]]) % pop.n_customers
+        else:
+            custs = rng.choice(pop.n_customers, n, p=pop.cust_popularity)
+        untouched_col = (np.clip(_numeric(cols, "untouched", path,
+                                          row_offset), 0.0, 1.0)
+                         if "untouched" in cols else None)
+        if "vm_id" in cols:
+            raw_ids = cols["vm_id"]
+            if id_numeric is None:
+                try:
+                    [float(v) for v in raw_ids]
+                    id_numeric = True
+                except (TypeError, ValueError):
+                    id_numeric = False
+            if id_numeric:
+                try:
+                    vm_ids = [start_id + int(float(v)) for v in raw_ids]
+                except (TypeError, ValueError) as e:
+                    raise TraceSchemaError(
+                        f"{path}: non-numeric vm_id after a numeric "
+                        f"first chunk ({e}); chunked ingestion cannot "
+                        f"remap ids retroactively — use load_trace_file") \
+                        from None
+            else:
+                vm_ids = [start_id + id_map.setdefault(v, len(id_map))
+                          for v in raw_ids]
+            for i, v in enumerate(vm_ids):
+                if v in seen_ids:
+                    raise TraceSchemaError(
+                        f"{path}: row {row_offset + i + 1}: duplicate "
+                        f"vm_id {raw_ids[i]!r} — the replay keys "
+                        f"placement by vm_id, so each VM needs one "
+                        f"record")
+                seen_ids.add(v)
+        else:
+            vm_ids = [start_id + row_offset + i for i in range(n)]
+
+        u_all = np.clip(pop.cust_u[custs] + rng.normal(0, 0.02, n),
+                        0, 0.999999)
+        if untouched_col is not None:
+            untouched_all = untouched_col
+        else:
+            untouched_all = np.clip(
+                pop.cust_untouched[custs] + rng.normal(0, 0.10, n), 0, 1)
+        slow182_all = _piecewise(u_all, _BANDS_182)
+        slow222_all = _piecewise(u_all, _BANDS_222)
+
+        order = np.argsort(arrival, kind="stable")
+        if max_vms is not None:
+            order = order[:max_vms - emitted]
+        vms = []
+        for i in order.tolist():
+            c = int(custs[i])
+            vms.append(VM(
+                vm_id=vm_ids[i], customer=c,
+                vm_type=int(pop.cust_type[c]),
+                location=int(pop.cust_loc[c]),
+                guest_os=int(pop.cust_os[c]),
+                cores=int(round(cores[i])), mem_gb=float(mem[i]),
+                arrival=float(arrival[i]), lifetime=float(lifetime[i]),
+                untouched=float(untouched_all[i]),
+                slow182=float(slow182_all[i]),
+                slow222=float(slow222_all[i]),
+                pmu=pop._pmu(float(u_all[i]), rng)))
+        row_offset += n
+        emitted += len(vms)
+        if vms:
+            yield vms
+        if max_vms is not None and emitted >= max_vms:
+            return
+    if not any_rows:
+        raise TraceSchemaError(f"{path}: trace has no rows")
+
+
 def save_trace_csv(vms, path: str) -> None:
-    """Write VMs as a CSV the :func:`load_trace_file` schema round-trips
-    (arrival, lifetime, cores, mem_gb + customer/vm_id/untouched)."""
-    with open(path, "w", newline="") as f:
+    """Write VMs as a CSV (gzipped when ``path`` ends in .gz) the
+    :func:`load_trace_file` schema round-trips (arrival, lifetime,
+    cores, mem_gb + customer/vm_id/untouched)."""
+    opener = gzip.open if path.lower().endswith(".gz") else open
+    with opener(path, "wt", newline="") as f:
         w = csv.writer(f)
         w.writerow(["vm_id", "customer", "arrival", "lifetime", "cores",
                     "mem_gb", "untouched"])

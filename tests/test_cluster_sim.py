@@ -73,6 +73,90 @@ def test_savings_grow_with_pool_size(world):
     assert out[1] >= out[0] - 0.01        # Fig 3: diminishing growth
 
 
+def test_policy_decisions_history_inplace_matches_copy_append(world):
+    """The pond path records per-customer untouched history with an
+    in-place append (record_untouched); the old list-copy-append was
+    quadratic in VMs per customer.  The fix must not change ANY
+    decision, misprediction count or history content (this is what
+    keeps fig21's numbers identical), and seeded histories shared
+    across control planes must stay unmutated."""
+    pop, cfg, _, li, um, hist = world
+    vms = pop.sample_vms(400, HORIZON, seed=7, start_id=5 * 10 ** 6)
+    snapshot = {c: h.copy() for c, h in hist.items()}
+
+    def fresh_cp():
+        return ControlPlane(ControlPlaneConfig(li_threshold=0.05), li,
+                            um, PoolManager(pool_gb=4096, buffer_gb=64),
+                            history=dict(hist))
+
+    cp_new = fresh_cp()
+    dec_new, mis_new = cluster_sim.policy_decisions(vms, "pond", cp_new)
+
+    # reference: the pre-fix copy-append implementation, inlined
+    cp_ref = fresh_cp()
+    slows = traces.slowdowns(vms, 182)
+    dec_ref, mis_ref = [], 0.0
+    for i, vm in enumerate(vms):
+        t_mig = None
+        local_gb, pool_gb, fully, _ = cp_ref.decide(vm)
+        h = list(cp_ref.history.get(vm.customer, []))
+        h.append(vm.untouched)
+        cp_ref.history[vm.customer] = h
+        if pool_gb > 0:
+            spilled = fully or pool_gb > vm.untouched * vm.mem_gb + 1e-9
+            mit = cp_ref.monitor.check(vm.vm_id, vm.pmu, spilled,
+                                       pool_gb, vm.arrival + 60.0)
+            if mit is not None:
+                t_mig = mit.at
+        if fully:
+            mis_ref += 1.0 if slows[i] > 0.05 else 0.0
+        elif pool_gb > vm.untouched * vm.mem_gb + 1e-9:
+            mis_ref += 0.25 if slows[i] > 0.05 else 0.0
+        dec_ref.append(cluster_sim.VMDecision(local_gb, pool_gb, fully,
+                                              t_mig))
+    mis_ref /= max(len(vms), 1)
+
+    as_tuple = lambda ds: [(d.local_gb, d.pool_gb, d.fully_pooled,
+                            d.t_migrate) for d in ds]
+    assert as_tuple(dec_new) == as_tuple(dec_ref)
+    assert mis_new == mis_ref
+    assert set(cp_new.history) == set(cp_ref.history)
+    for c in cp_ref.history:
+        assert list(cp_new.history[c]) == list(cp_ref.history[c])
+    # the shallow-shared seed arrays were never mutated
+    for c, h in snapshot.items():
+        assert np.array_equal(hist[c], h)
+
+
+def test_record_untouched_appends_in_place_and_resets(world):
+    *_, li, um, hist = world
+    cp = ControlPlane(ControlPlaneConfig(li_threshold=0.05), li, um,
+                      PoolManager(pool_gb=4096, buffer_gb=64),
+                      history=dict(hist))
+    cp.record_untouched(0, 0.5)
+    stored = cp.history[0]
+    cp.record_untouched(0, 0.6)
+    assert cp.history[0] is stored          # no per-VM list copies
+    assert stored[-2:] == [0.5, 0.6]
+    assert isinstance(hist[0], np.ndarray)  # seed untouched by the fix
+    assert len(hist[0]) == len(stored) - 2
+    cp.reset_history()
+    assert cp.history == {}
+    cp.reset_history(hist)
+    assert set(cp.history) == set(hist)
+    cp.record_untouched(0, 0.7)             # re-seeded and appendable
+    assert cp.history[0][-1] == 0.7
+    # LIST-valued seeds shared across planes stay isolated too: each
+    # plane's first write per customer copies before appending
+    seed = {0: [0.1, 0.2]}
+    cps = [ControlPlane(ControlPlaneConfig(), li, um,
+                        PoolManager(pool_gb=64, buffer_gb=8),
+                        history=dict(seed)) for _ in range(2)]
+    cps[0].record_untouched(0, 0.9)
+    assert list(cps[1].history[0]) == [0.1, 0.2]
+    assert seed[0] == [0.1, 0.2]
+
+
 def test_offlining_speed_distribution(world):
     """Finding 10 analogue: slice offlining throughput stays in the
     10-100 ms/GB band across release events."""

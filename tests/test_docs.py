@@ -21,12 +21,66 @@ def test_readme_exists_with_required_sections():
     assert "load_trace_file" in text                 # ingestion pointer
 
 
+def test_readme_covers_streaming_scale_out():
+    text = _read("README.md")
+    assert "Scaling to real traces" in text          # section anchor
+    for topic in ("iter_trace_chunks", "CompiledReplayStream",
+                  "max_events_per_shard",            # memory budget knob
+                  "scripts/fetch_azure_trace.py",
+                  "docs/traces.md", "docs/index.md"):
+        assert topic in text, f"README misses {topic!r}"
+    # measured streaming numbers stay cited (events/s at K seeds x
+    # N shards come from the perf-smoke artifact)
+    assert "candidate-events/s" in text and "shards" in text
+
+
 def test_replay_engine_doc_exists_and_covers_architecture():
     text = _read("docs", "replay_engine.md")
     for topic in ("int32", "slot", "divergence", "bit-exact",
-                  "CompiledReplayBatch", "lax.scan"):
+                  "CompiledReplayBatch", "lax.scan",
+                  # streaming/sharded-carry design + int16 packing rules
+                  "CompiledReplayStream", "max_events_per_shard",
+                  "int16", "carry"):
         assert topic.lower() in text.lower(), \
             f"docs/replay_engine.md misses {topic!r}"
+
+
+def test_traces_doc_covers_schema_and_ingestion():
+    text = _read("docs", "traces.md")
+    for topic in ("arrival", "lifetime", "cores", "mem_gb",  # schema
+                  "vmcreated", "vmcorecount",                # aliases
+                  "TraceSchemaError", "iter_trace_chunks",
+                  "fixture_trace_path", "fetch_azure_trace.py",
+                  "non-decreasing"):
+        assert topic in text, f"docs/traces.md misses {topic!r}"
+
+
+def test_docs_index_links_every_docs_page_and_resolves():
+    text = _read("docs", "index.md")
+    linked = set(re.findall(r"\]\(([\w./-]+\.md)\)", text))
+    assert linked, "docs/index.md has no markdown links"
+    for rel in linked:
+        target = os.path.normpath(os.path.join(REPO, "docs", rel))
+        assert os.path.isfile(target), \
+            f"docs/index.md links missing file {rel}"
+    # ... and no docs page is orphaned from the index
+    pages = {f for f in os.listdir(os.path.join(REPO, "docs"))
+             if f.endswith(".md") and f != "index.md"}
+    missing = pages - {os.path.basename(p) for p in linked}
+    assert not missing, f"docs/index.md misses pages {sorted(missing)}"
+    # the index names every core module it maps
+    for mod in ("traces.py", "replay_engine.py", "cluster_sim.py",
+                "control_plane.py"):
+        assert mod in text, f"docs/index.md misses module {mod}"
+
+
+def test_readme_scripts_references_exist():
+    text = _read("README.md")
+    refs = re.findall(r"scripts/(\w+\.py)", text)
+    assert refs, "README references no scripts/"
+    for rel in set(refs):
+        assert os.path.isfile(os.path.join(REPO, "scripts", rel)), \
+            f"README references missing scripts/{rel}"
 
 
 def test_readme_figure_map_references_existing_scripts():

@@ -1,0 +1,235 @@
+"""Streaming replay (CompiledReplayStream) vs the monolithic engine:
+bit-exact reject rates with peak event-tensor memory bounded by
+``max_events_per_shard``, on the bundled fixture and on a >=100k-VM
+synthetic trace — plus the int16 state-packing equivalence rules."""
+import numpy as np
+import pytest
+
+from repro.core import cluster_sim, replay_engine, traces
+
+CFG = cluster_sim.ClusterConfig(n_servers=8, pool_sockets=8,
+                                gb_per_core=4.75)
+
+
+def _trace(seed=3, horizon=3 * 86400, policy="static", frac=0.25):
+    pop = traces.Population(seed=0)
+    n = cluster_sim.arrivals_for_util(CFG, 0.8, horizon)
+    vms = pop.sample_vms(n, horizon, seed=seed, start_id=10 ** 6)
+    dec, _ = cluster_sim.policy_decisions(vms, policy,
+                                          static_pool_frac=frac)
+    return vms, dec
+
+
+_SERVER = np.array([768.0, 200.0, 140.0, 60.0, 219.7, 0.0])
+_POOL = np.array([6144.0, 300.0, 0.0, 6144.0, 83.3, 100.0])
+
+
+def test_stream_bit_exact_on_fixture_all_backends():
+    vms = traces.load_trace_file(traces.fixture_trace_path())
+    cfg = cluster_sim.ClusterConfig(n_servers=4, pool_sockets=4,
+                                    gb_per_core=4.0)
+    dec, _ = cluster_sim.policy_decisions(vms, "static",
+                                          static_pool_frac=0.25)
+    eng = replay_engine.CompiledReplay(vms, dec, cfg)
+    server = np.array([768.0, 120.0, 60.0, 30.0])
+    pool = np.array([512.0, 64.0, 0.0, 512.0])
+    mono = eng.reject_rates(server, pool)
+    stream = replay_engine.CompiledReplayStream(
+        vms, dec, cfg, max_events_per_shard=256)
+    assert stream.reject_rates(server, pool).tolist() == mono.tolist()
+    assert stream.reject_rates(server, pool,
+                               backend="numpy").tolist() == mono.tolist()
+
+
+def test_stream_multi_shard_carry_matches_monolithic():
+    vms, dec = _trace()
+    eng = replay_engine.CompiledReplay(vms, dec, CFG)
+    mono = eng.reject_rates(_SERVER, _POOL)
+    for budget in (256, 320):           # aligned and ragged shard splits
+        stream = replay_engine.CompiledReplayStream(
+            vms, dec, CFG, max_events_per_shard=budget)
+        assert stream.n_shards > 1      # the carry actually threads
+        assert stream.reject_rates(_SERVER,
+                                   _POOL).tolist() == mono.tolist()
+        assert stream.reject_rates(_SERVER, _POOL,
+                                   backend="numpy").tolist() \
+            == mono.tolist()
+
+
+def test_stream_chunked_construction_matches_monolithic():
+    vms, dec = _trace()
+    order = sorted(range(len(vms)), key=lambda i: vms[i].arrival)
+    svms = [vms[i] for i in order]
+    sdec = [dec[i] for i in order]
+    mono = replay_engine.CompiledReplay(svms, sdec, CFG).reject_rates(
+        _SERVER, _POOL)
+    dmap = {id(v): d for v, d in zip(svms, sdec)}
+    stream = replay_engine.CompiledReplayStream(
+        iter([svms[i:i + 97] for i in range(0, len(svms), 97)]),
+        None, CFG, max_events_per_shard=256,
+        decide=lambda ch: [dmap[id(v)] for v in ch])
+    assert stream.n_shards > 1
+    assert stream.reject_rates(_SERVER, _POOL).tolist() == mono.tolist()
+    # out-of-order chunks are rejected, not silently mis-replayed
+    with pytest.raises(ValueError, match="non-decreasing"):
+        replay_engine.CompiledReplayStream(
+            iter([svms[100:], svms[:100]]), None, CFG,
+            max_events_per_shard=256,
+            decide=lambda ch: [dmap[id(v)] for v in ch])
+
+
+def test_stream_100k_vm_trace_bit_exact_and_memory_bounded():
+    """Acceptance: >=100k VMs, bit-exact vs monolithic, peak event
+    tensor bounded by max_events_per_shard."""
+    n = 100_000
+    rng = np.random.default_rng(11)
+    arrival = np.sort(rng.uniform(0, 30 * 86400, n)).round(3)
+    life = rng.integers(1800, 86400, n).astype(float)
+    cores = rng.choice([2, 4, 8], n, p=[.5, .3, .2])
+    mem = cores * rng.choice([2, 4], n)
+    pmu = np.zeros(traces.N_PMU_FEATURES, np.float32)
+    vms = [traces.VM(i, 0, 0, 0, 0, int(cores[i]), float(mem[i]),
+                     float(arrival[i]), float(life[i]), 0.5, 0.0, 0.0,
+                     pmu)
+           for i in range(n)]
+    dec = [cluster_sim.VMDecision(
+        v.mem_gb - float(np.floor(v.mem_gb * 0.25)),
+        float(np.floor(v.mem_gb * 0.25)), False, None) for v in vms]
+    cfg = cluster_sim.ClusterConfig(n_servers=112, pool_sockets=16,
+                                    gb_per_core=4.75)
+    server = np.array([768.0, 44.0, 30.0, 36.0])
+    pool = np.array([6144.0, 512.0, 6144.0, 0.0])
+    mono = replay_engine.CompiledReplay(vms, dec, cfg).reject_rates(
+        server, pool)
+    assert len(set(mono.tolist())) > 1     # memory actually binds
+    budget = 32_768
+    stream = replay_engine.CompiledReplayStream(
+        vms, dec, cfg, max_events_per_shard=budget)
+    assert stream.n_vms == n and stream.n_shards >= 6
+    # THE memory bound: every per-sweep event tensor is one shard,
+    # and non-256-multiple budgets floor rather than round past it
+    assert stream.shard_pad_events <= budget
+    small = replay_engine.CompiledReplayStream(
+        vms[:500], dec[:500], cfg, max_events_per_shard=300)
+    assert small.max_events_per_shard == 256
+    assert small.shard_pad_events <= 300
+    assert all(len(s["kind"]) == stream.shard_pad_events
+               for s in stream._shards)
+    assert stream.peak_shard_bytes == 6 * 4 * stream.shard_pad_events
+    assert stream.reject_rates(server, pool).tolist() == mono.tolist()
+
+
+def test_stream_reject_cap_preserves_feasibility():
+    vms, dec = _trace()
+    stream = replay_engine.CompiledReplayStream(
+        vms, dec, CFG, max_events_per_shard=256)
+    tol = 0.02
+    cap = int(tol * len(vms))
+    full = stream.reject_rates(_SERVER, _POOL)
+    capped = stream.reject_rates(_SERVER, _POOL, reject_cap=cap)
+    assert ((full <= tol) == (capped <= tol)).all()
+    # early-exited candidates report at or above the lower bound
+    assert (capped[capped > tol] * len(vms) >= cap + 1).all()
+
+
+def test_stream_fractional_decisions_match_oracle():
+    vms, _ = _trace()
+    dec = [cluster_sim.VMDecision(vm.mem_gb - 0.5, 0.5, False, None)
+           for vm in vms]
+    stream = replay_engine.CompiledReplayStream(
+        vms, dec, CFG, max_events_per_shard=256)
+    assert not stream._exact               # auto-routes to numpy/float64
+    got = stream.reject_rates(_SERVER[:3], _POOL[:3])
+    want = [cluster_sim.replay_reject_rate(vms, dec, CFG, s, p)
+            for s, p in zip(_SERVER[:3], _POOL[:3])]
+    assert got.tolist() == want
+
+
+def test_stream_peak_pool_demand_matches_monolithic():
+    vms, dec = _trace()
+    eng = replay_engine.CompiledReplay(vms, dec, CFG)
+    stream = replay_engine.CompiledReplayStream(
+        vms, dec, CFG, max_events_per_shard=256)
+    assert stream.peak_pool_demand() == eng.peak_pool_demand()
+
+
+# ------------------------------------------------------ int16 packing -----
+def test_int16_matches_int32_near_boundary():
+    """int16 state packing is bit-equivalent to int32 right up to the
+    overflow-safety boundary, and the automatic pick flips to int32
+    beyond it."""
+    vms, dec = _trace()
+    eng = replay_engine.CompiledReplay(vms, dec, CFG)
+    safe = replay_engine._I16_SAFE
+    pay_m, pay_p = eng._pay_mem_max, eng._pay_pool_max
+    # capacities pinned AT the boundary (largest int16-eligible values)
+    server = np.array([safe - pay_m, 200.0, 140.0, 60.0])
+    pool = np.array([safe - pay_p, 300.0, 0.0, safe - pay_p])
+    assert eng._pick_state_dtype(np.floor(server),
+                                 np.floor(pool)) == "int16"
+    i16 = eng.reject_rates(server, pool, backend="jax",
+                           state_dtype="int16")
+    i32 = eng.reject_rates(server, pool, backend="jax",
+                           state_dtype="int32")
+    oracle = [cluster_sim.replay_reject_rate(vms, dec, CFG, s, p)
+              for s, p in zip(server, pool)]
+    assert i16.tolist() == i32.tolist() == oracle
+    # one GB past the boundary -> automatic int32 fallback
+    assert eng._pick_state_dtype(
+        np.floor(server + 1.0), np.floor(pool)) == "int32"
+    assert eng._pick_state_dtype(
+        np.floor(server), np.floor(pool + 1.0)) == "int32"
+    assert eng._pick_state_dtype(
+        np.array([-1.0]), np.array([0.0])) == "int32"
+    # MIGRATE events force int32: the oracle's fallback-migrate quirk
+    # can drive the used-pool carry negative without bound, which no
+    # capacity check can clear for int16
+    mig_dec = [cluster_sim.VMDecision(d.local_gb, d.pool_gb,
+                                      d.fully_pooled, vms[i].arrival + 1.)
+               for i, d in enumerate(dec)]
+    eng_mig = replay_engine.CompiledReplay(vms, mig_dec, CFG)
+    assert eng_mig._has_migrate
+    assert eng_mig._pick_state_dtype(np.floor(server),
+                                     np.floor(pool)) == "int32"
+    st_mig = replay_engine.CompiledReplayStream(
+        vms, mig_dec, CFG, max_events_per_shard=512)
+    assert st_mig._has_migrate and st_mig._pick_state_dtype(
+        np.floor(server), np.floor(pool)) == "int32"
+    # the stream shares the same rules
+    stream = replay_engine.CompiledReplayStream(
+        vms, dec, CFG, max_events_per_shard=256)
+    assert stream._pick_state_dtype(np.floor(server),
+                                    np.floor(pool)) == "int16"
+    s16 = stream.reject_rates(server, pool, backend="jax",
+                              state_dtype="int16")
+    s32 = stream.reject_rates(server, pool, backend="jax",
+                              state_dtype="int32")
+    assert s16.tolist() == s32.tolist() == oracle
+
+
+# --------------------------------------------------- search integration ---
+def test_savings_analysis_streams_past_shard_budget():
+    vms, _ = _trace(horizon=2 * 86400)
+    mono = cluster_sim.savings_analysis(vms, CFG, "static",
+                                        static_pool_frac=0.25)
+    streamed = cluster_sim.savings_analysis(
+        vms, CFG, "static", static_pool_frac=0.25,
+        max_events_per_shard=256)
+    # server bisections replicate the scalar probe sequence bitwise
+    assert streamed.baseline_server_gb == mono.baseline_server_gb
+    # the streamed optimum is a valid feasible provisioning point
+    tol = streamed.reject_rate is not None
+    assert tol and streamed.pool_group_gb <= \
+        replay_engine.CompiledReplayStream(
+            vms, cluster_sim.policy_decisions(
+                vms, "static", static_pool_frac=0.25)[0], CFG,
+            max_events_per_shard=256).peak_pool_demand() + 1e-9
+    assert streamed.server_gb <= streamed.baseline_server_gb + 1e-9
+    # batched entry point takes the same path per trace
+    cache: dict = {}
+    rows = cluster_sim.savings_analysis_batched(
+        [vms, vms], CFG, "static", static_pool_frac=0.25, cache=cache,
+        max_events_per_shard=256)
+    assert [r.server_gb for r in rows] == [streamed.server_gb] * 2
+    assert [r.pool_group_gb for r in rows] == \
+        [streamed.pool_group_gb] * 2

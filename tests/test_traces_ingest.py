@@ -118,6 +118,116 @@ def test_save_trace_csv_round_trips(tmp_path):
         assert abs(a.untouched - b.untouched) < 1e-3
 
 
+def test_chunked_reader_matches_monolithic_loader(tmp_path):
+    """Concatenated chunks of an arrival-sorted file reproduce
+    load_trace_file's schema columns (and ids/customers) exactly, for
+    CSV, CSV.gz and parquet."""
+    path = traces.fixture_trace_path()
+    mono = traces.load_trace_file(path)
+    paths = [path]
+    gz = str(tmp_path / "fx.csv.gz")
+    traces.save_trace_csv(mono, gz)
+    paths.append(gz)
+    try:
+        import pyarrow as pa
+        import pyarrow.parquet as pq
+        pqp = str(tmp_path / "fx.parquet")
+        pq.write_table(pa.table({
+            "arrival": [v.arrival for v in mono],
+            "lifetime": [v.lifetime for v in mono],
+            "cores": [v.cores for v in mono],
+            "mem_gb": [v.mem_gb for v in mono],
+            "vm_id": [v.vm_id for v in mono],
+            "customer": [v.customer for v in mono]}), pqp)
+        paths.append(pqp)
+    except ImportError:
+        pass
+    key = [(v.vm_id, v.customer, round(v.arrival, 3),
+            round(v.lifetime, 3), v.cores, v.mem_gb) for v in mono]
+    for p in paths:
+        cat = [v for ch in traces.iter_trace_chunks(p, chunk_vms=7)
+               for v in ch]
+        got = [(v.vm_id, v.customer, round(v.arrival, 3),
+                round(v.lifetime, 3), v.cores, v.mem_gb) for v in cat]
+        assert got == key, p
+    # max_vms truncates to the same earliest-arrival prefix
+    first = [v for ch in traces.iter_trace_chunks(path, chunk_vms=7,
+                                                  max_vms=10)
+             for v in ch]
+    assert [v.vm_id for v in first] == [v.vm_id for v in mono[:10]]
+
+
+def test_chunked_reader_reports_global_rows_csv_gz(tmp_path):
+    import gzip
+    rows = ["arrival,lifetime,cores,mem_gb"] + \
+        [f"{10 * i},100,2,4" for i in range(9)] + ["95,-3,2,4"]
+    p = str(tmp_path / "bad.csv.gz")
+    with gzip.open(p, "wt") as f:
+        f.write("\n".join(rows) + "\n")
+    with pytest.raises(traces.TraceSchemaError) as e:
+        # the bad row sits in the FOURTH 3-row chunk: the error must
+        # name the global file row, not the within-chunk one
+        list(traces.iter_trace_chunks(p, chunk_vms=3))
+    assert "row 10" in str(e.value) and "lifetime" in str(e.value)
+
+
+def test_chunked_reader_reports_global_rows_parquet(tmp_path):
+    pa = pytest.importorskip("pyarrow")
+    pq = pytest.importorskip("pyarrow.parquet")
+    p = str(tmp_path / "bad.parquet")
+    arrival = [float(10 * i) for i in range(10)]
+    mem = [4.0] * 9 + [0.0]                      # row 10 invalid
+    pq.write_table(pa.table({"arrival": arrival,
+                             "lifetime": [100.0] * 10,
+                             "cores": [2] * 10, "mem_gb": mem}), p,
+                   row_group_size=3)
+    with pytest.raises(traces.TraceSchemaError) as e:
+        list(traces.iter_trace_chunks(p, chunk_vms=3))
+    assert "row 10" in str(e.value) and "mem_gb" in str(e.value)
+
+
+def test_chunked_reader_rejects_unsorted_chunk_boundaries(tmp_path):
+    p = _write(tmp_path, "unsorted.csv",
+               "arrival,lifetime,cores,mem_gb\n" +
+               "".join(f"{t},50,2,4\n" for t in (0, 10, 20, 5, 30)))
+    with pytest.raises(traces.TraceSchemaError) as e:
+        list(traces.iter_trace_chunks(p, chunk_vms=3))
+    assert "non-decreasing" in str(e.value) and "row 4" in str(e.value)
+    # the monolithic loader still accepts the same file (global sort)
+    assert len(traces.load_trace_file(p)) == 5
+    # ... and within-chunk disorder is fine for the chunked reader too
+    sorted_ok = [v.arrival for ch in
+                 traces.iter_trace_chunks(p, chunk_vms=5) for v in ch]
+    assert sorted_ok == [0.0, 5.0, 10.0, 20.0, 30.0]
+
+
+def test_chunked_reader_alias_collision_last_header_wins(tmp_path):
+    """Two headers aliasing to one canonical column (the real Azure
+    vmtable carries both vmcorecount and vmcorecountbucket) must not
+    interleave values: the last header wins, like load_trace_file."""
+    p = _write(tmp_path, "collide.csv",
+               "arrival,lifetime,vmcorecount,vmcorecountbucket,mem_gb\n"
+               "0,10,2,4,8\n5,10,2,4,8\n")
+    mono = traces.load_trace_file(p)
+    cat = [v for ch in traces.iter_trace_chunks(p, chunk_vms=1)
+           for v in ch]
+    assert [v.cores for v in mono] == [4, 4]
+    assert [(v.cores, v.mem_gb) for v in cat] == \
+        [(v.cores, v.mem_gb) for v in mono]
+
+
+def test_chunked_reader_empty_and_duplicate_ids(tmp_path):
+    p = _write(tmp_path, "hdr.csv", "arrival,lifetime,cores,mem_gb\n")
+    with pytest.raises(traces.TraceSchemaError, match="no rows"):
+        list(traces.iter_trace_chunks(p))
+    p = _write(tmp_path, "dup.csv",
+               "vmid,arrival,lifetime,cores,mem_gb\n"
+               "7,0,10,2,4\n8,5,10,2,4\n7,8,10,2,4\n")
+    with pytest.raises(traces.TraceSchemaError, match="duplicate vm_id"):
+        # ids deduplicate ACROSS chunks (rows 1 and 3 collide)
+        list(traces.iter_trace_chunks(p, chunk_vms=2))
+
+
 def test_fixture_exists_and_replays_through_engine():
     path = traces.fixture_trace_path()
     assert os.path.isfile(path)
