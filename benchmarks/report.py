@@ -5,7 +5,9 @@
 
 The ``replay`` table tracks the batched replay engine's throughput
 trajectory from ``experiments/BENCH_replay.json`` (written by
-``python -m benchmarks.run --perf-smoke``).
+``python -m benchmarks.run --perf-smoke``); the ``policy`` table
+renders the compiled policy engine's decision throughput and grid-sweep
+numbers from the same artifact.
 """
 from __future__ import annotations
 
@@ -122,12 +124,38 @@ def replay_table(path: str = "experiments/BENCH_replay.json") -> str:
     return "\n".join(lines)
 
 
+def policy_table(path: str = "experiments/BENCH_replay.json") -> str:
+    """Compiled policy-engine throughput (written by ``run.py
+    --perf-smoke`` since the batched prediction pipeline)."""
+    lines = ["| trace VMs | compiled s | VMs/s | speedup vs scalar walk "
+             "| bit-exact | grid cells | grid eval s |",
+             "|---|---|---|---|---|---|---|"]
+    if not os.path.isfile(path):
+        lines.append("| (run `python -m benchmarks.run --perf-smoke`) "
+                     "| — | — | — | — | — | — |")
+        return "\n".join(lines)
+    r = json.load(open(path))
+    if r.get("policy_n_vms") is None:
+        lines.append("| (re-run `python -m benchmarks.run --perf-smoke` "
+                     "to record the policy benchmark) | — | — | — | — "
+                     "| — | — |")
+        return "\n".join(lines)
+    lines.append(
+        f"| {r['policy_n_vms']} | {r.get('policy_compiled_s', '—')} | "
+        f"{r.get('policy_vms_per_sec', '—')} | "
+        f"{r.get('policy_speedup_vs_scalar', '—')}x | "
+        f"{'yes' if r.get('policy_bit_exact') else 'NO'} | "
+        f"{r.get('policy_grid_cells', '—')} | "
+        f"{r.get('policy_grid_wall_s', '—')} |")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--outdir", default="experiments/dryrun")
     ap.add_argument("--what", default="all",
                     choices=["all", "dryrun", "roofline", "collectives",
-                             "replay"])
+                             "replay", "policy"])
     args = ap.parse_args()
     if args.what in ("all", "dryrun"):
         print("### Dry-run matrix\n")
@@ -144,6 +172,11 @@ def main():
     if args.what in ("all", "replay"):
         print("### Replay-engine throughput (batched event sweeps)\n")
         print(replay_table())
+        print()
+    if args.what in ("all", "policy"):
+        print("### Policy-engine throughput (compiled decision "
+              "pipeline + grid sweep)\n")
+        print(policy_table())
 
 
 if __name__ == "__main__":

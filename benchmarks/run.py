@@ -24,6 +24,7 @@ MODULES = [
     "benchmarks.fig7_latency",
     "benchmarks.fig16_spill",
     "benchmarks.fig17_li_model",
+    "benchmarks.fig17_sensitivity",
     "benchmarks.fig18_um_model",
     "benchmarks.fig20_combined",
     "benchmarks.fig21_e2e",
@@ -43,11 +44,25 @@ def perf_smoke():
     (``CompiledReplayStream``: events/s, shard count, peak shard bytes,
     overhead vs the monolithic sweep — the cost of bounding peak
     event-tensor memory).
+
+    Since the compiled policy engine (``core/policy_engine.py``) it
+    also records policy-decision throughput — compiled pond decisions
+    on a >=100k-VM trace (VMs/s, speedup vs the scalar control-plane
+    walk, bit-exactness on the timed subset) — plus the (tau x fp)
+    grid-sweep benchmark behind ``benchmarks/fig17_sensitivity.py``.
     """
-    from benchmarks import fig3_poolsize
+    from benchmarks import fig3_poolsize, fig17_sensitivity
     t0 = time.time()
     res = fig3_poolsize.run(quick=True)
-    wall = time.time() - t0
+    wall = time.time() - t0          # fig3-only: comparable across PRs
+    t1 = time.time()
+    policy = fig17_sensitivity.policy_decision_bench()
+    print(f"  policy decisions: {policy['n_vms']} VMs in "
+          f"{policy['compiled_s']}s ({policy['vms_per_sec']:.0f} VMs/s, "
+          f"{policy['speedup_vs_scalar']}x vs scalar walk, "
+          f"bit_exact={policy['bit_exact_subset']})")
+    grid_res = fig17_sensitivity.run(quick=True)
+    policy_wall = time.time() - t1
     batched = res.get("batched", {})
     narrow = batched.get("narrow2", {})
     streaming = res.get("streaming", {})
@@ -76,6 +91,17 @@ def perf_smoke():
         "streaming_overhead_vs_monolithic":
             streaming.get("overhead_vs_monolithic"),
         "streaming_bit_exact": streaming.get("bit_exact"),
+        "policy_bench_wall_s": round(policy_wall, 3),
+        "policy_n_vms": policy.get("n_vms"),
+        "policy_vms_per_sec": policy.get("vms_per_sec"),
+        "policy_compiled_s": policy.get("compiled_s"),
+        "policy_speedup_vs_scalar": policy.get("speedup_vs_scalar"),
+        "policy_bit_exact": policy.get("bit_exact_subset"),
+        "policy_grid_cells": grid_res.get("grid_cells"),
+        "policy_grid_wall_s": grid_res.get("grid_wall_s"),
+        "policy_grid_pricing_wall_s": grid_res.get("pricing_wall_s"),
+        "policy_grid_claims_pass": all(
+            c["ok"] for c in grid_res.get("claims", [])),
         "claims_pass": all(c["ok"] for c in res.get("claims", [])),
     }
     os.makedirs("experiments", exist_ok=True)
@@ -85,7 +111,9 @@ def perf_smoke():
           f"{bench['events_per_sec']} candidate-events/s, batched K="
           f"{bench['batched_k']} {bench['batched_speedup_vs_seed_loop']}x"
           f" vs seed loop, streaming {bench['streaming_n_shards']} "
-          f"shards {bench['streaming_events_per_sec']} ev/s "
+          f"shards {bench['streaming_events_per_sec']} ev/s, policy "
+          f"{bench['policy_vms_per_sec']} VMs/s "
+          f"({bench['policy_speedup_vs_scalar']}x) "
           f"-> experiments/BENCH_replay.json")
     return bench
 

@@ -19,13 +19,19 @@ report mean ± spread savings across the seed batch.
       # sharded streaming replay (CompiledReplayStream) — bounded
       # parse memory and a fixed event-tensor budget; fetch a real
       # trace with scripts/fetch_azure_trace.py
+  PYTHONPATH=src python examples/cluster_savings.py \\
+      --policy-grid "tau=0.02:0.2:3,li=0.05:0.5:2"
+      # ONE grid evaluation (compiled policy engine) prices every
+      # (tau, pdm, li-threshold) setting against the seed batch and
+      # prints a savings-vs-setting table; axes: tau, pdm, li
+      # (each lo:hi:n, defaults tau=0.05, pdm=0.05, li=0.05)
 """
 import argparse
 import time
 
 import numpy as np
 
-from repro.core import cluster_sim, replay_engine, traces
+from repro.core import cluster_sim, policy_engine, replay_engine, traces
 from repro.core.control_plane import ControlPlane, ControlPlaneConfig
 from repro.core.pool_manager import PoolManager
 from repro.core.predictors.models import (LatencySensitivityModel,
@@ -37,10 +43,75 @@ def _models(pop, horizon):
     li = LatencySensitivityModel(pdm=0.05).fit(
         traces.pmu_matrix(train), traces.slowdowns(train, 182))
     hist = traces.build_history(train)
-    um = UntouchedMemoryModel(0.05).fit(
-        traces.metadata_features(train, hist),
-        np.array([v.untouched for v in train]))
-    return li, um, hist
+    meta = traces.metadata_features(train, hist)
+    ut = np.array([v.untouched for v in train])
+    um = UntouchedMemoryModel(0.05).fit(meta, ut)
+    return li, um, hist, meta, ut
+
+
+def parse_grid_spec(spec: str) -> dict:
+    """``"tau=0.1:0.3:3,pdm=0.02:0.1:3"`` -> {axis: np.linspace values}.
+
+    Axes: ``tau`` (UM quantile), ``pdm`` (slowdown margin), ``li``
+    (sensitivity-probability threshold).  Each axis is ``lo:hi:n``; a
+    single value (``tau=0.05``) pins the axis.
+    """
+    axes: dict[str, np.ndarray] = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        try:
+            name, rng = part.split("=")
+            name = name.strip()
+            if name not in ("tau", "pdm", "li"):
+                raise ValueError(f"unknown axis {name!r}")
+            pieces = [float(x) for x in rng.split(":")]
+            if len(pieces) == 1:
+                axes[name] = np.array(pieces)
+            elif len(pieces) == 3:
+                axes[name] = np.linspace(pieces[0], pieces[1],
+                                         int(pieces[2]))
+            else:
+                raise ValueError("expected value or lo:hi:n")
+        except ValueError as e:
+            raise SystemExit(
+                f"--policy-grid: cannot parse {part!r} ({e}); expected "
+                f"axis=lo:hi:n with axes tau, pdm, li") from None
+    return axes
+
+
+def run_policy_grid(spec, vms_list, cfg, pop, horizon):
+    """One compiled grid evaluation -> savings-vs-setting table."""
+    axes = parse_grid_spec(spec)
+    taus = tuple(round(float(t), 6) for t in axes.get("tau", [0.05]))
+    pdms = tuple(float(p) for p in axes.get("pdm", [0.05]))
+    ths = tuple(float(t) for t in axes.get("li", [0.05]))
+    li, _, hist, meta, ut = _models(pop, horizon)
+    um_models = policy_engine.fit_um_grid(meta, ut, taus)
+    settings = policy_engine.make_grid(taus=taus, pdms=pdms,
+                                       li_thresholds=ths)
+    t0 = time.perf_counter()
+    grid = policy_engine.grid_decisions(vms_list, settings, li,
+                                        um_models, hist, backend="auto")
+    t_grid = time.perf_counter() - t0
+    k = len(vms_list)
+    print(f"policy grid: {len(settings)} settings x {k} trace(s) "
+          f"evaluated in {t_grid:.2f}s (one compiled pass)")
+    flat_vms = [vms for _ in settings for vms in vms_list]
+    flat_dec = [grid[s][i] for s in range(len(settings))
+                for i in range(k)]
+    cache: dict = {}
+    results = cluster_sim.savings_analysis_batched(
+        flat_vms, cfg, "pond-grid", decisions=flat_dec, cache=cache)
+    print(f"{'setting':34s} {'savings':>14s} {'pool/group':>10s} "
+          f"{'mispred':>8s}")
+    for si, s in enumerate(settings):
+        sm = cluster_sim.summarize_savings(results[si * k:(si + 1) * k])
+        print(f"{s.label:34s} {sm['savings_mean']:+.3f}"
+              f"±{sm['savings_std']:.3f}     "
+              f"{sm['pool_group_gb_mean']:8.1f}GB "
+              f"{sm['mispred_mean']:8.3f}")
 
 
 def main(argv=None):
@@ -65,6 +136,12 @@ def main(argv=None):
     ap.add_argument("--chunk-vms", type=int, default=65536,
                     help="rows per ingestion chunk when streaming a "
                          "--trace-file out of core")
+    ap.add_argument("--policy-grid", default=None, metavar="SPEC",
+                    help="price a (tau, pdm, li) policy grid in one "
+                         "compiled evaluation and print a savings-vs-"
+                         "setting table; SPEC like "
+                         "'tau=0.1:0.3:3,pdm=0.02:0.1:3' (axes tau, "
+                         "pdm, li; each lo:hi:n or a single value)")
     args = ap.parse_args(argv)
 
     horizon = 5 * 86400
@@ -92,6 +169,10 @@ def main(argv=None):
         label = f"{args.seeds} synthetic seeds"
     cfg = cluster_sim.ClusterConfig(n_servers=n_servers, pool_sockets=16,
                                     gb_per_core=4.75)
+
+    if args.policy_grid:
+        run_policy_grid(args.policy_grid, vms_list, cfg, pop, horizon)
+        return
 
     # --- 1. price one candidate frontier in a single compiled sweep ----
     decisions, _ = cluster_sim.policy_decisions(vms_list[0], "static",
@@ -140,7 +221,7 @@ def main(argv=None):
                   f"{br[:, j].mean():.4f}±{br[:, j].std():.4f}")
 
     # --- 3. full provisioning searches, engine-backed ------------------
-    li, um, hist = _models(pop, horizon)
+    li, um, hist, *_ = _models(pop, horizon)
     replay_engine.stats_reset()
     cache: dict = {}
     t0 = time.perf_counter()

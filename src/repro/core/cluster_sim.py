@@ -43,6 +43,13 @@ rebuilding Python tuple lists per probe.
 
 ``replay_reject_rate`` remains the scalar per-event oracle the batched
 engine is tested against (tests/test_replay_engine.py).
+
+The DECISION side is compiled too: ``policy_decisions`` defaults to the
+vectorized pipeline in ``core/policy_engine.py`` (bit-exact vs the
+scalar control-plane walk, ``engine="scalar"``), and both savings
+entry points accept precomputed ``policy_engine.PolicyDecisions``
+arrays via ``decisions=`` — the path the (tau, pdm, fp-rate) grid
+sweeps of ``benchmarks/fig17_sensitivity.py`` take.
 """
 from __future__ import annotations
 
@@ -51,7 +58,7 @@ import math
 
 import numpy as np
 
-from repro.core import replay_engine, traces
+from repro.core import policy_engine, replay_engine, traces
 from repro.core.control_plane import ControlPlane
 
 
@@ -216,12 +223,39 @@ class VMDecision:
     t_migrate: float | None    # QoS mitigation moves pool->local at this t
 
 
+def _all_local_decisions(vms) -> policy_engine.PolicyDecisions:
+    """Baseline all-local decision arrays (no per-VM objects)."""
+    n = len(vms)
+    mem = np.fromiter((vm.mem_gb for vm in vms), float, n)
+    return policy_engine.PolicyDecisions(
+        mem, np.zeros(n), np.zeros(n, bool), np.full(n, np.nan))
+
+
 def policy_decisions(vms, policy: str,
                      control_plane: ControlPlane | None = None,
                      static_pool_frac: float = 0.15,
                      latency: int = 182, pdm: float = 0.05,
-                     spill_harm_prob: float = 0.25):
-    """Per-VM memory split + misprediction accounting (placement-free)."""
+                     spill_harm_prob: float = 0.25,
+                     engine: str = "auto", as_arrays: bool = False):
+    """Per-VM memory split + misprediction accounting (placement-free).
+
+    ``engine="auto"`` (default) runs the compiled vectorized pipeline
+    (``core/policy_engine.py``): segment-op history percentiles plus
+    batched forest/GBM inference, bit-exact against the scalar walk —
+    decisions, mispredictions, ``t_migrate`` and the control plane's
+    post-run history/mitigation state (``tests/test_policy_engine.py``)
+    — and an order of magnitude faster at trace scale.
+    ``engine="scalar"`` keeps the original per-VM loop (the equivalence
+    reference).  ``as_arrays=True`` returns the struct-of-arrays
+    ``policy_engine.PolicyDecisions`` — which the replay engine
+    compiles natively — instead of a ``VMDecision`` list.
+    """
+    if engine == "auto":
+        dec = policy_engine.policy_decisions_compiled(
+            vms, policy, control_plane, static_pool_frac, latency, pdm,
+            spill_harm_prob)
+        return ((dec if as_arrays else dec.as_vmdecisions()),
+                dec.mispredictions)
     decisions, mispred = [], 0.0
     slows = traces.slowdowns(vms, latency)
     for i, vm in enumerate(vms):
@@ -249,7 +283,13 @@ def policy_decisions(vms, policy: str,
         elif pool_gb > vm.untouched * vm.mem_gb + 1e-9:
             mispred += spill_harm_prob if slows[i] > pdm else 0.0
         decisions.append(VMDecision(local_gb, pool_gb, fully, t_mig))
-    return decisions, mispred / max(len(vms), 1)
+    mispred /= max(len(vms), 1)
+    if as_arrays:
+        dec = policy_engine.decisions_from_list(decisions)
+        dec.mispredictions = mispred
+        dec.n_mitigations = dec.n_migrations
+        return dec, mispred
+    return decisions, mispred
 
 
 def replay_reject_rate(vms, decisions, cfg: ClusterConfig,
@@ -338,8 +378,9 @@ def savings_analysis(vms, cfg: ClusterConfig, policy: str,
                      reject_tol: float = 0.005,
                      use_engine: bool = True,
                      cache: dict | None = None,
-                     max_events_per_shard: int | None = None
-                     ) -> PolicyResult:
+                     max_events_per_shard: int | None = None,
+                     decisions: "policy_engine.PolicyDecisions | None"
+                     = None) -> PolicyResult:
     """Minimum uniform (server_gb, pool_gb) that schedules the trace.
 
     With ``use_engine=True`` (default) the feasibility searches run on the
@@ -372,22 +413,33 @@ def savings_analysis(vms, cfg: ClusterConfig, policy: str,
         vms = traces.load_trace_file("azure_packing.csv.gz")
         res = savings_analysis(vms, cfg, "static",
                                max_events_per_shard=250_000)
+
+    ``decisions``: precomputed ``policy_engine.PolicyDecisions`` (e.g.
+    one point of a ``policy_engine.grid_decisions`` sweep); skips the
+    policy walk and prices the given split directly (``policy`` is then
+    just the result label; misprediction/mitigation counts come from
+    the object).
     """
-    decisions, mispred = policy_decisions(
-        vms, policy, control_plane, static_pool_frac, latency, pdm,
-        spill_harm_prob)
+    if decisions is not None:
+        dec_in, mispred = decisions, decisions.mispredictions
+        mitig = decisions.n_mitigations
+    else:
+        dec_in, mispred = policy_decisions(
+            vms, policy, control_plane, static_pool_frac, latency, pdm,
+            spill_harm_prob, engine="auto" if use_engine else "scalar",
+            as_arrays=use_engine)
+        mitig = len(control_plane.mitigation.log) if control_plane else 0
     hi_server = cfg.cores_per_server * 12.0
     big_pool = hi_server * cfg.n_servers
-    mitig = len(control_plane.mitigation.log) if control_plane else 0
-    dec_local = [VMDecision(vm.mem_gb, 0.0, False, None) for vm in vms]
     n_pts = 7
 
     def _compile(vms_, dec_):
         # past the shard budget, stream instead of materializing one
         # monolithic padded event tensor (2 events per VM + 1 per QoS
         # migration — count them, pond traces run well past 2/VM)
-        n_events = 2 * len(vms_) + \
-            sum(1 for d in dec_ if d.t_migrate is not None)
+        n_events = 2 * len(vms_) + (
+            dec_.n_migrations if hasattr(dec_, "n_migrations")
+            else sum(1 for d in dec_ if d.t_migrate is not None))
         if max_events_per_shard is not None and \
                 n_events > max_events_per_shard:
             return replay_engine.CompiledReplayStream(
@@ -396,6 +448,10 @@ def savings_analysis(vms, cfg: ClusterConfig, policy: str,
         return replay_engine.CompiledReplay(vms_, dec_, cfg)
 
     if not use_engine:                       # scalar-oracle reference path
+        decisions = dec_in.as_vmdecisions() \
+            if hasattr(dec_in, "as_vmdecisions") else dec_in
+        dec_local = [VMDecision(vm.mem_gb, 0.0, False, None)
+                     for vm in vms]
         # cores-bound reject floor: memory tolerance is on top of it
         r0 = replay_reject_rate(vms, decisions, cfg, hi_server, big_pool)
         tol = r0 + reject_tol
@@ -421,7 +477,7 @@ def savings_analysis(vms, cfg: ClusterConfig, policy: str,
         return PolicyResult(policy, server_gb, pool_gb, base_gb,
                             cfg.n_servers, cfg.n_groups, mispred, mitig, rr)
 
-    eng = _compile(vms, decisions)
+    eng = _compile(vms, dec_in)
     # cores-bound reject floor: memory tolerance is measured on top of it
     r0 = float(eng.reject_rates(hi_server, big_pool)[0])
     tol = r0 + reject_tol
@@ -444,7 +500,7 @@ def savings_analysis(vms, cfg: ClusterConfig, policy: str,
     if cache is not None and "local_engine" in cache:
         eng_local = cache["local_engine"]
     else:
-        eng_local = _compile(vms, dec_local)
+        eng_local = _compile(vms, _all_local_decisions(vms))
         if cache is not None:
             cache["local_engine"] = eng_local
     base_gb = cache.get(("base_gb", tol)) if cache is not None else None
@@ -475,8 +531,8 @@ def savings_analysis_batched(vms_list, cfg: ClusterConfig, policy: str,
                              spill_harm_prob: float = 0.25,
                              reject_tol: float = 0.005,
                              cache: dict | None = None,
-                             max_events_per_shard: int | None = None
-                             ) -> list[PolicyResult]:
+                             max_events_per_shard: int | None = None,
+                             decisions=None) -> list[PolicyResult]:
     """``savings_analysis`` for K traces at once — one sweep instead of K.
 
     Pond's headline savings (§4, Figs 3/21) are statistical claims over
@@ -504,6 +560,13 @@ def savings_analysis_batched(vms_list, cfg: ClusterConfig, policy: str,
     memory, which is exactly what the budget rules out); per-trace
     sub-caches still share the all-local baseline across policies.
 
+    ``decisions``: precomputed per-trace
+    ``policy_engine.PolicyDecisions`` aligned with ``vms_list`` (e.g. a
+    flattened ``policy_engine.grid_decisions`` sweep, where the same
+    trace list may repeat across grid rows — the all-local baseline is
+    then compiled and searched once per unique trace).  ``policy`` is
+    just the result label in that case.
+
     Usage (stream a K-seed batch past the shard budget)::
 
         res = savings_analysis_batched(vms_list, cfg, "static",
@@ -515,8 +578,10 @@ def savings_analysis_batched(vms_list, cfg: ClusterConfig, policy: str,
         return []
     cps = list(control_planes) if control_planes is not None \
         else [None] * k
+    if decisions is not None and len(decisions) != k:
+        raise ValueError(f"decisions must align with the {k} traces")
     # conservative 3 events/VM bound (decisions — and thus the exact
-    # MIGRATE count — are not computed yet here; the per-trace calls
+    # MIGRATE count — may not be computed yet here; the per-trace calls
     # below re-check with exact counts and may still run monolithic)
     if max_events_per_shard is not None and any(
             3 * len(v) > max_events_per_shard for v in vms_list):
@@ -529,21 +594,28 @@ def savings_analysis_batched(vms_list, cfg: ClusterConfig, policy: str,
                 static_pool_frac=static_pool_frac, latency=latency,
                 pdm=pdm, spill_harm_prob=spill_harm_prob,
                 reject_tol=reject_tol, cache=sub,
-                max_events_per_shard=max_events_per_shard))
+                max_events_per_shard=max_events_per_shard,
+                decisions=None if decisions is None else decisions[i]))
         return out
-    per = [policy_decisions(vms, policy, cp, static_pool_frac, latency,
-                            pdm, spill_harm_prob)
-           for vms, cp in zip(vms_list, cps)]
-    decisions = [d for d, _ in per]
-    mispred = [m for _, m in per]
-    mitig = [len(cp.mitigation.log) if cp else 0 for cp in cps]
+    if decisions is not None:
+        dec_list = list(decisions)
+        mispred = [d.mispredictions for d in dec_list]
+        mitig = [d.n_mitigations for d in dec_list]
+    else:
+        per = [policy_decisions(vms, policy, cp, static_pool_frac,
+                                latency, pdm, spill_harm_prob,
+                                as_arrays=True)
+               for vms, cp in zip(vms_list, cps)]
+        dec_list = [d for d, _ in per]
+        mispred = [m for _, m in per]
+        mitig = [len(cp.mitigation.log) if cp else 0 for cp in cps]
     hi_server = cfg.cores_per_server * 12.0
     big_pool = hi_server * cfg.n_servers
     hi_vec = np.full(k, hi_server)
 
     batch = replay_engine.CompiledReplayBatch(
         [replay_engine.CompiledReplay(v, d, cfg)
-         for v, d in zip(vms_list, decisions)])
+         for v, d in zip(vms_list, dec_list)])
     # cores-bound reject floor per trace; tolerance is on top of it
     r0 = batch.reject_rates(hi_server, big_pool)[:, 0]
     tol = r0 + reject_tol
@@ -568,14 +640,21 @@ def savings_analysis_batched(vms_list, cfg: ClusterConfig, policy: str,
         lambda g: batch.reject_rates(g, np.full_like(g, big_pool))
         <= tol[:, None], np.zeros(k), hi_vec)
     # the all-local baseline ignores the pool: share its batch + search
-    # across policies of one trace list
+    # across policies of one trace list, and compile each UNIQUE trace
+    # once (grid sweeps repeat traces across decision rows)
     if cache is not None and "local_batch" in cache:
         local_batch = cache["local_batch"]
     else:
-        local_batch = replay_engine.CompiledReplayBatch(
-            [replay_engine.CompiledReplay(
-                vms, [VMDecision(vm.mem_gb, 0.0, False, None)
-                      for vm in vms], cfg) for vms in vms_list])
+        uniq_local: dict[int, replay_engine.CompiledReplay] = {}
+        engines = []
+        for vms in vms_list:
+            e = uniq_local.get(id(vms))
+            if e is None:
+                e = replay_engine.CompiledReplay(
+                    vms, _all_local_decisions(vms), cfg)
+                uniq_local[id(vms)] = e
+            engines.append(e)
+        local_batch = replay_engine.CompiledReplayBatch(engines)
         if cache is not None:
             cache["local_batch"] = local_batch
     base_gb = cache.get(("base_gb_multi", tuple(tol))) \

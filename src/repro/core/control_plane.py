@@ -97,12 +97,26 @@ class ControlPlane:
         seeing the seed data only, whatever type it was.  Callers that
         want to rewind observations use :meth:`reset_history`.
         """
+        self._owned_list(customer).append(untouched)
+
+    def _owned_list(self, customer: int) -> list:
+        """The customer's history as a list PRIVATE to this plane —
+        the copy-on-first-write rule both append paths share."""
         h = self.history.get(customer)
         if customer not in self._owned_hist:
             h = [] if h is None else list(h)
             self.history[customer] = h
             self._owned_hist.add(customer)
-        h.append(untouched)
+        return h
+
+    def extend_untouched(self, customer: int, values) -> None:
+        """Bulk :meth:`record_untouched`: append a whole sequence of
+        observations for one customer at once (the compiled policy
+        engine records a trace's history per customer instead of per
+        VM).  Shares the copy-on-first-write ownership rules, and the
+        final history state equals ``record_untouched`` called once per
+        value in order."""
+        self._owned_list(customer).extend(values)
 
     def reset_history(self, history: dict | None = None) -> None:
         """Reset hook for :meth:`record_untouched`'s in-place appends:

@@ -21,6 +21,22 @@ class RandomForest:
     def predict_proba(self, x: np.ndarray) -> np.ndarray:
         return np.mean([t.predict(x) for t in self.trees], axis=0)
 
+    def predict_proba_batch(self, x: np.ndarray) -> np.ndarray:
+        """Batched probabilities whose row ``i`` is BIT-IDENTICAL to
+        ``predict_proba(x[i:i+1])[0]``.
+
+        ``predict_proba`` on a one-row batch reduces a contiguous
+        ``(T, 1)`` float32 column, which numpy sums pairwise; the same
+        reduction over a ``(T, N)`` batch runs the strided sequential
+        loop instead and can differ in the last ulp.  Reducing the
+        TRANSPOSED (row-contiguous) stack restores the pairwise order
+        per row, so the compiled policy engine can score every VM in
+        one call and still match the scalar control plane's per-VM
+        probabilities bit-for-bit (asserted in tests/test_predictors).
+        """
+        preds = T.predict_stack(self.trees, x)        # (T, N)
+        return np.mean(np.ascontiguousarray(preds.T), axis=1)
+
     def predict_proba_jax(self, x):
         import jax.numpy as jnp
         if self.packed is None:

@@ -24,12 +24,83 @@ class QuantileGBM:
     stages: list
     lr: float
     tau: float
+    packed: dict | None = None
 
     def predict(self, x: np.ndarray) -> np.ndarray:
+        """Batched prediction.  Row ``i`` is bit-identical to predicting
+        row ``i`` alone: every stage's tree walk is an elementwise
+        gather and the ``+=`` accumulates stage by stage in the same
+        float32 order for any batch size (the property the compiled
+        policy engine's one-call inference relies on)."""
         out = np.full(len(x), self.f0, np.float32)
         for t in self.stages:
             out += self.lr * t.predict(x)
         return out
+
+    def predict_jax(self, x):
+        """XLA inference over the packed stage stack (float32; matches
+        :meth:`predict` to ensemble rounding, not bitwise)."""
+        import jax.numpy as jnp
+        if self.packed is None:
+            self.packed = T.pack_trees(self.stages)
+        preds = T.predict_stack_jax(self.packed, jnp.asarray(x))
+        return self.f0 + self.lr * jnp.sum(preds, axis=0)
+
+
+def pack_gbms(models: "list[QuantileGBM]") -> dict:
+    """Stack several fitted GBMs into one padded array pytree.
+
+    Pads every model's stages to a common (n_stages, n_nodes) shape —
+    padding stages are single-leaf zero-value trees, so they contribute
+    ``lr * 0`` — and stacks to ``(G, S, n)`` arrays plus per-model
+    ``f0``/``lr`` vectors.  The result feeds :func:`predict_gbms_jax`,
+    which vmaps ONE evaluation over the model axis: this is how the
+    policy engine prices a whole tau grid against a trace batch in a
+    single compiled call (see ``core/policy_engine.py``).
+    """
+    import jax.numpy as jnp
+    per = [T.pack_trees(m.stages) for m in models]
+    s_max = max(p["feature"].shape[0] for p in per)
+    n_max = max(p["feature"].shape[1] for p in per)
+
+    def pad(p, key, fill):
+        a = np.asarray(p[key])
+        out = np.full((s_max, n_max), fill, a.dtype)
+        out[:a.shape[0], :a.shape[1]] = a
+        return out
+
+    packed = {key: jnp.asarray(np.stack([pad(p, key, fill) for p in per]))
+              for key, fill in (("feature", -1), ("threshold", 0.0),
+                                ("left", 0), ("right", 0), ("value", 0.0))}
+    packed["depth"] = max(p["depth"] for p in per)
+    packed["f0"] = jnp.asarray(np.array([m.f0 for m in models],
+                                        np.float32))
+    packed["lr"] = jnp.asarray(np.array([m.lr for m in models],
+                                        np.float32))
+    return packed
+
+
+def predict_gbms_jax(packed, x):
+    """All models of a :func:`pack_gbms` stack on one batch: (G, B).
+
+    A single vmap over the model axis — G tau settings price a trace
+    batch in one XLA call instead of G numpy ensemble walks.
+    """
+    import jax
+    import jax.numpy as jnp
+    xb = jnp.asarray(x)
+
+    def one_model(feat, thr, left, right, value, f0, lr):
+        preds = T.predict_stack_jax(
+            {"feature": feat, "threshold": thr, "left": left,
+             "right": right, "value": value,
+             "depth": packed["depth"]}, xb)
+        return f0 + lr * jnp.sum(preds, axis=0)
+
+    return jax.vmap(one_model)(packed["feature"], packed["threshold"],
+                               packed["left"], packed["right"],
+                               packed["value"], packed["f0"],
+                               packed["lr"])
 
 
 def fit_gbm(x: np.ndarray, y: np.ndarray, tau: float = 0.2,

@@ -44,6 +44,13 @@ class LatencySensitivityModel:
     def p_sensitive(self, pmu_features: np.ndarray) -> np.ndarray:
         return self.forest.predict_proba(pmu_features)
 
+    def p_sensitive_batch(self, pmu_features: np.ndarray) -> np.ndarray:
+        """Whole-trace probabilities whose row ``i`` bit-matches the
+        control plane's per-VM ``p_sensitive(pmu[None])[0]`` call (see
+        ``RandomForest.predict_proba_batch``); the compiled policy
+        engine scores every VM in one call through this path."""
+        return self.forest.predict_proba_batch(pmu_features)
+
     def insensitive(self, pmu_features: np.ndarray,
                     threshold: float) -> np.ndarray:
         return self.p_sensitive(pmu_features) < threshold

@@ -131,8 +131,13 @@ def pack_trees(trees: list[Tree]):
             "depth": max(t.depth for t in trees)}
 
 
-def predict_jax(packed, x: jax.Array) -> jax.Array:
-    """Ensemble mean prediction.  x: (B, F) -> (B,).  jit-able."""
+def predict_stack_jax(packed, x: jax.Array) -> jax.Array:
+    """Per-tree predictions of a packed ensemble: x (B, F) -> (T, B).
+
+    The shared substrate for ensemble reductions: the RandomForest mean
+    (``predict_jax``), the GBM's ``f0 + lr * sum`` (``gbm.predict_jax``)
+    and the vmapped multi-model grid path (``gbm.predict_gbms_jax``).
+    """
     depth = packed["depth"]
 
     def one_tree(feat, thr, left, right, value):
@@ -146,7 +151,20 @@ def predict_jax(packed, x: jax.Array) -> jax.Array:
                                 jnp.zeros(x.shape[0], jnp.int32))
         return value[idx]
 
-    preds = jax.vmap(one_tree)(packed["feature"], packed["threshold"],
-                               packed["left"], packed["right"],
-                               packed["value"])
-    return jnp.mean(preds, axis=0)
+    return jax.vmap(one_tree)(packed["feature"], packed["threshold"],
+                              packed["left"], packed["right"],
+                              packed["value"])
+
+
+def predict_jax(packed, x: jax.Array) -> jax.Array:
+    """Ensemble mean prediction.  x: (B, F) -> (B,).  jit-able."""
+    return jnp.mean(predict_stack_jax(packed, x), axis=0)
+
+
+def predict_stack(trees: list[Tree], x: np.ndarray) -> np.ndarray:
+    """numpy pendant of :func:`predict_stack_jax`: (T, B) per-tree
+    predictions.  Each tree's gather loop is elementwise per row, so
+    row ``i`` of the stack is bit-identical to predicting row ``i``
+    alone — the property the compiled policy engine's batched
+    inference relies on."""
+    return np.stack([t.predict(x) for t in trees])

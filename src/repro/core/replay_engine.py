@@ -286,6 +286,34 @@ def _bucket(k: int) -> int:
     return _BUCKETS[-1]
 
 
+# ----------------------------------------------------- decision ingest -----
+def _decision_arrays(decisions, n: int):
+    """``(local_gb, pool_gb, t_migrate)`` float64 arrays from either a
+    ``VMDecision`` sequence or a struct-of-arrays object
+    (``policy_engine.PolicyDecisions``) — the form the compiled policy
+    pipeline emits, accepted natively so no per-VM decision objects are
+    materialized on the hot path.  ``t_migrate`` uses NaN for "none".
+    """
+    if hasattr(decisions, "local_gb") \
+            and not isinstance(decisions, (list, tuple)):
+        local = np.asarray(decisions.local_gb, float)
+        pool = np.asarray(decisions.pool_gb, float)
+        t_mig = np.asarray(decisions.t_migrate, float)
+        if not (len(local) == len(pool) == len(t_mig) == n):
+            raise ValueError(
+                f"decision arrays must align with the {n} VMs; got "
+                f"lengths {(len(local), len(pool), len(t_mig))}")
+        return local, pool, t_mig
+    if len(decisions) != n:
+        raise ValueError("decisions must align with vms")
+    local = np.fromiter((float(d.local_gb) for d in decisions), float, n)
+    pool = np.fromiter((float(d.pool_gb) for d in decisions), float, n)
+    t_mig = np.fromiter(
+        (np.nan if d.t_migrate is None else float(d.t_migrate)
+         for d in decisions), float, n)
+    return local, pool, t_mig
+
+
 # ------------------------------------------------------------ statistics ---
 @dataclasses.dataclass
 class EngineStats:
@@ -380,24 +408,29 @@ class CompiledReplay:
             self._gcols[s, :len(members)] = members
 
         # per-VM payloads: python floats for the loop, packed vectors for
-        # the fused admission compare / state updates
-        self._cores = [float(vm.cores) for vm in vms]
-        self._mem = [float(vm.mem_gb) for vm in vms]
-        self._local = [float(d.local_gb) for d in decisions]
-        self._pool = [float(d.pool_gb) for d in decisions]
+        # the fused admission compare / state updates.  Decisions may be
+        # a VMDecision list or a policy_engine.PolicyDecisions SoA —
+        # the latter compiles without materializing per-VM objects.
+        cores_a = np.fromiter((vm.cores for vm in vms), float, n)
+        mem_a = np.fromiter((vm.mem_gb for vm in vms), float, n)
+        local_a, pool_a, t_mig = _decision_arrays(decisions, n)
+        self._cores = cores_a.tolist()
+        self._mem = mem_a.tolist()
+        self._local = local_a.tolist()
+        self._pool = pool_a.tolist()
         self._vec3 = [np.array([c, l, p]) for c, l, p in
                       zip(self._cores, self._local, self._pool)]
         self._vec2 = [v[:2] for v in self._vec3]
-        self._exact = all(
-            c.is_integer() and m.is_integer() and l.is_integer()
-            and p.is_integer()
-            for c, m, l, p in zip(self._cores, self._mem, self._local,
-                                  self._pool))
+        self._exact = bool(
+            (cores_a == np.floor(cores_a)).all()
+            and (mem_a == np.floor(mem_a)).all()
+            and (local_a == np.floor(local_a)).all()
+            and (pool_a == np.floor(pool_a)).all())
         # per-VM payload maxima: the int16 state-packing overflow check
         # bounds every admission intermediate by capacity + payload
-        self._pay_mem_max = max(max(self._mem, default=0.0),
-                                max(self._local, default=0.0))
-        self._pay_pool_max = max(self._pool, default=0.0)
+        self._pay_mem_max = float(max(mem_a.max(initial=0.0),
+                                      local_a.max(initial=0.0)))
+        self._pay_pool_max = float(pool_a.max(initial=0.0))
 
         # events in the oracle's insertion order: per VM —
         # (arrival, ARRIVE), (t_migrate, MIGRATE)?, (departure, DEPART) —
@@ -408,14 +441,17 @@ class CompiledReplay:
         # departure would otherwise hit whichever VM reused the slot.
         times = np.empty(3 * n)
         times[0::3] = np.fromiter((vm.arrival for vm in vms), float, n)
-        t_mig = np.fromiter(
-            (np.nan if d.t_migrate is None else d.t_migrate
-             for d in decisions), float, n)
+        t_mig = t_mig.copy()
         t_mig[(t_mig < times[0::3])
               | (t_mig >= np.fromiter((vm.departure for vm in vms),
                                       float, n))] = np.nan
         times[1::3] = t_mig
-        self._has_migrate = bool((~np.isnan(t_mig)).any())
+        mig_keep = ~np.isnan(t_mig)
+        self._has_migrate = bool(mig_keep.any())
+        # worst-case used-pool deficit of the oracle's fallback-migrate
+        # quirk: bounds the negative side of the int16 pool carry
+        # (see _pick_state_dtype)
+        self._mig_pool_sum = float(pool_a[mig_keep].sum())
         times[2::3] = np.fromiter((vm.departure for vm in vms), float, n)
         kinds = np.tile(np.array([ARRIVE, MIGRATE, DEPART], np.int64), n)
         vmidx = np.repeat(np.arange(n, dtype=np.int64), 3)
@@ -509,20 +545,22 @@ class CompiledReplay:
         int16 is bit-equivalent to int32 whenever the candidate maxima
         plus the per-VM payload maxima stay within ``_I16_SAFE``, the
         best-fit score sentinel exceeds every free-cores value, and the
-        packed slot values (server * 2 + 1) fit.  One more exclusion:
-        traces with MIGRATE events always run int32 — the oracle's
-        fallback-migrate quirk returns pool a fallback-placed VM never
-        consumed, driving the used-pool carry negative without bound
-        over the trace, so no static capacity check can rule out int16
-        underflow there.  Anything else falls back to int32
+        packed slot values (server * 2 + 1) fit.  MIGRATE-bearing traces
+        need one more bound: the oracle's fallback-migrate quirk returns
+        pool a fallback-placed VM never consumed, driving the used-pool
+        carry NEGATIVE — by at most the pool payload of each compiled
+        MIGRATE event, so the total compiled migrate-event pool
+        (``_mig_pool_sum``) bounds the deficit.  When that sum plus the
+        payload headroom fits ``_I16_SAFE`` too, migrate traces pack to
+        int16 like any other; anything else falls back to int32
         automatically.
         """
-        if (not self._has_migrate
-                and self.cores_per_server < _I16_BIG
+        if (self.cores_per_server < _I16_BIG
                 and self.n_servers * 2 + 1 < _I16_BIG
                 and len(sgb_i) and sgb_i.min() >= 0 and pgb_i.min() >= 0
                 and sgb_i.max() + self._pay_mem_max <= _I16_SAFE
-                and pgb_i.max() + self._pay_pool_max <= _I16_SAFE):
+                and pgb_i.max() + self._pay_pool_max <= _I16_SAFE
+                and self._mig_pool_sum + self._pay_pool_max <= _I16_SAFE):
             return "int16"
         return "int32"
 
@@ -1147,6 +1185,7 @@ class CompiledReplayStream:
         self._pay_mem_max = 0.0
         self._pay_pool_max = 0.0
         self._has_migrate = False
+        self._mig_pool_sum = 0.0      # compiled MIGRATE-event pool total
 
         it = iter(vms)
         first = next(it, None)
@@ -1173,18 +1212,22 @@ class CompiledReplayStream:
 
     # ------------------------------------------------------------ ingest --
     def _ingest_chunk(self, chunk, decisions) -> None:
-        if decisions is not None and len(decisions) != len(chunk):
-            raise ValueError("decisions must align with the chunk")
+        if decisions is not None:
+            # list of VMDecision or a PolicyDecisions SoA, normalized
+            # to arrays either way (NaN t_migrate = none)
+            local_a, pool_a, tmig_a = _decision_arrays(decisions,
+                                                       len(chunk))
         t_min = _INF
         for i, vm in enumerate(chunk):
-            dec = decisions[i] if decisions is not None else None
             v = self.n_vms
             self.n_vms += 1
             c = float(vm.cores)
             m = float(vm.mem_gb)
-            l = m if dec is None else float(dec.local_gb)
-            p = 0.0 if dec is None else float(dec.pool_gb)
-            t_mig = None if dec is None else dec.t_migrate
+            l = m if decisions is None else float(local_a[i])
+            p = 0.0 if decisions is None else float(pool_a[i])
+            t_mig = None
+            if decisions is not None and not np.isnan(tmig_a[i]):
+                t_mig = float(tmig_a[i])
             arrival = float(vm.arrival)
             dep = arrival + float(vm.lifetime)
             self._cores.append(c)
@@ -1259,6 +1302,8 @@ class CompiledReplayStream:
                 if k == DEPART:
                     self._free_slots.append(sl)
                     self._pool_cum -= self._pool[v]
+                else:                         # MIGRATE (int16 pool bound)
+                    self._mig_pool_sum += self._pool[v]
             buf["kind"].append(k)
             buf["slot"].append(sl)
             buf["c"].append(self._cores[v])

@@ -157,6 +157,63 @@ class Population:
 
 
 # ------------------------------------------------- feature extraction ------
+@dataclasses.dataclass
+class VMTable:
+    """Struct-of-arrays view of a VM list (one array per field).
+
+    The compiled policy engine (``core/policy_engine.py``) consumes
+    traces in this form: batched predictor inference, history
+    percentiles and QoS sampling all operate on whole columns instead
+    of walking :class:`VM` records.  Column ``i`` of every array
+    corresponds to ``vms[i]``.
+    """
+    vm_id: np.ndarray       # (N,) int64
+    customer: np.ndarray    # (N,) int64
+    vm_type: np.ndarray     # (N,) int64
+    location: np.ndarray    # (N,) int64
+    guest_os: np.ndarray    # (N,) int64
+    cores: np.ndarray       # (N,) int64
+    mem_gb: np.ndarray      # (N,) float64
+    arrival: np.ndarray     # (N,) float64
+    lifetime: np.ndarray    # (N,) float64
+    untouched: np.ndarray   # (N,) float64
+    slow182: np.ndarray     # (N,) float64
+    slow222: np.ndarray     # (N,) float64
+    pmu: np.ndarray         # (N, N_PMU_FEATURES) float32
+
+    def __len__(self) -> int:
+        return len(self.vm_id)
+
+
+def vm_table(vms) -> VMTable:
+    """Compile a VM list into a :class:`VMTable` (one pass, no copies of
+    the PMU rows beyond the stacked matrix).
+
+    Usage::
+
+        table = traces.vm_table(vms)
+        dec = policy_engine.policy_decisions_compiled(
+            vms, "pond", control_plane=cp, table=table)
+    """
+    n = len(vms)
+
+    def ints(attr):
+        return np.fromiter((getattr(vm, attr) for vm in vms), np.int64, n)
+
+    def floats(attr):
+        return np.fromiter((getattr(vm, attr) for vm in vms), float, n)
+
+    return VMTable(
+        vm_id=ints("vm_id"), customer=ints("customer"),
+        vm_type=ints("vm_type"), location=ints("location"),
+        guest_os=ints("guest_os"), cores=ints("cores"),
+        mem_gb=floats("mem_gb"), arrival=floats("arrival"),
+        lifetime=floats("lifetime"), untouched=floats("untouched"),
+        slow182=floats("slow182"), slow222=floats("slow222"),
+        pmu=(np.stack([vm.pmu for vm in vms]) if n
+             else np.empty((0, N_PMU_FEATURES), np.float32)))
+
+
 def pmu_matrix(vms) -> np.ndarray:
     return np.stack([vm.pmu for vm in vms])
 

@@ -45,6 +45,24 @@ def test_replay_engine_doc_exists_and_covers_architecture():
             f"docs/replay_engine.md misses {topic!r}"
 
 
+def test_policy_engine_doc_exists_and_covers_architecture():
+    text = _read("docs", "policy_engine.md")
+    for topic in ("PolicyDecisions", "policy_decisions_compiled",
+                  "grid_decisions", "bit-exact", "segment",
+                  "percentile", "predict_proba_batch", "pack_gbms",
+                  "fig17_sensitivity", "t_migrate",
+                  "--what policy", "--policy-grid"):
+        assert topic.lower() in text.lower(), \
+            f"docs/policy_engine.md misses {topic!r}"
+
+
+def test_readme_covers_policy_engine():
+    text = _read("README.md")
+    for topic in ("policy_engine", "PolicyDecisions", "--policy-grid",
+                  "docs/policy_engine.md", "--what policy"):
+        assert topic in text, f"README misses {topic!r}"
+
+
 def test_traces_doc_covers_schema_and_ingestion():
     text = _read("docs", "traces.md")
     for topic in ("arrival", "lifetime", "cores", "mem_gb",  # schema

@@ -1,0 +1,115 @@
+"""scripts/fetch_azure_trace.py sqlite->CSV conversion on a tiny
+generated fixture: schema/scaling/clamping rules, --days windowing,
+--max-vms smoke subsetting, gz output, and round-trip ingestion through
+traces.load_trace_file / iter_trace_chunks."""
+import os
+import sqlite3
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "scripts"))
+import fetch_azure_trace  # noqa: E402
+
+from repro.core import traces  # noqa: E402
+
+
+#: (vmId, tenantId, vmTypeId, starttime, endtime) — days; NULL endtime =
+#: alive past the trace end; negative start = clamped to the window
+_VMS = [
+    (1, 10, 1, -0.5, 1.0),      # starts before the window -> arrival 0
+    (2, 10, 1, 0.25, 0.5),
+    (3, 11, 2, 0.5, None),      # no endtime -> departs at the horizon
+    (4, 12, 2, 1.0, 1.0),       # zero lifetime -> dropped
+    (5, 11, 1, 2.0, 9.0),       # ends past --days 3 -> clamped
+    (6, 13, 3, 2.5, 2.75),
+    (7, 13, 1, 5.0, 6.0),       # starts past --days 3 -> excluded
+]
+#: vmType rows repeat per candidate machine; conversion takes the MAX
+#: normalized core/memory per type
+_TYPES = [
+    (1, 0.125, 0.25), (1, 0.0625, 0.125),      # max -> 8 cores, 96 GB
+    (2, 0.5, 0.5),                             # 32 cores, 192 GB
+    (3, 0.015625, 1 / 384),                    # rounds up to >= 1 core/GB
+]
+
+
+@pytest.fixture
+def sqlite_fixture(tmp_path):
+    path = tmp_path / "packing_mini.sqlite"
+    con = sqlite3.connect(path)
+    con.execute("CREATE TABLE vm (vmId INT, tenantId INT, vmTypeId INT,"
+                " starttime REAL, endtime REAL)")
+    con.execute("CREATE TABLE vmType (vmTypeId INT, core REAL,"
+                " memory REAL)")
+    con.executemany("INSERT INTO vm VALUES (?,?,?,?,?)", _VMS)
+    con.executemany("INSERT INTO vmType VALUES (?,?,?)", _TYPES)
+    con.commit()
+    con.close()
+    return str(path)
+
+
+def test_convert_schema_scaling_and_clamping(sqlite_fixture, tmp_path):
+    out = str(tmp_path / "trace.csv")
+    n = fetch_azure_trace.convert(sqlite_fixture, out, days=3.0,
+                                  machine_cores=64, machine_gb=384,
+                                  quiet=True)
+    # rows 4 (zero lifetime) and 7 (past the window) are dropped
+    assert n == 5
+    vms = traces.load_trace_file(out)
+    assert len(vms) == 5
+    by_id = {vm.vm_id: vm for vm in vms}
+    assert sorted(by_id) == [1, 2, 3, 5, 6]
+    # negative start clamps to 0; lifetime measured from the clamp
+    assert by_id[1].arrival == 0.0
+    assert by_id[1].lifetime == pytest.approx(1.0 * 86400, abs=0.01)
+    # NULL endtime departs at the --days horizon
+    assert by_id[3].lifetime == pytest.approx(2.5 * 86400, abs=0.01)
+    # endtime past the horizon clamps to it
+    assert by_id[5].lifetime == pytest.approx(1.0 * 86400, abs=0.01)
+    # normalized shapes scale by the machine and take the per-type MAX
+    assert (by_id[1].cores, by_id[1].mem_gb) == (8, 96.0)
+    assert (by_id[3].cores, by_id[3].mem_gb) == (32, 192.0)
+    assert by_id[6].cores >= 1 and by_id[6].mem_gb >= 1.0  # floor >= 1
+    # integral GBs: the replay engine's int sweeps rely on this
+    assert all(float(vm.mem_gb).is_integer() for vm in vms)
+    # arrival-sorted (the iter_trace_chunks contract)
+    arr = [vm.arrival for vm in vms]
+    assert arr == sorted(arr)
+    # tenants map to the customer column
+    assert by_id[1].customer == by_id[2].customer
+    assert by_id[1].customer != by_id[3].customer
+
+
+def test_convert_max_vms_smoke_subset_and_gz(sqlite_fixture, tmp_path):
+    out = str(tmp_path / "trace.csv.gz")
+    n = fetch_azure_trace.convert(sqlite_fixture, out, days=3.0,
+                                  max_vms=2, quiet=True)
+    assert n == 2
+    vms = traces.load_trace_file(out)          # gz round-trips
+    assert [vm.vm_id for vm in vms] == [1, 2]  # start-sorted prefix
+    # the smoke subset streams through the chunked reader unchanged
+    chunks = list(traces.iter_trace_chunks(out, chunk_vms=1))
+    assert [vm.vm_id for ch in chunks for vm in ch] == [1, 2]
+
+
+def test_convert_without_days_uses_max_endtime(sqlite_fixture, tmp_path):
+    out = str(tmp_path / "trace.csv")
+    n = fetch_azure_trace.convert(sqlite_fixture, out, quiet=True)
+    # horizon = latest endtime (9.0 days): row 7 now fits, row 4 stays
+    # dropped (zero lifetime), and every lifetime is finite + positive
+    assert n == 6
+    vms = traces.load_trace_file(out)
+    assert all(np.isfinite(vm.lifetime) and vm.lifetime > 0
+               for vm in vms)
+    by_id = {vm.vm_id: vm for vm in vms}
+    assert by_id[5].lifetime == pytest.approx(7.0 * 86400, abs=0.01)
+
+
+def test_cli_main_converts_existing_sqlite(sqlite_fixture, tmp_path):
+    out = str(tmp_path / "cli.csv")
+    fetch_azure_trace.main(["--sqlite", sqlite_fixture, "--out", out,
+                            "--days", "3", "--max-vms", "3", "--quiet"])
+    assert len(traces.load_trace_file(out)) == 3

@@ -1,0 +1,254 @@
+"""Compiled policy engine vs the scalar ControlPlane walk: bit-exact
+decisions (local/pool/fully/t_migrate), misprediction accounting,
+control-plane state mutation, the segment-op history percentiles, the
+(tau, pdm, li-threshold) grid axis, and native SoA compilation in the
+replay engine."""
+import numpy as np
+import pytest
+
+from repro.core import cluster_sim, policy_engine, replay_engine, traces
+from repro.core.control_plane import ControlPlane, ControlPlaneConfig
+from repro.core.pool_manager import PoolManager
+from repro.core.predictors.models import (LatencySensitivityModel,
+                                          UntouchedMemoryModel)
+
+HORIZON = 5 * 86400
+
+
+@pytest.fixture(scope="module")
+def world():
+    pop = traces.Population(seed=0)
+    train = pop.sample_vms(600, HORIZON, seed=1)
+    li = LatencySensitivityModel(pdm=0.05).fit(
+        traces.pmu_matrix(train), traces.slowdowns(train, 182))
+    hist = traces.build_history(train)
+    meta = traces.metadata_features(train, hist)
+    ut = np.array([v.untouched for v in train])
+    um = UntouchedMemoryModel(0.05).fit(meta, ut)
+    return pop, li, um, hist, meta, ut
+
+
+def _cp(li, um, hist, th=0.05):
+    return ControlPlane(ControlPlaneConfig(li_threshold=th), li, um,
+                        PoolManager(pool_gb=4096, buffer_gb=64),
+                        history=dict(hist))
+
+
+def _tuples_scalar(decisions):
+    return [(d.local_gb, d.pool_gb, d.fully_pooled, d.t_migrate)
+            for d in decisions]
+
+
+def _tuples_soa(dec: policy_engine.PolicyDecisions):
+    return [(float(l), float(p), bool(f),
+             None if np.isnan(t) else float(t))
+            for l, p, f, t in zip(dec.local_gb, dec.pool_gb,
+                                  dec.fully_pooled, dec.t_migrate)]
+
+
+# ------------------------------------------------- history percentiles ----
+def test_prefix_percentiles_match_np_percentile():
+    """The sorted-segment prefix percentiles replicate np.percentile
+    (numpy's linear lerp incl. the gamma >= 0.5 branch) for every
+    prefix of every customer's history, seeds included."""
+    rng = np.random.default_rng(0)
+    n = 400
+    customers = rng.integers(0, 12, n)
+    untouched = rng.random(n)
+    history = {c: rng.random(rng.integers(0, 7)).tolist()
+               for c in range(0, 12, 2)}       # some seeded, some not
+    n_hist, percs = policy_engine._prefix_percentiles(
+        customers, untouched, history)
+    walk: dict[int, list] = {c: list(v) for c, v in history.items()}
+    for i in range(n):
+        c = int(customers[i])
+        h = walk.setdefault(c, [])
+        assert n_hist[i] == len(h)
+        if len(h) < 3:
+            assert percs[i].tolist() == [0.5] * 4
+        else:
+            ref = np.percentile(h, [80, 90, 95, 99])
+            assert percs[i].tolist() == ref.tolist()
+        h.append(float(untouched[i]))
+
+
+def test_metadata_features_compiled_bitwise(world):
+    pop, li, um, hist, *_ = world
+    vms = pop.sample_vms(300, HORIZON, seed=4, start_id=10 ** 6)
+    table = traces.vm_table(vms)
+    # replay the scalar walk's growing history to build the reference
+    cp = _cp(li, um, hist)
+    rows = []
+    for vm in vms:
+        rows.append(traces.metadata_features([vm], cp.history)[0])
+        cp.record_untouched(vm.customer, vm.untouched)
+    _, percs = policy_engine._prefix_percentiles(
+        table.customer, table.untouched, dict(hist))
+    feat = policy_engine.metadata_features_compiled(table, percs)
+    assert feat.dtype == np.float32
+    assert np.array_equal(feat, np.stack(rows))
+
+
+# ---------------------------------------------------- pipeline parity -----
+@pytest.mark.parametrize("policy", ["local", "static", "pond"])
+def test_compiled_bit_exact_vs_scalar_on_seeds(world, policy):
+    """Acceptance: decision-for-decision equality (incl. t_migrate),
+    misprediction rate, and identical control-plane end state across
+    >=3 synthetic seeds for both replayable policies (+ local)."""
+    pop, li, um, hist, *_ = world
+    for seed in (2, 7, 11):
+        vms = pop.sample_vms(700, HORIZON, seed=seed, start_id=10 ** 6)
+        cpa = _cp(li, um, hist) if policy == "pond" else None
+        cpb = _cp(li, um, hist) if policy == "pond" else None
+        ds, ms = cluster_sim.policy_decisions(vms, policy, cpa,
+                                              engine="scalar")
+        dc, mc = cluster_sim.policy_decisions(vms, policy, cpb,
+                                              as_arrays=True)
+        assert _tuples_scalar(ds) == _tuples_soa(dc)
+        assert ms == mc == dc.mispredictions
+        if policy == "pond":
+            assert any(np.isfinite(dc.t_migrate))    # migrations exist
+            assert dc.fully_pooled.any()             # LI shortcut fires
+            assert set(cpa.history) == set(cpb.history)
+            for c in cpa.history:
+                assert list(cpa.history[c]) == list(cpb.history[c])
+            assert [(m.vm_id, m.at, m.pool_gb) for m in
+                    cpa.mitigation.log] == \
+                [(m.vm_id, m.at, m.pool_gb) for m in cpb.mitigation.log]
+            assert cpa.monitor.checks == cpb.monitor.checks
+            assert dc.n_mitigations == len(cpb.mitigation.log)
+
+
+def test_compiled_bit_exact_on_fixture(world):
+    pop, li, um, hist, *_ = world
+    vms = traces.load_trace_file(traces.fixture_trace_path())
+    for policy in ("static", "pond"):
+        cpa = _cp(li, um, hist) if policy == "pond" else None
+        cpb = _cp(li, um, hist) if policy == "pond" else None
+        ds, ms = cluster_sim.policy_decisions(vms, policy, cpa,
+                                              engine="scalar")
+        dc, mc = cluster_sim.policy_decisions(vms, policy, cpb,
+                                              as_arrays=True)
+        assert _tuples_scalar(ds) == _tuples_soa(dc)
+        assert ms == mc
+
+
+def test_compiled_without_models_matches_scalar(world):
+    """pond with li/um model gaps (None) keeps the scalar semantics:
+    no LI shortcut without a model, all-sensitive monitor, zero pool
+    without a UM model."""
+    pop, li, um, hist, *_ = world
+    vms = pop.sample_vms(200, HORIZON, seed=5, start_id=10 ** 6)
+    for li_m, um_m in ((None, um), (li, None), (None, None)):
+        cpa = _cp(li_m, um_m, hist)
+        cpb = _cp(li_m, um_m, hist)
+        ds, ms = cluster_sim.policy_decisions(vms, "pond", cpa,
+                                              engine="scalar")
+        dc, mc = cluster_sim.policy_decisions(vms, "pond", cpb,
+                                              as_arrays=True)
+        assert _tuples_scalar(ds) == _tuples_soa(dc)
+        assert ms == mc
+
+
+# ------------------------------------------------------------ grid axis ---
+def test_grid_decisions_match_scalar_per_setting(world):
+    """Every (tau, pdm, li-threshold) grid row equals a fresh scalar
+    ControlPlane configured with that setting (numpy backend)."""
+    pop, li, um, hist, meta, ut = world
+    vms = pop.sample_vms(400, HORIZON, seed=6, start_id=10 ** 6)
+    taus = (0.05, 0.3)
+    um_models = policy_engine.fit_um_grid(meta, ut, taus)
+    settings = policy_engine.make_grid(
+        taus=taus, pdms=(0.02, 0.05), li_thresholds=(0.05,))
+    assert len(settings) == 4
+    grid = policy_engine.grid_decisions(
+        [vms], settings, li, um_models, hist, backend="numpy")
+    for s, row in zip(settings, grid):
+        cp = _cp(li, um_models[s.tau], hist, th=s.li_threshold)
+        ds, ms = cluster_sim.policy_decisions(
+            vms, "pond", cp, pdm=s.pdm, engine="scalar")
+        assert _tuples_scalar(ds) == _tuples_soa(row[0]), s.label
+        assert ms == row[0].mispredictions
+
+
+def test_grid_jax_backend_matches_numpy(world):
+    pytest.importorskip("jax")
+    pop, li, um, hist, meta, ut = world
+    vms = pop.sample_vms(300, HORIZON, seed=8, start_id=10 ** 6)
+    taus = (0.05, 0.2)
+    um_models = policy_engine.fit_um_grid(meta, ut, taus)
+    settings = policy_engine.make_grid(taus=taus,
+                                       li_thresholds=(0.05, 0.5))
+    g_np = policy_engine.grid_decisions([vms], settings, li, um_models,
+                                        hist, backend="numpy")
+    g_jx = policy_engine.grid_decisions([vms], settings, li, um_models,
+                                        hist, backend="jax")
+    for a, b in zip(g_np, g_jx):
+        # GB-floored decisions absorb float32-order differences
+        assert a[0].pool_gb.tolist() == b[0].pool_gb.tolist()
+        assert a[0].fully_pooled.tolist() == b[0].fully_pooled.tolist()
+
+
+def test_grid_fp_targets_resolve_thresholds(world):
+    pop, li, um, hist, meta, ut = world
+    vms = pop.sample_vms(200, HORIZON, seed=9, start_id=10 ** 6)
+    pmu = traces.pmu_matrix(vms)
+    slows = traces.slowdowns(vms, 182)
+    settings = policy_engine.make_grid(
+        taus=(0.05,), fp_targets=(0.005, 0.05), li_model=li, pmu=pmu,
+        slowdowns=slows)
+    assert [s.fp_target for s in settings] == [0.005, 0.05]
+    # a looser FP budget admits at least as large a threshold
+    assert settings[1].li_threshold >= settings[0].li_threshold
+    with pytest.raises(ValueError, match="fp_targets"):
+        policy_engine.make_grid(taus=(0.05,), fp_targets=(0.01,))
+
+
+# -------------------------------------------- SoA -> replay integration ---
+def test_soa_decisions_compile_natively(world):
+    """PolicyDecisions feeds CompiledReplay/Stream directly and prices
+    bit-identically to the materialized VMDecision list."""
+    pop, li, um, hist, *_ = world
+    cfg = cluster_sim.ClusterConfig(n_servers=8, pool_sockets=8,
+                                    gb_per_core=4.75)
+    vms = pop.sample_vms(600, HORIZON, seed=2, start_id=10 ** 6)
+    dec, _ = cluster_sim.policy_decisions(vms, "pond",
+                                          _cp(li, um, hist),
+                                          as_arrays=True)
+    assert isinstance(dec, policy_engine.PolicyDecisions)
+    assert dec.n_migrations > 0
+    server = np.array([768.0, 160.0, 60.0])
+    pool = np.array([4096.0, 128.0, 0.0])
+    r_soa = replay_engine.CompiledReplay(vms, dec, cfg).reject_rates(
+        server, pool)
+    r_list = replay_engine.CompiledReplay(
+        vms, dec.as_vmdecisions(), cfg).reject_rates(server, pool)
+    assert r_soa.tolist() == r_list.tolist()
+    stream = replay_engine.CompiledReplayStream(
+        vms, dec, cfg, max_events_per_shard=256)
+    assert stream.n_shards > 1
+    assert stream.reject_rates(server, pool).tolist() == r_soa.tolist()
+
+
+def test_savings_analysis_accepts_precomputed_decisions(world):
+    pop, li, um, hist, *_ = world
+    cfg = cluster_sim.ClusterConfig(n_servers=8, pool_sockets=8,
+                                    gb_per_core=4.75)
+    vms = pop.sample_vms(500, HORIZON, seed=3, start_id=10 ** 6)
+    ref = cluster_sim.savings_analysis(vms, cfg, "static",
+                                       static_pool_frac=0.2)
+    dec, _ = cluster_sim.policy_decisions(vms, "static",
+                                          static_pool_frac=0.2,
+                                          as_arrays=True)
+    inj = cluster_sim.savings_analysis(vms, cfg, "static",
+                                       decisions=dec)
+    assert (inj.server_gb, inj.pool_group_gb, inj.baseline_server_gb,
+            inj.mispredictions) == \
+        (ref.server_gb, ref.pool_group_gb, ref.baseline_server_gb,
+         ref.mispredictions)
+    # batched injection with a repeated trace shares the baseline
+    rows = cluster_sim.savings_analysis_batched(
+        [vms, vms], cfg, "static", decisions=[dec, dec])
+    assert [r.server_gb for r in rows] == [ref.server_gb] * 2
+    assert [r.baseline_server_gb for r in rows] == \
+        [ref.baseline_server_gb] * 2

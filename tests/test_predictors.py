@@ -46,6 +46,67 @@ def test_gbm_quantile_coverage(tau):
     assert abs(cov - tau) < 0.12, (cov, tau)
 
 
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_forest_jax_matches_numpy_across_seeds(seed):
+    """JAX packed-forest inference tracks the numpy ensemble (float32
+    rounding tolerance) for several independently fitted forests."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(250, 8)).astype(np.float32)
+    y = (x[:, seed % 8] + rng.normal(0, 0.4, 250) > 0).astype(np.float32)
+    f = fit_forest(x, y, n_trees=15, seed=seed)
+    jp = np.asarray(f.predict_proba_jax(x))
+    np.testing.assert_allclose(jp, f.predict_proba(x), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_forest_batch_bitwise_matches_per_row(seed):
+    """predict_proba_batch row i == predict_proba(x[i:i+1])[0] BITWISE —
+    the transposed pairwise reduction the compiled policy engine's
+    one-call scoring relies on (a plain axis-0 mean over the batch can
+    differ in the last float32 ulp)."""
+    rng = np.random.default_rng(100 + seed)
+    x = rng.normal(size=(257, 8)).astype(np.float32)
+    y = (x[:, 0] * x[:, 1] > 0).astype(np.float32)
+    f = fit_forest(x, y, n_trees=40, seed=seed)
+    batch = f.predict_proba_batch(x)
+    rows = np.array([f.predict_proba(x[i:i + 1])[0]
+                     for i in range(len(x))])
+    assert batch.tolist() == rows.tolist()
+
+
+@pytest.mark.parametrize("seed,tau", [(0, 0.05), (1, 0.2), (2, 0.5)])
+def test_gbm_batched_inference_matches_scalar(seed, tau):
+    """Batched GBM quantile inference == per-row scalar predictions
+    bitwise (stage-sequential float32 accumulation is elementwise), and
+    the packed JAX path tracks it to ensemble rounding."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(300, 5)).astype(np.float32)
+    y = (x[:, 0] * 0.5 + rng.normal(0, 0.3, 300)).astype(np.float32)
+    g = fit_gbm(x, y, tau=tau, n_stages=30, seed=seed)
+    batch = g.predict(x)
+    rows = np.array([g.predict(x[i:i + 1])[0] for i in range(len(x))])
+    assert batch.tolist() == rows.tolist()
+    jp = np.asarray(g.predict_jax(x))
+    np.testing.assert_allclose(jp, batch, rtol=1e-4, atol=2e-5)
+
+
+def test_packed_gbm_grid_matches_per_model():
+    """pack_gbms + predict_gbms_jax (the vmapped tau-grid path) matches
+    each model's own JAX inference, stage-count padding included."""
+    from repro.core.predictors.gbm import pack_gbms, predict_gbms_jax
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(200, 4)).astype(np.float32)
+    y = (x[:, 0] + rng.normal(0, 0.2, 200)).astype(np.float32)
+    models = [fit_gbm(x, y, tau=t, n_stages=s)
+              for t, s in ((0.05, 10), (0.2, 25), (0.5, 17))]
+    grid = np.asarray(predict_gbms_jax(pack_gbms(models), x))
+    assert grid.shape == (3, 200)
+    for i, m in enumerate(models):
+        np.testing.assert_allclose(grid[i], np.asarray(m.predict_jax(x)),
+                                   rtol=1e-5, atol=1e-5)
+
+
 def test_forest_beats_single_counter_heuristic():
     pop = traces.Population(seed=0)
     train = pop.sample_vms(1500, 86400 * 10, seed=1)

@@ -181,20 +181,37 @@ def test_int16_matches_int32_near_boundary():
         np.floor(server), np.floor(pool + 1.0)) == "int32"
     assert eng._pick_state_dtype(
         np.array([-1.0]), np.array([0.0])) == "int32"
-    # MIGRATE events force int32: the oracle's fallback-migrate quirk
-    # can drive the used-pool carry negative without bound, which no
-    # capacity check can clear for int16
+    # MIGRATE-bearing traces pack to int16 too: the oracle's
+    # fallback-migrate quirk can only drive the used-pool carry
+    # negative by the compiled migrate-event pool total, so bounding
+    # that sum (plus payload headroom) within the int16 safety margin
+    # keeps the packing bit-equivalent
     mig_dec = [cluster_sim.VMDecision(d.local_gb, d.pool_gb,
                                       d.fully_pooled, vms[i].arrival + 1.)
                for i, d in enumerate(dec)]
     eng_mig = replay_engine.CompiledReplay(vms, mig_dec, CFG)
     assert eng_mig._has_migrate
+    assert eng_mig._mig_pool_sum + eng_mig._pay_pool_max <= safe
     assert eng_mig._pick_state_dtype(np.floor(server),
-                                     np.floor(pool)) == "int32"
+                                     np.floor(pool)) == "int16"
+    # pool=0 lane: every placement falls back all-local, then every
+    # migrate returns un-consumed pool — the deficit path int16 must
+    # survive (carry goes negative by up to _mig_pool_sum)
+    m16 = eng_mig.reject_rates(server, pool, backend="jax",
+                               state_dtype="int16")
+    m32 = eng_mig.reject_rates(server, pool, backend="jax",
+                               state_dtype="int32")
+    mig_oracle = [cluster_sim.replay_reject_rate(vms, mig_dec, CFG, s, p)
+                  for s, p in zip(server, pool)]
+    assert m16.tolist() == m32.tolist() == mig_oracle
     st_mig = replay_engine.CompiledReplayStream(
         vms, mig_dec, CFG, max_events_per_shard=512)
-    assert st_mig._has_migrate and st_mig._pick_state_dtype(
-        np.floor(server), np.floor(pool)) == "int32"
+    assert st_mig._has_migrate
+    assert st_mig._mig_pool_sum == eng_mig._mig_pool_sum
+    assert st_mig._pick_state_dtype(np.floor(server),
+                                    np.floor(pool)) == "int16"
+    assert st_mig.reject_rates(server, pool, backend="jax",
+                               state_dtype="int16").tolist() == mig_oracle
     # the stream shares the same rules
     stream = replay_engine.CompiledReplayStream(
         vms, dec, CFG, max_events_per_shard=256)
@@ -205,6 +222,64 @@ def test_int16_matches_int32_near_boundary():
     s32 = stream.reject_rates(server, pool, backend="jax",
                               state_dtype="int32")
     assert s16.tolist() == s32.tolist() == oracle
+
+
+def test_int16_migrate_pool_deficit_boundary():
+    """The migrate-event pool total is the exact int16 gate: one VM
+    past the deficit bound flips the automatic pick back to int32, and
+    AT the bound the int16 replay (negative used-pool carry included)
+    stays bit-equivalent to int32 and the scalar oracle."""
+    safe = replay_engine._I16_SAFE
+    pmu = np.zeros(traces.N_PMU_FEATURES, np.float32)
+
+    def build(n_vms, pool_gb=750.0, mem_gb=800.0):
+        vms = [traces.VM(i, 0, 0, 0, 0, 2, mem_gb, float(10 * i), 5.0,
+                         0.5, 0.0, 0.0, pmu) for i in range(n_vms)]
+        dec = [cluster_sim.VMDecision(mem_gb - pool_gb, pool_gb, False,
+                                      vms[i].arrival + 1.0)
+               for i in range(n_vms)]
+        return vms, dec
+
+    cfg = cluster_sim.ClusterConfig(n_servers=4, pool_sockets=8)
+    server = np.array([900.0, 900.0])
+    pool = np.array([800.0, 0.0])       # 0-pool lane: deficit path
+    vms, dec = build(39)                # 39 * 750 + 750 == safe: eligible
+    eng = replay_engine.CompiledReplay(vms, dec, cfg)
+    assert eng._mig_pool_sum + eng._pay_pool_max == safe
+    assert eng._pick_state_dtype(np.floor(server),
+                                 np.floor(pool)) == "int16"
+    i16 = eng.reject_rates(server, pool, backend="jax",
+                           state_dtype="int16")
+    i32 = eng.reject_rates(server, pool, backend="jax",
+                           state_dtype="int32")
+    oracle = [cluster_sim.replay_reject_rate(vms, dec, cfg, s, p)
+              for s, p in zip(server, pool)]
+    assert i16.tolist() == i32.tolist() == oracle
+    stream = replay_engine.CompiledReplayStream(
+        vms, dec, cfg, max_events_per_shard=256)
+    assert stream._pick_state_dtype(np.floor(server),
+                                    np.floor(pool)) == "int16"
+    assert stream.reject_rates(server, pool, backend="jax",
+                               state_dtype="int16").tolist() == oracle
+    # one more migrating VM crosses the bound -> automatic int32
+    vms40, dec40 = build(40)
+    eng40 = replay_engine.CompiledReplay(vms40, dec40, cfg)
+    assert eng40._mig_pool_sum + eng40._pay_pool_max > safe
+    assert eng40._pick_state_dtype(np.floor(server),
+                                   np.floor(pool)) == "int32"
+    st40 = replay_engine.CompiledReplayStream(
+        vms40, dec40, cfg, max_events_per_shard=256)
+    assert st40._pick_state_dtype(np.floor(server),
+                                  np.floor(pool)) == "int32"
+    # out-of-window migrates are dropped at compile: they neither
+    # count toward the bound nor flip the pick
+    drop = [cluster_sim.VMDecision(d.local_gb, d.pool_gb, d.fully_pooled,
+                                   vms40[i].departure + 1.0)
+            for i, d in enumerate(dec40)]
+    eng_drop = replay_engine.CompiledReplay(vms40, drop, cfg)
+    assert not eng_drop._has_migrate and eng_drop._mig_pool_sum == 0.0
+    assert eng_drop._pick_state_dtype(np.floor(server),
+                                      np.floor(pool)) == "int16"
 
 
 # --------------------------------------------------- search integration ---
