@@ -121,6 +121,34 @@ def replay_table(path: str = "experiments/BENCH_replay.json") -> str:
                   f"{r.get('streaming_events_per_sec', '—')} | "
                   f"{r.get('streaming_overhead_vs_monolithic', '—')}x | "
                   f"{'yes' if r.get('streaming_bit_exact') else 'NO'} |"]
+    if r.get("stream_batch_k"):
+        peak = r.get("stream_batch_peak_shard_bytes") or 0
+        lines += ["", "### Streaming trace batch (K streams, one "
+                  "vmapped carry sweep per shard)", "",
+                  "| K seeds | shards | shard budget | peak stacked "
+                  "tensor | speedup vs stream loop | cand-events/s | "
+                  "bit-exact |",
+                  "|---|---|---|---|---|---|---|",
+                  f"| {r['stream_batch_k']} | "
+                  f"{r.get('stream_batch_n_shards', '—')} | "
+                  f"{r.get('stream_batch_max_events_per_shard', '—')} | "
+                  f"{peak / 2 ** 10:.0f} KiB | "
+                  f"{r.get('stream_batch_speedup_vs_stream_loop', '—')}x"
+                  f" | {r.get('stream_batch_events_per_sec', '—')} | "
+                  f"{'yes' if r.get('stream_batch_bit_exact') else 'NO'}"
+                  " |"]
+        if r.get("stream_batch_e2e_n_vms"):
+            e2e_peak = r.get("stream_batch_e2e_peak_shard_bytes") or 0
+            lines += ["", "### Azure-dump end to end (chunked ingest + "
+                      "streaming replay, `benchmarks/azure_e2e.py`)", "",
+                      "| dump VMs | ingest VMs/s | sweep cand-events/s | "
+                      "e2e VMs/s | peak shard tensor |",
+                      "|---|---|---|---|---|",
+                      f"| {r['stream_batch_e2e_n_vms']} | "
+                      f"{r.get('stream_batch_e2e_ingest_vms_per_sec', '—')}"
+                      f" | {r.get('stream_batch_e2e_events_per_sec', '—')}"
+                      f" | {r.get('stream_batch_e2e_vms_per_sec', '—')} | "
+                      f"{e2e_peak / 2 ** 10:.0f} KiB |"]
     return "\n".join(lines)
 
 

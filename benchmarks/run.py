@@ -18,6 +18,7 @@ import time
 import traceback
 
 MODULES = [
+    "benchmarks.azure_e2e",
     "benchmarks.fig2_stranding",
     "benchmarks.fig3_poolsize",
     "benchmarks.fig4_sensitivity",
@@ -50,11 +51,19 @@ def perf_smoke():
     on a >=100k-VM trace (VMs/s, speedup vs the scalar control-plane
     walk, bit-exactness on the timed subset) — plus the (tau x fp)
     grid-sweep benchmark behind ``benchmarks/fig17_sensitivity.py``.
+
+    Since the unified sweep core it additionally records the
+    ``stream_batch_*`` keys from ``benchmarks/azure_e2e.py``: the
+    K-seed batched streaming sweep (``CompiledReplayStreamBatch``) vs
+    looping the streaming engine per seed at the same shard budget,
+    and the end-to-end chunked-dump replay (ingest VMs/s,
+    candidate-events/s, peak shard bytes).
     """
-    from benchmarks import fig3_poolsize, fig17_sensitivity
+    from benchmarks import azure_e2e, fig3_poolsize, fig17_sensitivity
     t0 = time.time()
     res = fig3_poolsize.run(quick=True)
     wall = time.time() - t0          # fig3-only: comparable across PRs
+    e2e_res = azure_e2e.run(quick=True)
     t1 = time.time()
     policy = fig17_sensitivity.policy_decision_bench()
     print(f"  policy decisions: {policy['n_vms']} VMs in "
@@ -66,6 +75,8 @@ def perf_smoke():
     batched = res.get("batched", {})
     narrow = batched.get("narrow2", {})
     streaming = res.get("streaming", {})
+    sb = e2e_res.get("stream_batch", {})
+    e2e = e2e_res.get("e2e", {})
     bench = {
         "benchmark": "fig3_poolsize.quick",
         "wall_s": round(wall, 3),
@@ -91,6 +102,22 @@ def perf_smoke():
         "streaming_overhead_vs_monolithic":
             streaming.get("overhead_vs_monolithic"),
         "streaming_bit_exact": streaming.get("bit_exact"),
+        "stream_batch_k": sb.get("k"),
+        "stream_batch_n_shards": sb.get("n_shards"),
+        "stream_batch_max_events_per_shard":
+            sb.get("max_events_per_shard"),
+        "stream_batch_peak_shard_bytes": sb.get("peak_shard_bytes"),
+        "stream_batch_speedup_vs_stream_loop": sb.get("speedup"),
+        "stream_batch_events_per_sec": sb.get("events_per_sec"),
+        "stream_batch_bit_exact": sb.get("bit_exact"),
+        "stream_batch_e2e_n_vms": e2e.get("n_vms"),
+        "stream_batch_e2e_ingest_vms_per_sec":
+            e2e.get("ingest_vms_per_sec"),
+        "stream_batch_e2e_events_per_sec": e2e.get("events_per_sec"),
+        "stream_batch_e2e_vms_per_sec": e2e.get("vms_per_sec"),
+        "stream_batch_e2e_peak_shard_bytes": e2e.get("peak_shard_bytes"),
+        "stream_batch_claims_pass": all(
+            c["ok"] for c in e2e_res.get("claims", [])),
         "policy_bench_wall_s": round(policy_wall, 3),
         "policy_n_vms": policy.get("n_vms"),
         "policy_vms_per_sec": policy.get("vms_per_sec"),
@@ -111,8 +138,10 @@ def perf_smoke():
           f"{bench['events_per_sec']} candidate-events/s, batched K="
           f"{bench['batched_k']} {bench['batched_speedup_vs_seed_loop']}x"
           f" vs seed loop, streaming {bench['streaming_n_shards']} "
-          f"shards {bench['streaming_events_per_sec']} ev/s, policy "
-          f"{bench['policy_vms_per_sec']} VMs/s "
+          f"shards {bench['streaming_events_per_sec']} ev/s, stream "
+          f"batch K={bench['stream_batch_k']} "
+          f"{bench['stream_batch_speedup_vs_stream_loop']}x vs stream "
+          f"loop, policy {bench['policy_vms_per_sec']} VMs/s "
           f"({bench['policy_speedup_vs_scalar']}x) "
           f"-> experiments/BENCH_replay.json")
     return bench

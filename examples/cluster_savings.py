@@ -20,6 +20,11 @@ report mean ± spread savings across the seed batch.
       # parse memory and a fixed event-tensor budget; fetch a real
       # trace with scripts/fetch_azure_trace.py
   PYTHONPATH=src python examples/cluster_savings.py \\
+      --seeds 4 --max-events-per-shard 4096
+      # batched STREAMING: the K seed traces replay as a
+      # CompiledReplayStreamBatch — one vmapped carry sweep per shard,
+      # and the savings searches below run in lockstep on it
+  PYTHONPATH=src python examples/cluster_savings.py \\
       --policy-grid "tau=0.02:0.2:3,li=0.05:0.5:2"
       # ONE grid evaluation (compiled policy engine) prices every
       # (tau, pdm, li-threshold) setting against the seed batch and
@@ -204,11 +209,24 @@ def main(argv=None):
 
     # --- 2. multi-trace batch: K seeds in ONE vmapped sweep ------------
     if len(vms_list) > 1:
-        engines = [replay_engine.CompiledReplay(
-            v, cluster_sim.policy_decisions(v, "static",
-                                            static_pool_frac=0.15)[0],
-            cfg) for v in vms_list]
-        batch = replay_engine.CompiledReplayBatch(engines)
+        decs = [cluster_sim.policy_decisions(v, "static",
+                                             static_pool_frac=0.15)[0]
+                for v in vms_list]
+        if budget is not None:
+            # batched STREAMING: K bounded-memory streams, one vmapped
+            # carry sweep per shard (peak tensor = one stacked shard)
+            batch = replay_engine.CompiledReplayStreamBatch(
+                [replay_engine.CompiledReplayStream(
+                    v, d, cfg, max_events_per_shard=budget)
+                 for v, d in zip(vms_list, decs)])
+            print(f"\nstream batch: {batch.k} traces x "
+                  f"{batch.n_shards} shards of <= {budget} events "
+                  f"({batch.peak_shard_bytes / 2 ** 20:.1f} MiB peak "
+                  f"stacked tensor)")
+        else:
+            batch = replay_engine.CompiledReplayBatch(
+                [replay_engine.CompiledReplay(v, d, cfg)
+                 for v, d in zip(vms_list, decs)])
         batch.reject_rates(server_gb, pool_gb)  # warm
         t0 = time.perf_counter()
         br = batch.reject_rates(server_gb, pool_gb)

@@ -553,12 +553,14 @@ def savings_analysis_batched(vms_list, cfg: ClusterConfig, policy: str,
     across policies of the SAME trace list (like ``savings_analysis``).
 
     ``max_events_per_shard``: when set and any trace's event count
-    (bounded above by 3 per VM) may exceed the budget, each trace is
-    priced sequentially on a
-    bounded-memory ``CompiledReplayStream`` via ``savings_analysis``
-    (lockstep vmapped batching needs the whole padded event tensor in
-    memory, which is exactly what the budget rules out); per-trace
-    sub-caches still share the all-local baseline across policies.
+    (2 per VM + 1 per QoS migration) exceeds the budget, the whole
+    batch compiles to bounded-memory ``CompiledReplayStream`` engines
+    stacked in a ``replay_engine.CompiledReplayStreamBatch`` — the
+    SAME lockstep searches then run one vmapped sweep per shard with
+    the K placement states threaded shard-to-shard, so peak
+    event-tensor memory stays one stacked shard batch while every
+    search probe (and hence the provisioning result) stays bit-exact
+    vs the monolithic batched path.
 
     ``decisions``: precomputed per-trace
     ``policy_engine.PolicyDecisions`` aligned with ``vms_list`` (e.g. a
@@ -580,23 +582,6 @@ def savings_analysis_batched(vms_list, cfg: ClusterConfig, policy: str,
         else [None] * k
     if decisions is not None and len(decisions) != k:
         raise ValueError(f"decisions must align with the {k} traces")
-    # conservative 3 events/VM bound (decisions — and thus the exact
-    # MIGRATE count — may not be computed yet here; the per-trace calls
-    # below re-check with exact counts and may still run monolithic)
-    if max_events_per_shard is not None and any(
-            3 * len(v) > max_events_per_shard for v in vms_list):
-        out = []
-        for i, (vms, cp) in enumerate(zip(vms_list, cps)):
-            sub = cache.setdefault(("stream", i), {}) \
-                if cache is not None else None
-            out.append(savings_analysis(
-                vms, cfg, policy, control_plane=cp,
-                static_pool_frac=static_pool_frac, latency=latency,
-                pdm=pdm, spill_harm_prob=spill_harm_prob,
-                reject_tol=reject_tol, cache=sub,
-                max_events_per_shard=max_events_per_shard,
-                decisions=None if decisions is None else decisions[i]))
-        return out
     if decisions is not None:
         dec_list = list(decisions)
         mispred = [d.mispredictions for d in dec_list]
@@ -613,12 +598,41 @@ def savings_analysis_batched(vms_list, cfg: ClusterConfig, policy: str,
     big_pool = hi_server * cfg.n_servers
     hi_vec = np.full(k, hi_server)
 
-    batch = replay_engine.CompiledReplayBatch(
-        [replay_engine.CompiledReplay(v, d, cfg)
-         for v, d in zip(vms_list, dec_list)])
+    # exact event counts (2 per VM + 1 per QoS migration): past the
+    # budget the WHOLE batch compiles to bounded-memory streams stacked
+    # in a CompiledReplayStreamBatch — the lockstep searches below run
+    # unchanged on it, one vmapped sweep per shard, batched carry
+    # threaded shard-to-shard (probes bit-exact vs the monolithic batch)
+    def _n_events(vms_, dec_):
+        return 2 * len(vms_) + (
+            dec_.n_migrations if hasattr(dec_, "n_migrations")
+            else sum(1 for d in dec_ if d.t_migrate is not None))
+
+    streaming = max_events_per_shard is not None and any(
+        _n_events(v, d) > max_events_per_shard
+        for v, d in zip(vms_list, dec_list))
+
+    def _compile_engine(vms_, dec_):
+        if streaming:
+            return replay_engine.CompiledReplayStream(
+                vms_, dec_, cfg,
+                max_events_per_shard=max_events_per_shard)
+        return replay_engine.CompiledReplay(vms_, dec_, cfg)
+
+    def _wrap_batch(engines):
+        return (replay_engine.CompiledReplayStreamBatch(engines)
+                if streaming
+                else replay_engine.CompiledReplayBatch(engines))
+
+    batch = _wrap_batch([_compile_engine(v, d)
+                         for v, d in zip(vms_list, dec_list)])
     # cores-bound reject floor per trace; tolerance is on top of it
     r0 = batch.reject_rates(hi_server, big_pool)[:, 0]
     tol = r0 + reject_tol
+    # shared early-exit reject budget for the streaming sweeps: a lane
+    # exceeding max_i floor(tol_i * n_i) is infeasible for EVERY trace,
+    # so capped lower bounds still answer each row's feasibility test
+    cap = int(np.floor(tol * np.maximum(batch.n_vms, 1)).max(initial=0))
 
     def results(server_gb, pool_gb, base_gb, rates):
         return [PolicyResult(policy, float(server_gb[i]),
@@ -629,7 +643,8 @@ def savings_analysis_batched(vms_list, cfg: ClusterConfig, policy: str,
 
     if policy == "local":
         base_gb = replay_engine.search_min_multi(
-            lambda g: batch.reject_rates(g, np.zeros_like(g))
+            lambda g: batch.reject_rates(g, np.zeros_like(g),
+                                         reject_cap=cap)
             <= tol[:, None], np.zeros(k), hi_vec)
         if cache is not None:
             cache["local_batch"] = batch
@@ -637,7 +652,8 @@ def savings_analysis_batched(vms_list, cfg: ClusterConfig, policy: str,
         return results(base_gb, np.zeros(k), base_gb, r0)
 
     min_server = replay_engine.search_min_multi(
-        lambda g: batch.reject_rates(g, np.full_like(g, big_pool))
+        lambda g: batch.reject_rates(g, np.full_like(g, big_pool),
+                                     reject_cap=cap)
         <= tol[:, None], np.zeros(k), hi_vec)
     # the all-local baseline ignores the pool: share its batch + search
     # across policies of one trace list, and compile each UNIQUE trace
@@ -645,23 +661,23 @@ def savings_analysis_batched(vms_list, cfg: ClusterConfig, policy: str,
     if cache is not None and "local_batch" in cache:
         local_batch = cache["local_batch"]
     else:
-        uniq_local: dict[int, replay_engine.CompiledReplay] = {}
+        uniq_local: dict = {}
         engines = []
         for vms in vms_list:
             e = uniq_local.get(id(vms))
             if e is None:
-                e = replay_engine.CompiledReplay(
-                    vms, _all_local_decisions(vms), cfg)
+                e = _compile_engine(vms, _all_local_decisions(vms))
                 uniq_local[id(vms)] = e
             engines.append(e)
-        local_batch = replay_engine.CompiledReplayBatch(engines)
+        local_batch = _wrap_batch(engines)
         if cache is not None:
             cache["local_batch"] = local_batch
     base_gb = cache.get(("base_gb_multi", tuple(tol))) \
         if cache is not None else None
     if base_gb is None:
         base_gb = replay_engine.search_min_multi(
-            lambda g: local_batch.reject_rates(g, np.zeros_like(g))
+            lambda g: local_batch.reject_rates(g, np.zeros_like(g),
+                                               reject_cap=cap)
             <= tol[:, None], np.zeros(k), hi_vec)
         if cache is not None:
             cache[("base_gb_multi", tuple(tol))] = base_gb
@@ -671,7 +687,7 @@ def savings_analysis_batched(vms_list, cfg: ClusterConfig, policy: str,
     n_pts = 7
     server_grids = np.linspace(min_server, base_gb, n_pts, axis=1)
     pool_grids = replay_engine.pool_search_multi(
-        batch, server_grids, big_pool, tol)
+        batch, server_grids, big_pool, tol, reject_cap=cap)
     totals = cfg.n_servers * server_grids + cfg.n_groups * pool_grids
     b = totals.argmin(axis=1)
     rows = np.arange(k)

@@ -106,6 +106,33 @@ class PolicyDecisions:
         """Number of compiled MIGRATE events this decision set emits."""
         return int(np.isfinite(self.t_migrate).sum())
 
+    def slice(self, lo: int, hi: int) -> "PolicyDecisions":
+        """Rows ``[lo, hi)`` as a new SoA (zero-copy numpy views).
+
+        The chunked-ingestion path of the streaming replay engines
+        takes a per-chunk ``decide(chunk)`` callback: with decisions
+        precomputed once for the whole trace (one compiled policy
+        pass), the callback just slices this SoA at the running row
+        offset — no per-VM decision objects are ever materialized::
+
+            dec, _ = cluster_sim.policy_decisions(vms, "pond", cp,
+                                                  as_arrays=True)
+            off = [0]
+            def decide(chunk):
+                lo = off[0]; off[0] += len(chunk)
+                return dec.slice(lo, off[0])
+            stream = replay_engine.CompiledReplayStream(
+                traces.iter_trace_chunks(path), None, cfg,
+                max_events_per_shard=250_000, decide=decide)
+
+        Aggregate fields (``mispredictions``, ``n_mitigations``) are
+        trace-level, not per-row, so the slice resets them to zero.
+        """
+        return PolicyDecisions(self.local_gb[lo:hi],
+                               self.pool_gb[lo:hi],
+                               self.fully_pooled[lo:hi],
+                               self.t_migrate[lo:hi])
+
     def as_vmdecisions(self) -> list:
         """Materialize ``cluster_sim.VMDecision`` objects (off the hot
         path: the scalar oracle and legacy callers index them)."""

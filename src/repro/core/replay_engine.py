@@ -89,9 +89,23 @@ each size's infinite-pool trajectory and warm-started from neighbors
   rates bit-exact vs ``CompiledReplay``).  Chunked construction from
   ``traces.iter_trace_chunks`` keeps ingestion memory bounded too.
   Sweep state packs to int16 when server capacities permit (half the
-  CPU memory traffic), with an automatic int32 fallback — both the
-  stream and the monolithic XLA sweep use the same
-  ``_pick_state_dtype`` overflow rules.
+  CPU memory traffic), with an automatic int32 fallback — every
+  engine shares the ``sweep_core.pick_state_dtype`` overflow rules.
+
+* **Streaming trace batch** — ``CompiledReplayStreamBatch`` composes
+  the two axes: K streams replay through index-aligned padded shards,
+  one vmapped ``lax.scan`` per shard with a PER-TRACE packed carry
+  threaded shard-to-shard, so a K-seed Azure-scale study costs one
+  pass over the shard axis instead of K — with peak event-tensor
+  memory bounded by ONE stacked shard batch.  Row ``k`` is bit-exact
+  vs running ``streams[k]`` alone.
+
+The dtype-parametric event-step kernel, the keyed jit cache, the
+int16/int32 packing rules, the padding buckets and the carry
+pack/unpack + device-placement helpers all live in
+``core/sweep_core.py`` — the engine classes here are thin
+orchestration layers over that shared core (see
+``docs/replay_engine.md`` for the layer diagram).
 """
 from __future__ import annotations
 
@@ -100,190 +114,17 @@ import time
 
 import numpy as np
 
-ARRIVE, DEPART, MIGRATE = 0, 1, 2
-PAD = 3               # no-op event kind used to pad the XLA event stream
+from repro.core import sweep_core
+
+# shared event/packing constants, re-exported for engine callers
+ARRIVE, DEPART, MIGRATE = (sweep_core.ARRIVE, sweep_core.DEPART,
+                           sweep_core.MIGRATE)
+PAD = sweep_core.PAD  # no-op event kind padding the XLA event stream
 MAX_WAVES = 12        # state-rebuild budget per sweep (numpy backend)
 MAX_TRAJS = 16        # per-server-size trajectories per sweep
 SNAP = 64             # snapshot stride (events) in trajectories
-JAX_CHUNK = 96        # max candidate bucket per compiled sweep
-_BUCKETS = (2, 4, 16, 32, JAX_CHUNK)   # padded candidate widths (lazy
-# compiles, one per width actually used; the small buckets matter for
-# narrow probe batches — bracket checks and final-rate evaluations are
-# fixed-cost-dominated per sweep, so padding 1-2 probes to 16 lanes
-# would waste most of the sweep)
 _INF = np.inf
-_I32_BIG = 1 << 30    # "infinite" capacity in the int32 sweep
-_I16_BIG = 1 << 14    # best-fit score sentinel in the int16 sweep
-_I16_SAFE = 30000     # int16 headroom bound: capacity + payload must fit
-
-
-# ----------------------------------------------------------- XLA backend ---
-_JAX_OK = None           # tri-state: None unknown, then True/False
-_JAX_SWEEPS: dict = {}   # (state_dtype, with_carry) -> jitted sweep
-_JAX_BATCH_SWEEP = None  # jitted vmapped sweep (leading trace axis)
-
-
-def _build_sweep(state_dtype: str = "int32", with_carry: bool = False):
-    """Build the (unjitted) integer event-sweep function.
-
-    Because every VM memory quantity is an integral GB, admission tests
-    like ``free_mem >= local_gb`` are equivalent to
-    ``used_mem + local_gb <= floor(server_gb)`` over int32 — so the whole
-    sweep runs in int32 under JAX's default x32 config and still matches
-    the float64 oracle bit-for-bit.  Placement state lives in a
-    ``(n_slots, C)`` array (VMs are mapped to reusable slots sized by
-    peak concurrency, far smaller than n_vms) updated with leading-axis
-    dynamic_update_slice so the scan carry stays in place.
-
-    ``state_dtype="int16"`` packs the carry (free cores, used local GB,
-    used pool GB, placement slots) to int16, halving the sweep's memory
-    traffic.  The int16 sweep is bit-equivalent to int32 whenever no
-    intermediate can overflow; callers must check
-    ``CompiledReplay._pick_state_dtype`` (capacity + per-VM payload
-    headroom within ``_I16_SAFE``) before selecting it.  Candidate
-    events stay int32 and are cast inside the body; the reject counters
-    stay int32 (a trace can reject more than 2^15 VMs).
-
-    ``with_carry=True`` returns the shard variant used by
-    :class:`CompiledReplayStream`: it takes AND returns the full packed
-    state, so consecutive time-windowed shards thread the carry.
-
-    The returned function is pure over jax arrays: ``_get_jax_sweep``
-    jits it directly; ``_get_jax_batch_sweep`` vmaps it over a leading
-    trace axis (event streams and candidate capacities per trace, shared
-    initial state) so K traces price their candidate batches in ONE
-    ``lax.scan``.
-    """
-    import jax.numpy as jnp
-    from jax import lax
-    dt = jnp.int16 if state_dtype == "int16" else jnp.int32
-    big = jnp.asarray(_I16_BIG if state_dtype == "int16" else _I32_BIG,
-                      dt)
-    zero = jnp.asarray(0, dt)
-
-    def body(carry, ev):
-        fc, um, up, slots, rejects, sgb, pgb, group_of = carry
-        kind, sl, c, l, p, m = ev
-        c, l, p, m = (c.astype(dt), l.astype(dt), p.astype(dt),
-                      m.astype(dt))
-        is_arr, is_dep, is_mig = kind == ARRIVE, kind == DEPART, \
-            kind == MIGRATE
-        val = slots[sl]                              # (C,) packed s*2+mig
-        has = val >= 0
-        s_cur = jnp.where(has, val >> 1, 0)
-        mg_cur = has & ((val & 1) == 1)
-        cols = jnp.arange(fc.shape[1], dtype=jnp.int32)
-        gcols = jnp.arange(up.shape[1], dtype=jnp.int32)
-        # admission: best fit by cores among servers with local memory
-        # room and group pool room (same mask as the scalar oracle)
-        upg = up[:, group_of]
-        ok = (fc >= c) & (um + l <= sgb[:, None]) & (upg + p <= pgb[:, None])
-        score = jnp.where(ok, fc, big)
-        s1 = jnp.argmin(score, 1).astype(jnp.int32)
-        feas1 = jnp.take_along_axis(score, s1[:, None], 1)[:, 0] < big
-        # pool short -> control-plane fallback: start the VM all-local
-        ok2 = (fc >= c) & (um + m <= sgb[:, None])
-        score2 = jnp.where(ok2, fc, big)
-        s2 = jnp.argmin(score2, 1).astype(jnp.int32)
-        feas2 = jnp.take_along_axis(score2, s2[:, None], 1)[:, 0] < big
-        sel = jnp.where(feas1, s1, s2)
-        place = feas1 | feas2
-        s_aff = jnp.where(is_arr, sel, s_cur)
-        act_arr = is_arr & place
-        act_dep = is_dep & has
-        um_s = jnp.take_along_axis(um, s_aff[:, None], 1)[:, 0]
-        act_mig = is_mig & has & (um_s + p <= sgb)   # QoS: pool -> local
-        oh = cols[None, :] == s_aff[:, None]
-        dfc = jnp.where(act_dep, c, zero) - jnp.where(act_arr, c, zero)
-        dum = (jnp.where(act_arr, jnp.where(feas1, l, m), zero)
-               - jnp.where(act_dep, jnp.where(mg_cur, m, l), zero)
-               + jnp.where(act_mig, p, zero))
-        g_aff = group_of[s_aff]
-        goh = gcols[None, :] == g_aff[:, None]
-        dup = (jnp.where(act_arr & feas1, p, zero)
-               - jnp.where(act_dep & ~mg_cur, p, zero)
-               - jnp.where(act_mig, p, zero))
-        fc = fc + oh * dfc[:, None]
-        um = um + oh * dum[:, None]
-        up = up + goh * dup[:, None]
-        aval = jnp.where(place, sel * 2 + jnp.where(feas1, 0, 1), -1)
-        new_val = jnp.where(is_arr, aval,
-                            jnp.where(is_dep, -1,
-                                      jnp.where(act_mig, val | 1, val)))
-        slots = lax.dynamic_update_index_in_dim(
-            slots, new_val.astype(slots.dtype), sl, 0)
-        rejects = rejects + (is_arr & ~feas1 & ~feas2)
-        return (fc, um, up, slots, rejects, sgb, pgb, group_of), None
-
-    def sweep_carry(evs, group_of, fc0, um0, up0, slots0, rej0, sgb, pgb):
-        init = (fc0, um0, up0, slots0, rej0, sgb, pgb, group_of)
-        out, _ = lax.scan(body, init, evs)
-        return out[0], out[1], out[2], out[3], out[4]
-
-    def sweep(evs, group_of, fc0, um0, up0, slots0, sgb, pgb):
-        init = (fc0, um0, up0, slots0,
-                jnp.zeros(sgb.shape[0], jnp.int32), sgb, pgb, group_of)
-        out, _ = lax.scan(body, init, evs)
-        return out[4]
-
-    return sweep_carry if with_carry else sweep
-
-
-def _jax_importable() -> bool:
-    global _JAX_OK
-    if _JAX_OK is None:
-        try:
-            import jax                               # noqa: F401
-            _JAX_OK = True
-        except Exception:                            # pragma: no cover
-            _JAX_OK = False
-    return _JAX_OK
-
-
-def _get_jax_sweep(state_dtype: str = "int32", with_carry: bool = False):
-    """Jitted single-trace sweep (per state dtype / carry variant), or
-    None when jax is unavailable.  Compiled lazily, one jit per key."""
-    if not _jax_importable():
-        return None
-    key = (state_dtype, with_carry)
-    fn = _JAX_SWEEPS.get(key)
-    if fn is None:
-        import jax
-        fn = jax.jit(_build_sweep(state_dtype, with_carry))
-        _JAX_SWEEPS[key] = fn
-    return fn
-
-
-def _get_jax_batch_sweep():
-    """Jitted sweep vmapped over a leading trace axis (K traces at once).
-
-    Per-trace inputs: the 6 event streams and the candidate capacity
-    vectors ``(K, n_cand)``.  Shared (broadcast) inputs: the group map
-    and the all-free initial state — identical across traces because the
-    batch requires one cluster shape.  vmap of ``lax.scan`` compiles to a
-    SINGLE scan with a batched carry, so the whole K-trace sweep costs
-    one pass over the padded event axis instead of K.
-    """
-    global _JAX_BATCH_SWEEP
-    if _JAX_BATCH_SWEEP is not None:
-        return _JAX_BATCH_SWEEP or None
-    if not _jax_importable():                        # pragma: no cover
-        _JAX_BATCH_SWEEP = False
-        return None
-    import jax
-    _JAX_BATCH_SWEEP = jax.jit(jax.vmap(
-        _build_sweep(),
-        in_axes=((0, 0, 0, 0, 0, 0), None, None, None, None, None, 0, 0)))
-    return _JAX_BATCH_SWEEP
-
-
-def _bucket(k: int) -> int:
-    """Padded candidate width for a k-candidate chunk (fixed buckets keep
-    XLA recompiles rare; small buckets matter for narrow probe batches)."""
-    for b in _BUCKETS:
-        if k <= b:
-            return b
-    return _BUCKETS[-1]
+_I16_SAFE = sweep_core.I16_SAFE   # re-export: boundary tests pin it
 
 
 # ----------------------------------------------------- decision ingest -----
@@ -497,33 +338,18 @@ class CompiledReplay:
         """
         if self._jax_ev is not None:
             return self._jax_ev
-        import jax.numpy as jnp
         n_ev, n_vms, n_srv = self.n_events, self.n_vms, self.n_servers
-        slot_of = np.full(n_vms, 0, np.int64)
-        ev_slot = np.zeros(n_ev, np.int64)
-        free_slots: list[int] = []
-        next_slot = 0
-        for e in range(n_ev):
-            v = self._ev_vm[e]
-            kind = self._ev_kind[e]
-            if kind == ARRIVE:
-                if free_slots:
-                    slot_of[v] = free_slots.pop()
-                else:
-                    slot_of[v] = next_slot
-                    next_slot += 1
-            ev_slot[e] = slot_of[v]
-            if kind == DEPART:
-                free_slots.append(int(slot_of[v]))
-        n_slots = max(32, (next_slot + 31) // 32 * 32)
-        e_pad = max(256, (n_ev + 255) // 256 * 256)
-        s_pad = max(16, (n_srv + 15) // 16 * 16)
-        g_pad = max(16, (self.n_groups + 15) // 16 * 16)
+        ev_slot, next_slot = sweep_core.assign_slots(
+            self._ev_kind, self._ev_vm, n_vms)
+        n_slots = sweep_core.pad_up(next_slot, sweep_core.SLOT_PAD)
+        e_pad = sweep_core.pad_up(n_ev, sweep_core.EVENT_PAD)
+        s_pad = sweep_core.pad_up(n_srv, sweep_core.LANE_PAD)
+        g_pad = sweep_core.pad_up(self.n_groups, sweep_core.LANE_PAD)
 
         def pad(vals, fill):
             out = np.full(e_pad, fill, np.int32)
             out[:n_ev] = vals
-            return jnp.asarray(out)
+            return sweep_core.device_put(out)
 
         vmx = np.asarray(self._ev_vm)
         evs = (pad(self._ev_kind, PAD), pad(ev_slot, 0),
@@ -533,36 +359,19 @@ class CompiledReplay:
                pad(np.asarray(self._mem, np.int32)[vmx], 0))
         group_np = np.zeros(s_pad, np.int32)
         group_np[:n_srv] = self.group_of
-        self._jax_ev = (evs, jnp.asarray(group_np), n_slots, s_pad, g_pad)
+        self._jax_ev = (evs, sweep_core.device_put(group_np), n_slots,
+                        s_pad, g_pad)
         return self._jax_ev
 
     def _pick_state_dtype(self, sgb_i: np.ndarray,
                           pgb_i: np.ndarray) -> str:
-        """``"int16"`` when every sweep intermediate provably fits int16.
-
-        The admission tests compute at most ``capacity + one payload``
-        (used mem is invariantly <= server_gb, used pool <= pool_gb), so
-        int16 is bit-equivalent to int32 whenever the candidate maxima
-        plus the per-VM payload maxima stay within ``_I16_SAFE``, the
-        best-fit score sentinel exceeds every free-cores value, and the
-        packed slot values (server * 2 + 1) fit.  MIGRATE-bearing traces
-        need one more bound: the oracle's fallback-migrate quirk returns
-        pool a fallback-placed VM never consumed, driving the used-pool
-        carry NEGATIVE — by at most the pool payload of each compiled
-        MIGRATE event, so the total compiled migrate-event pool
-        (``_mig_pool_sum``) bounds the deficit.  When that sum plus the
-        payload headroom fits ``_I16_SAFE`` too, migrate traces pack to
-        int16 like any other; anything else falls back to int32
-        automatically.
-        """
-        if (self.cores_per_server < _I16_BIG
-                and self.n_servers * 2 + 1 < _I16_BIG
-                and len(sgb_i) and sgb_i.min() >= 0 and pgb_i.min() >= 0
-                and sgb_i.max() + self._pay_mem_max <= _I16_SAFE
-                and pgb_i.max() + self._pay_pool_max <= _I16_SAFE
-                and self._mig_pool_sum + self._pay_pool_max <= _I16_SAFE):
-            return "int16"
-        return "int32"
+        """``"int16"`` when every sweep intermediate provably fits int16
+        (the shared ``sweep_core.pick_state_dtype`` rules, fed this
+        engine's cluster shape, payload maxima and compiled
+        migrate-event pool total ``_mig_pool_sum``)."""
+        return sweep_core.pick_state_dtype(
+            self.cores_per_server, self.n_servers, sgb_i, pgb_i,
+            self._pay_mem_max, self._pay_pool_max, self._mig_pool_sum)
 
     def _reject_rates_jax(self, server_gb, pool_gb,
                           state_dtype: str | None = None) -> np.ndarray:
@@ -572,33 +381,27 @@ class CompiledReplay:
         sweep's memory traffic) and falls back to int32 otherwise;
         ``state_dtype`` forces one packing (testing hook).
         """
-        import jax.numpy as jnp
         evs, group_of, n_slots, s_pad, g_pad = self._jax_events()
         n0 = len(server_gb)
         rejects = np.empty(n0, np.int64)
-        # integral quantities: floor() keeps admission tests identical
-        sgb_i = np.clip(np.floor(server_gb), -_I32_BIG, _I32_BIG)
-        pgb_i = np.clip(np.floor(pool_gb), -_I32_BIG, _I32_BIG)
+        sgb_i, pgb_i = sweep_core.quantize_capacities(server_gb, pool_gb)
         dt_name = state_dtype or self._pick_state_dtype(sgb_i, pgb_i)
-        np_dt = np.int16 if dt_name == "int16" else np.int32
-        neg_big = _I16_BIG if dt_name == "int16" else _I32_BIG
-        sweep = _get_jax_sweep(dt_name)
-        for lo in range(0, n0, JAX_CHUNK):
-            hi = min(lo + JAX_CHUNK, n0)
-            k = hi - lo
-            n_cand = _bucket(k)
-            sgb = np.full(n_cand, sgb_i[hi - 1], np_dt)
-            pgb = np.full(n_cand, pgb_i[hi - 1], np_dt)
-            sgb[:k] = sgb_i[lo:hi]
-            pgb[:k] = pgb_i[lo:hi]
-            fc0 = np.full((n_cand, s_pad), -neg_big, np_dt)
-            fc0[:, :self.n_servers] = np_dt(self.cores_per_server)
-            out = sweep(evs, group_of, jnp.asarray(fc0),
-                        jnp.zeros((n_cand, s_pad), np_dt),
-                        jnp.zeros((n_cand, g_pad), np_dt),
-                        jnp.full((n_slots, n_cand), -1, np_dt),
-                        jnp.asarray(sgb), jnp.asarray(pgb))
-            rejects[lo:hi] = np.asarray(out)[:k]
+        np_dt = sweep_core.state_np_dtype(dt_name)
+        sweep = sweep_core.get_sweep(dt_name)
+        for lo, hi, width in sweep_core.candidate_chunks(n0):
+            sgb, pgb = sweep_core.lane_capacities(sgb_i, pgb_i, lo, hi,
+                                                  width, np_dt)
+            fc0, um0, up0, slots0, _ = sweep_core.init_state(
+                width, self.n_servers, self.cores_per_server, s_pad,
+                g_pad, n_slots, np_dt)
+            out = sweep(evs, group_of,
+                        sweep_core.device_put(fc0),
+                        sweep_core.device_put(um0),
+                        sweep_core.device_put(up0),
+                        sweep_core.device_put(slots0),
+                        sweep_core.device_put(sgb),
+                        sweep_core.device_put(pgb))
+            rejects[lo:hi] = np.asarray(out)[:hi - lo]
         return rejects / max(self.n_vms, 1)
 
     # --------------------------------------------- reference trajectories --
@@ -762,7 +565,7 @@ class CompiledReplay:
         denom = max(n_vms, 1)
         if not n_ev:
             return np.zeros(n0)
-        if backend == "auto" and self._exact and _get_jax_sweep():
+        if backend == "auto" and self._exact and sweep_core.get_sweep():
             backend = "jax"
         if backend == "jax":
             rates = self._reject_rates_jax(server_gb, pool_gb,
@@ -1330,11 +1133,15 @@ class CompiledReplayStream:
         self._flush(_INF, final=True)
         self._close_shard()
         self.n_shards = len(self._shards)
-        self._n_slots = max(32, (self._next_slot + 31) // 32 * 32)
-        self._s_pad = max(16, (self.n_servers + 15) // 16 * 16)
-        self._g_pad = max(16, (self.n_groups + 15) // 16 * 16)
+        self._n_slots = sweep_core.pad_up(self._next_slot,
+                                          sweep_core.SLOT_PAD)
+        self._s_pad = sweep_core.pad_up(self.n_servers,
+                                        sweep_core.LANE_PAD)
+        self._g_pad = sweep_core.pad_up(self.n_groups,
+                                        sweep_core.LANE_PAD)
         longest = max((len(s["kind"]) for s in self._shards), default=0)
-        self.shard_pad_events = max(256, (longest + 255) // 256 * 256)
+        self.shard_pad_events = sweep_core.pad_up(longest,
+                                                  sweep_core.EVENT_PAD)
         #: per-sweep device footprint of one shard's event tensor
         #: (6 int32 streams) — THE quantity max_events_per_shard bounds
         self.peak_shard_bytes = 6 * 4 * self.shard_pad_events
@@ -1404,7 +1211,7 @@ class CompiledReplayStream:
         if not self.n_events:
             return np.zeros(n0)
         if backend == "auto":
-            backend = "jax" if (self._exact and _get_jax_sweep()) \
+            backend = "jax" if (self._exact and sweep_core.get_sweep()) \
                 else "numpy"
         if backend == "jax":
             rejects, cand_events = self._sweep_jax(
@@ -1419,46 +1226,39 @@ class CompiledReplayStream:
         return rejects / denom
 
     def _sweep_jax(self, server_gb, pool_gb, reject_cap, state_dtype):
-        import jax.numpy as jnp
         n0 = len(server_gb)
         rejects = np.empty(n0, np.int64)
-        sgb_i = np.clip(np.floor(server_gb), -_I32_BIG, _I32_BIG)
-        pgb_i = np.clip(np.floor(pool_gb), -_I32_BIG, _I32_BIG)
+        sgb_i, pgb_i = sweep_core.quantize_capacities(server_gb, pool_gb)
         dt_name = state_dtype or self._pick_state_dtype(sgb_i, pgb_i)
-        np_dt = np.int16 if dt_name == "int16" else np.int32
-        neg_big = _I16_BIG if dt_name == "int16" else _I32_BIG
-        sweep = _get_jax_sweep(dt_name, with_carry=True)
-        group_j = jnp.asarray(self._group_np)
+        np_dt = sweep_core.state_np_dtype(dt_name)
+        # the carry variant donates the packed state back to the sweep:
+        # shard-to-shard state stays device-resident (GPU/TPU-ready)
+        sweep = sweep_core.get_sweep(dt_name, with_carry=True)
+        group_j = sweep_core.device_put(self._group_np)
         cand_events = 0
-        for lo in range(0, n0, JAX_CHUNK):
-            hi = min(lo + JAX_CHUNK, n0)
+        for lo, hi, width in sweep_core.candidate_chunks(n0):
             k = hi - lo
-            n_cand = _bucket(k)
-            sgb = np.full(n_cand, sgb_i[hi - 1], np_dt)
-            pgb = np.full(n_cand, pgb_i[hi - 1], np_dt)
-            sgb[:k] = sgb_i[lo:hi]
-            pgb[:k] = pgb_i[lo:hi]
-            fc0 = np.full((n_cand, self._s_pad), -neg_big, np_dt)
-            fc0[:, :self.n_servers] = np_dt(self.cores_per_server)
-            carry = (jnp.asarray(fc0),
-                     jnp.zeros((n_cand, self._s_pad), np_dt),
-                     jnp.zeros((n_cand, self._g_pad), np_dt),
-                     jnp.full((self._n_slots, n_cand), -1, np_dt),
-                     jnp.zeros(n_cand, jnp.int32))
-            sgb_j, pgb_j = jnp.asarray(sgb), jnp.asarray(pgb)
+            sgb, pgb = sweep_core.lane_capacities(sgb_i, pgb_i, lo, hi,
+                                                  width, np_dt)
+            carry = tuple(sweep_core.device_put(a)
+                          for a in sweep_core.init_state(
+                              width, self.n_servers,
+                              self.cores_per_server, self._s_pad,
+                              self._g_pad, self._n_slots, np_dt))
+            sgb_j = sweep_core.device_put(sgb)
+            pgb_j = sweep_core.device_put(pgb)
             for shard in self._shards:
                 # ONE shard's padded tensor lives on device at a time
                 # (rebuilt per candidate chunk by design: caching every
                 # shard's device tensor would void the memory bound)
                 def _i32(a):
-                    return jnp.asarray(
+                    return sweep_core.device_put(
                         a if a.dtype == np.int32 else a.astype(np.int32))
-                evs = (jnp.asarray(shard["kind"]),
-                       jnp.asarray(shard["slot"]),
+                evs = (_i32(shard["kind"]), _i32(shard["slot"]),
                        _i32(shard["c"]), _i32(shard["l"]),
                        _i32(shard["p"]), _i32(shard["m"]))
                 carry = sweep(evs, group_j, *carry, sgb_j, pgb_j)
-                cand_events += self.shard_pad_events * n_cand
+                cand_events += self.shard_pad_events * width
                 if reject_cap is not None:
                     rej_now = np.asarray(carry[4])[:k]
                     if (rej_now > reject_cap).all():
@@ -1488,6 +1288,51 @@ class CompiledReplayStream:
 
 
 # ----------------------------------------------------------- trace batch ---
+def _validate_cluster_shape(engines, what: str):
+    """One batch requires one cluster shape (the vmapped sweep shares
+    the group map and state padding across rows)."""
+    if not engines:
+        raise ValueError(f"{what} needs >= 1 engine")
+    e0 = engines[0]
+    shape = (e0.n_servers, e0.n_groups, e0.cores_per_server)
+    for e in engines[1:]:
+        if (e.n_servers, e.n_groups, e.cores_per_server) != shape:
+            raise ValueError(
+                "all traces in a batch must share one cluster shape; "
+                f"got {(e.n_servers, e.n_groups, e.cores_per_server)} "
+                f"vs {shape}")
+
+
+def _batch_pick_state_dtype(engines, sgb_i: np.ndarray,
+                            pgb_i: np.ndarray) -> str:
+    """int16 only when EVERY trace row packs safely: a vmapped sweep
+    shares one state dtype across the batch, so any row that needs
+    int32 (payload headroom, migrate-pool deficit) forces the whole
+    batch to int32.  Bit-exactness is unaffected either way — int16 is
+    only ever picked where it is provably equivalent."""
+    if all(e._pick_state_dtype(sgb_i[i], pgb_i[i]) == "int16"
+           for i, e in enumerate(engines)):
+        return "int16"
+    return "int32"
+
+
+def _broadcast_candidates(k: int, server_gb, pool_gb):
+    """Normalize candidates to float ``(K, n_cand)`` arrays: 1-D inputs
+    are shared across traces, 2-D inputs give per-trace grids (the
+    shape the lockstep searches need)."""
+    s = np.atleast_1d(np.asarray(server_gb, float))
+    p = np.atleast_1d(np.asarray(pool_gb, float))
+    s, p = np.broadcast_arrays(s, p)
+    if s.ndim == 1:
+        s = np.broadcast_to(s, (k,) + s.shape)
+        p = np.broadcast_to(p, (k,) + p.shape)
+    if s.ndim != 2 or s.shape[0] != k:
+        raise ValueError(
+            f"candidates must be 1-D (shared) or ({k}, n_cand) "
+            f"per-trace; got shape {s.shape}")
+    return np.ascontiguousarray(s), np.ascontiguousarray(p)
+
+
 class CompiledReplayBatch:
     """K compiled traces priced side by side in one padded event tensor.
 
@@ -1511,16 +1356,8 @@ class CompiledReplayBatch:
     """
 
     def __init__(self, engines):
-        if not engines:
-            raise ValueError("CompiledReplayBatch needs >= 1 engine")
+        _validate_cluster_shape(engines, "CompiledReplayBatch")
         e0 = engines[0]
-        shape = (e0.n_servers, e0.n_groups, e0.cores_per_server)
-        for e in engines[1:]:
-            if (e.n_servers, e.n_groups, e.cores_per_server) != shape:
-                raise ValueError(
-                    "all traces in a batch must share one cluster shape; "
-                    f"got {(e.n_servers, e.n_groups, e.cores_per_server)} "
-                    f"vs {shape}")
         self.engines = list(engines)
         self.k = len(engines)
         self.n_servers = e0.n_servers
@@ -1534,7 +1371,6 @@ class CompiledReplayBatch:
         """Stack per-trace padded event streams to one (K, E_max) tensor."""
         if self._jax_batch is not None:
             return self._jax_batch
-        import jax.numpy as jnp
         per = [e._jax_events() for e in self.engines]
         e_max = max(p[0][0].shape[0] for p in per)
         n_slots = max(p[2] for p in per)
@@ -1546,71 +1382,240 @@ class CompiledReplayBatch:
             for i, p in enumerate(per):
                 arr = np.asarray(p[0][j])
                 col[i, :arr.shape[0]] = arr
-            streams.append(jnp.asarray(col))
+            streams.append(sweep_core.device_put(col))
         self._jax_batch = (tuple(streams), per[0][1], n_slots, s_pad, g_pad)
         return self._jax_batch
 
-    def _broadcast(self, server_gb, pool_gb):
-        """Normalize candidates to float (K, n_cand) arrays."""
-        s = np.atleast_1d(np.asarray(server_gb, float))
-        p = np.atleast_1d(np.asarray(pool_gb, float))
-        s, p = np.broadcast_arrays(s, p)
-        if s.ndim == 1:
-            s = np.broadcast_to(s, (self.k,) + s.shape)
-            p = np.broadcast_to(p, (self.k,) + p.shape)
-        if s.ndim != 2 or s.shape[0] != self.k:
-            raise ValueError(
-                f"candidates must be 1-D (shared) or ({self.k}, n_cand) "
-                f"per-trace; got shape {s.shape}")
-        return np.ascontiguousarray(s), np.ascontiguousarray(p)
+    def _pick_state_dtype(self, sgb_i: np.ndarray,
+                          pgb_i: np.ndarray) -> str:
+        return _batch_pick_state_dtype(self.engines, sgb_i, pgb_i)
 
     def reject_rates(self, server_gb, pool_gb,
-                     backend: str = "auto") -> np.ndarray:
+                     reject_cap: int | None = None,
+                     backend: str = "auto",
+                     state_dtype: str | None = None) -> np.ndarray:
         """Reject fraction per (trace, candidate): shape ``(K, n_cand)``.
 
         ``server_gb``/``pool_gb`` broadcast like the single-trace API and
         additionally accept ``(K, n_cand)`` per-trace candidate grids.
-        ``backend="auto"`` prices all K traces in ONE vmapped int32
+        ``backend="auto"`` prices all K traces in ONE vmapped integer
         ``lax.scan`` when jax is importable and every trace's decisions
         are integral GBs; otherwise it falls back to looping the
         per-trace numpy divergence-window sweep (same bit-exact rates,
         just K sweeps instead of one).
+
+        The batched carry packs to int16 when every trace's capacities
+        permit (the keyed ``sweep_core`` cache compiles one vmapped
+        sweep per state dtype — the old module-global batch sweep was
+        pinned to int32); ``state_dtype`` forces a packing for tests.
+        ``reject_cap`` is accepted for engine interchangeability with
+        the streaming batch: the monolithic vmapped sweep always
+        returns exact rates (which satisfy the same feasibility-test
+        contract), while the numpy fallback forwards the cap to the
+        per-trace sweeps.
         """
-        server_gb, pool_gb = self._broadcast(server_gb, pool_gb)
+        server_gb, pool_gb = _broadcast_candidates(self.k, server_gb,
+                                                   pool_gb)
         n0 = server_gb.shape[1]
-        if backend == "auto" and self._exact and _get_jax_batch_sweep():
+        if backend == "auto" and self._exact and \
+                sweep_core.get_sweep(batched=True):
             backend = "jax"
         if backend != "jax":
             return np.stack([
-                eng.reject_rates(server_gb[i], pool_gb[i], backend=backend)
+                eng.reject_rates(server_gb[i], pool_gb[i],
+                                 reject_cap=reject_cap, backend=backend)
                 for i, eng in enumerate(self.engines)])
         t0 = time.perf_counter()
-        sweep = _get_jax_batch_sweep()
-        import jax.numpy as jnp
         evs, group_of, n_slots, s_pad, g_pad = self._jax_batch_events()
         rejects = np.empty((self.k, n0), np.int64)
-        sgb_i = np.clip(np.floor(server_gb), -_I32_BIG, _I32_BIG)
-        pgb_i = np.clip(np.floor(pool_gb), -_I32_BIG, _I32_BIG)
-        for lo in range(0, n0, JAX_CHUNK):
-            hi = min(lo + JAX_CHUNK, n0)
+        sgb_i, pgb_i = sweep_core.quantize_capacities(server_gb, pool_gb)
+        dt_name = state_dtype or self._pick_state_dtype(sgb_i, pgb_i)
+        np_dt = sweep_core.state_np_dtype(dt_name)
+        sweep = sweep_core.get_sweep(dt_name, batched=True)
+        for lo, hi, width in sweep_core.candidate_chunks(n0):
             kc = hi - lo
-            n_cand = _bucket(kc)
-            sgb = np.repeat(sgb_i[:, hi - 1:hi], n_cand, 1).astype(np.int32)
-            pgb = np.repeat(pgb_i[:, hi - 1:hi], n_cand, 1).astype(np.int32)
-            sgb[:, :kc] = sgb_i[:, lo:hi]
-            pgb[:, :kc] = pgb_i[:, lo:hi]
-            fc0 = np.full((n_cand, s_pad), -_I32_BIG, np.int32)
-            fc0[:, :self.n_servers] = np.int32(self.cores_per_server)
-            out = sweep(evs, group_of, jnp.asarray(fc0),
-                        jnp.zeros((n_cand, s_pad), jnp.int32),
-                        jnp.zeros((n_cand, g_pad), jnp.int32),
-                        jnp.full((n_slots, n_cand), -1, jnp.int32),
-                        jnp.asarray(sgb), jnp.asarray(pgb))
+            sgb, pgb = sweep_core.lane_capacities(sgb_i, pgb_i, lo, hi,
+                                                  width, np_dt)
+            # the all-free initial state is SHARED across traces
+            # (broadcast by the vmap), so no leading trace axis here
+            fc0, um0, up0, slots0, _ = sweep_core.init_state(
+                width, self.n_servers, self.cores_per_server, s_pad,
+                g_pad, n_slots, np_dt)
+            out = sweep(evs, group_of,
+                        sweep_core.device_put(fc0),
+                        sweep_core.device_put(um0),
+                        sweep_core.device_put(up0),
+                        sweep_core.device_put(slots0),
+                        sweep_core.device_put(sgb),
+                        sweep_core.device_put(pgb))
             rejects[:, lo:hi] = np.asarray(out)[:, :kc]
         rates = rejects / np.maximum(self.n_vms, 1)[:, None]
         _STATS.sweeps += 1
         _STATS.events += int(self.n_events.max(initial=0))
         _STATS.candidate_events += int(self.n_events.sum()) * n0
+        _STATS.wall_s += time.perf_counter() - t0
+        return rates
+
+
+# -------------------------------------------------- streaming trace batch ---
+class CompiledReplayStreamBatch:
+    """K streaming replays priced side by side, one vmapped scan per shard.
+
+    Composes the trace-batch axis of :class:`CompiledReplayBatch` with
+    the bounded-memory sharding of :class:`CompiledReplayStream`: the K
+    streams' index-aligned padded shards stack into ONE ``(K, E_shard)``
+    event tensor per shard index (streams built with one
+    ``max_events_per_shard`` budget shard on the same event grid, so
+    aligned shards cover comparable time windows; shorter streams pad
+    with no-op events), and a PER-TRACE packed carry — free cores, used
+    local/pool GB, slot array, reject counters, each with a leading
+    trace axis — threads shard-to-shard through a single vmapped
+    ``lax.scan``.  A K-seed Azure-scale sweep therefore costs one pass
+    over the shard axis instead of K, while only one stacked shard
+    batch is ever materialized: peak event-tensor memory is
+    ``peak_shard_bytes = K * 6 * 4 * shard_pad_events``, set by the
+    budget and trace count, independent of trace length.
+
+    Bit-exactness contract: row ``k`` of :meth:`reject_rates` equals
+    ``streams[k].reject_rates(...)`` — and hence the monolithic
+    :class:`CompiledReplay` — bit-for-bit: padding events are no-ops
+    and each (trace, candidate) lane replays independently of its batch
+    neighbors (``tests/test_replay_stream.py`` asserts this on the
+    fixture and a 100k-VM trace, both backends and both state dtypes).
+    The carry is placed with ``jax.device_put`` and donated back to the
+    sweep, so it stays device-resident across shards (GPU/TPU-ready).
+
+    Usage (K seeds past the monolithic memory ceiling)::
+
+        streams = [CompiledReplayStream(vms_k, dec_k, cfg,
+                                        max_events_per_shard=250_000)
+                   for ...]
+        batch = CompiledReplayStreamBatch(streams)
+        rates = batch.reject_rates([300., 350.], [512., 256.])  # (K, 2)
+
+    ``cluster_sim.savings_analysis_batched`` builds this automatically
+    once any trace of a batch runs past its ``max_events_per_shard``
+    budget, so the lockstep provisioning searches
+    (``search_min_multi``/``pool_search_multi``) stream transparently.
+    """
+
+    def __init__(self, streams):
+        _validate_cluster_shape(streams, "CompiledReplayStreamBatch")
+        s0 = streams[0]
+        self.engines = list(streams)           # searches read .engines
+        self.k = len(streams)
+        self.n_servers = s0.n_servers
+        self.n_groups = s0.n_groups
+        self.cores_per_server = s0.cores_per_server
+        self.n_vms = np.array([s.n_vms for s in streams], np.int64)
+        self.n_events = np.array([s.n_events for s in streams], np.int64)
+        self._exact = all(s._exact for s in streams)
+        self.n_shards = max((s.n_shards for s in streams), default=0)
+        self.shard_pad_events = max(
+            (s.shard_pad_events for s in streams if s.n_shards), default=0)
+        #: device footprint of ONE stacked shard batch (6 int32 streams
+        #: x K traces) — THE quantity the composed engine bounds
+        self.peak_shard_bytes = self.k * 6 * 4 * self.shard_pad_events
+        self._n_slots = max(s._n_slots for s in streams)
+        self._s_pad, self._g_pad = s0._s_pad, s0._g_pad
+        self._group_np = s0._group_np
+
+    def peak_pool_demand(self) -> np.ndarray:
+        """Per-trace naive concurrent pool-demand peak (feasible upper
+        bracket for the lockstep pool searches)."""
+        return np.array([s.peak_pool_demand() for s in self.engines])
+
+    def _pick_state_dtype(self, sgb_i: np.ndarray,
+                          pgb_i: np.ndarray) -> str:
+        return _batch_pick_state_dtype(self.engines, sgb_i, pgb_i)
+
+    def _stacked_shard(self, si: int):
+        """One ``(K, shard_pad_events)`` stacked int32 event tensor.
+
+        Built per sweep call per shard index — never cached — so only
+        one stacked shard batch exists (host + device) at a time; rows
+        of streams with fewer than ``si + 1`` shards are all no-ops.
+        """
+        e = self.shard_pad_events
+        cols = {key: np.zeros((self.k, e), np.int32)
+                for key in ("slot", "c", "l", "p", "m")}
+        cols["kind"] = np.full((self.k, e), PAD, np.int32)
+        for i, s in enumerate(self.engines):
+            if si >= s.n_shards:
+                continue
+            sh = s._shards[si]
+            n = len(sh["kind"])
+            for key, dst in cols.items():
+                dst[i, :n] = sh[key]
+        return tuple(sweep_core.device_put(cols[key])
+                     for key in ("kind", "slot", "c", "l", "p", "m"))
+
+    def reject_rates(self, server_gb, pool_gb,
+                     reject_cap: int | None = None,
+                     backend: str = "auto",
+                     state_dtype: str | None = None) -> np.ndarray:
+        """Reject fraction per (trace, candidate): shape ``(K, n_cand)``.
+
+        Candidates broadcast like :meth:`CompiledReplayBatch.reject_rates`
+        (1-D shared or ``(K, n_cand)`` per-trace grids).  One pass over
+        the shard axis prices every trace's candidate batch, threading
+        the batched carry between shards.  With ``reject_cap`` set the
+        stream stops early once EVERY (trace, candidate) lane exceeds
+        the cap — each reported rate is then its exact count so far, a
+        lower bound satisfying the usual feasibility-test contract
+        (callers must pass a cap covering every trace's tolerance, i.e.
+        ``max_i floor(tol_i * n_vms_i)``).  ``backend="numpy"`` (or
+        non-integral decisions) loops the per-stream float64 shard
+        sweeps instead — same bit-exact rates, K passes instead of one.
+        """
+        t0 = time.perf_counter()
+        server_gb, pool_gb = _broadcast_candidates(self.k, server_gb,
+                                                   pool_gb)
+        n0 = server_gb.shape[1]
+        if not self.n_shards:
+            return np.zeros((self.k, n0))
+        if backend == "auto":
+            backend = "jax" if (self._exact and sweep_core.get_sweep()) \
+                else "numpy"
+        if backend != "jax":
+            return np.stack([
+                s.reject_rates(server_gb[i], pool_gb[i],
+                               reject_cap=reject_cap, backend=backend)
+                for i, s in enumerate(self.engines)])
+        sgb_i, pgb_i = sweep_core.quantize_capacities(server_gb, pool_gb)
+        dt_name = state_dtype or self._pick_state_dtype(sgb_i, pgb_i)
+        np_dt = sweep_core.state_np_dtype(dt_name)
+        sweep = sweep_core.get_sweep(dt_name, with_carry=True,
+                                     batched=True)
+        group_j = sweep_core.device_put(self._group_np)
+        rejects = np.empty((self.k, n0), np.int64)
+        cand_events = 0
+        for lo, hi, width in sweep_core.candidate_chunks(n0):
+            kc = hi - lo
+            sgb, pgb = sweep_core.lane_capacities(sgb_i, pgb_i, lo, hi,
+                                                  width, np_dt)
+            # PER-TRACE carry (leading K axis), donated shard-to-shard
+            carry = tuple(sweep_core.device_put(a)
+                          for a in sweep_core.init_state(
+                              width, self.n_servers,
+                              self.cores_per_server, self._s_pad,
+                              self._g_pad, self._n_slots, np_dt,
+                              k=self.k))
+            sgb_j = sweep_core.device_put(sgb)
+            pgb_j = sweep_core.device_put(pgb)
+            for si in range(self.n_shards):
+                evs = self._stacked_shard(si)
+                carry = sweep(evs, group_j, *carry, sgb_j, pgb_j)
+                cand_events += self.k * self.shard_pad_events * width
+                if reject_cap is not None:
+                    rej_now = np.asarray(carry[4])[:, :kc]
+                    if (rej_now > reject_cap).all():
+                        break               # every lane decided
+            rejects[:, lo:hi] = np.asarray(carry[4])[:, :kc]
+        rates = rejects / np.maximum(self.n_vms, 1)[:, None]
+        _STATS.sweeps += 1
+        _STATS.events += int(self.n_events.max(initial=0))
+        _STATS.candidate_events += cand_events
         _STATS.wall_s += time.perf_counter() - t0
         return rates
 
@@ -1806,9 +1811,10 @@ def search_min_multi(feasible, lo, hi, tol_frac: float = 0.02,
     return hi
 
 
-def pool_search_multi(batch: CompiledReplayBatch, server_grids,
+def pool_search_multi(batch, server_grids,
                       big_pool: float, tol, tol_frac: float = 0.02,
-                      width: int = 4) -> np.ndarray:
+                      width: int = 4,
+                      reject_cap: int | None = None) -> np.ndarray:
     """Minimum feasible pool_gb per (trace, server-size) point, lockstep.
 
     Multi-trace analogue of :func:`pool_search_batched`: one bracketing
@@ -1820,6 +1826,16 @@ def pool_search_multi(batch: CompiledReplayBatch, server_grids,
     within each trace (required pool is monotone non-increasing in
     server_gb).  Points infeasible even at the upper bracket return
     ``big_pool``.
+
+    ``batch`` may be a :class:`CompiledReplayBatch` or a
+    :class:`CompiledReplayStreamBatch` — the search only needs
+    ``reject_rates`` plus per-engine ``peak_pool_demand``, so the
+    lockstep rounds stream transparently past a shard budget.
+    ``reject_cap`` (cover every trace's tolerance: ``max_i
+    floor(tol_i * n_i)``) lets the streaming batch stop a round's sweep
+    early once every lane is decided; the monolithic batch returns
+    exact rates regardless, so the probe sequence — and the result —
+    is identical either way.
     """
     sg = np.asarray(server_grids, float)
     if sg.ndim != 2 or sg.shape[0] != batch.k:
@@ -1831,7 +1847,7 @@ def pool_search_multi(batch: CompiledReplayBatch, server_grids,
     peaks = np.array([min(float(big_pool), e.peak_pool_demand())
                       for e in batch.engines])
     hi = np.broadcast_to(peaks[:, None], (k, n_pts)).copy()
-    infeasible = batch.reject_rates(sg, hi) > tol
+    infeasible = batch.reject_rates(sg, hi, reject_cap=reject_cap) > tol
     fracs = np.arange(1, width + 1) / (width + 1.0)
     while True:
         prop_hi = np.minimum.accumulate(
@@ -1848,7 +1864,8 @@ def pool_search_multi(batch: CompiledReplayBatch, server_grids,
         grids = lo[..., None] + (hi - lo)[..., None] * fracs
         r = batch.reject_rates(
             np.repeat(sg, width, axis=1),
-            grids.reshape(k, n_pts * width)).reshape(k, n_pts, width)
+            grids.reshape(k, n_pts * width),
+            reject_cap=reject_cap).reshape(k, n_pts, width)
         f = r <= tol[:, :, None]
         for i in range(k):
             for j in np.flatnonzero(active[i]):

@@ -1,0 +1,419 @@
+"""Shared sweep core for the event-compiled replay engines.
+
+Every replay engine in ``core/replay_engine.py`` — ``CompiledReplay``
+(one trace), ``CompiledReplayBatch`` (K traces, one vmapped scan),
+``CompiledReplayStream`` (out-of-core shards, carried state) and
+``CompiledReplayStreamBatch`` (K streams, batched carry) — prices
+``(server_gb, pool_gb)`` candidates with the SAME integer event-step
+kernel.  This module is that kernel plus everything the engines share
+around it, so the engine classes stay thin orchestration layers:
+
+* **The dtype-parametric event-step kernel** (:func:`build_sweep`):
+  one ``lax.scan`` body covering arrivals (best-fit-by-cores with
+  per-group pool checks and the all-local fallback), departures and
+  QoS migrations, parametric over the packed state dtype (int32 or
+  int16) and over whether the packed state is returned as a carry
+  (the streaming variant) or consumed whole (the monolithic variant).
+
+* **A single keyed jit cache** (:func:`get_sweep`): jitted sweeps are
+  cached by ``(state_dtype, with_carry, batched)``.  This replaces the
+  old ``_JAX_SWEEPS`` dict + ``_JAX_BATCH_SWEEP`` module globals —
+  the batch global ignored the state dtype, so batched sweeps always
+  ran int32 even when int16 packing applied (fixed here; regression
+  test in ``tests/test_sweep_core.py``).  Carry variants are jitted
+  with **donated carry arguments**: the shard-to-shard state buffers
+  are reused in place on backends that support donation, so the carry
+  stays device-resident instead of round-tripping through fresh
+  allocations.
+
+* **int16/int32 packing rules** (:func:`pick_state_dtype`): the carry
+  packs to int16 — half the sweep's memory traffic — exactly when no
+  intermediate can overflow: candidate capacity plus per-VM payload
+  headroom within :data:`I16_SAFE`, the best-fit score sentinel above
+  every free-cores value, packed slot values in range, and (for
+  MIGRATE-bearing traces) the compiled migrate-event pool total
+  bounding the fallback-migrate used-pool deficit.
+
+* **Padding buckets** (:func:`bucket_width`, :func:`candidate_chunks`,
+  :func:`pad_up`): candidate batches pad to fixed widths
+  (2/4/16/32/96), event streams to multiples of 256, server/group
+  columns to multiples of 16 and placement slots to multiples of 32,
+  so XLA recompiles are rare.
+
+* **Carry pack/unpack** (:func:`init_state`, :func:`lane_capacities`,
+  :func:`quantize_capacities`, :func:`assign_slots`): building the
+  packed all-free initial state (optionally with a leading trace
+  axis for the batched engines), quantizing candidate capacities to
+  the int sweep's domain, filling padded candidate lanes, and mapping
+  VMs to reusable placement slots sized by peak concurrency.
+
+* **Explicit device placement** (:func:`device_put`): shard event
+  tensors and carry state are placed with ``jax.device_put`` so the
+  identical code path runs on CPU, GPU or TPU — on accelerators the
+  event shards upload one at a time and the carry never leaves the
+  device, which is what keeps peak memory bounded by one shard
+  (batch) regardless of trace length.
+
+The kernel is bit-exact with respect to the scalar float64 oracle
+(``cluster_sim.replay_reject_rate``) because every VM memory quantity
+is an integral GB: admission tests like ``free_mem >= local_gb`` are
+exactly ``used_mem + local_gb <= floor(server_gb)`` over int32 (see
+``docs/replay_engine.md``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+ARRIVE, DEPART, MIGRATE = 0, 1, 2
+PAD = 3               # no-op event kind used to pad the XLA event stream
+JAX_CHUNK = 96        # max candidate bucket per compiled sweep
+BUCKETS = (2, 4, 16, 32, JAX_CHUNK)   # padded candidate widths (lazy
+# compiles, one per width actually used; the small buckets matter for
+# narrow probe batches — bracket checks and final-rate evaluations are
+# fixed-cost-dominated per sweep, so padding 1-2 probes to 16 lanes
+# would waste most of the sweep)
+EVENT_PAD = 256       # event-stream pad granularity
+LANE_PAD = 16         # server/group column pad granularity
+SLOT_PAD = 32         # placement-slot pad granularity
+I32_BIG = 1 << 30     # "infinite" capacity in the int32 sweep
+I16_BIG = 1 << 14     # best-fit score sentinel in the int16 sweep
+I16_SAFE = 30000      # int16 headroom bound: capacity + payload must fit
+
+
+# --------------------------------------------------------------- jit cache --
+_JAX_OK = None        # tri-state: None unknown, then True/False
+_SWEEPS: dict = {}    # (state_dtype, with_carry, batched) -> jitted sweep
+
+
+def jax_importable() -> bool:
+    global _JAX_OK
+    if _JAX_OK is None:
+        try:
+            import jax                               # noqa: F401
+            _JAX_OK = True
+        except Exception:                            # pragma: no cover
+            _JAX_OK = False
+    return _JAX_OK
+
+
+def build_sweep(state_dtype: str = "int32", with_carry: bool = False):
+    """Build the (unjitted) integer event-sweep function.
+
+    Because every VM memory quantity is an integral GB, admission tests
+    like ``free_mem >= local_gb`` are equivalent to
+    ``used_mem + local_gb <= floor(server_gb)`` over int32 — so the whole
+    sweep runs in int32 under JAX's default x32 config and still matches
+    the float64 oracle bit-for-bit.  Placement state lives in a
+    ``(n_slots, C)`` array (VMs are mapped to reusable slots sized by
+    peak concurrency, far smaller than n_vms) updated with leading-axis
+    dynamic_update_slice so the scan carry stays in place.
+
+    ``state_dtype="int16"`` packs the carry (free cores, used local GB,
+    used pool GB, placement slots) to int16, halving the sweep's memory
+    traffic.  The int16 sweep is bit-equivalent to int32 whenever no
+    intermediate can overflow; callers must check
+    :func:`pick_state_dtype` (capacity + per-VM payload headroom within
+    :data:`I16_SAFE`) before selecting it.  Candidate events stay int32
+    and are cast inside the body; the reject counters stay int32 (a
+    trace can reject more than 2^15 VMs).
+
+    ``with_carry=True`` returns the shard variant used by the streaming
+    engines: it takes AND returns the full packed state, so consecutive
+    time-windowed shards thread the carry.
+
+    The returned function is pure over jax arrays: :func:`get_sweep`
+    jits it directly, or vmaps it over a leading trace axis first
+    (``batched=True``) so K traces price their candidate batches in ONE
+    ``lax.scan``.
+    """
+    import jax.numpy as jnp
+    from jax import lax
+    dt = jnp.int16 if state_dtype == "int16" else jnp.int32
+    big = jnp.asarray(I16_BIG if state_dtype == "int16" else I32_BIG, dt)
+    zero = jnp.asarray(0, dt)
+
+    def body(carry, ev):
+        fc, um, up, slots, rejects, sgb, pgb, group_of = carry
+        kind, sl, c, l, p, m = ev
+        c, l, p, m = (c.astype(dt), l.astype(dt), p.astype(dt),
+                      m.astype(dt))
+        is_arr, is_dep, is_mig = kind == ARRIVE, kind == DEPART, \
+            kind == MIGRATE
+        val = slots[sl]                              # (C,) packed s*2+mig
+        has = val >= 0
+        s_cur = jnp.where(has, val >> 1, 0)
+        mg_cur = has & ((val & 1) == 1)
+        cols = jnp.arange(fc.shape[1], dtype=jnp.int32)
+        gcols = jnp.arange(up.shape[1], dtype=jnp.int32)
+        # admission: best fit by cores among servers with local memory
+        # room and group pool room (same mask as the scalar oracle)
+        upg = up[:, group_of]
+        ok = (fc >= c) & (um + l <= sgb[:, None]) & (upg + p <= pgb[:, None])
+        score = jnp.where(ok, fc, big)
+        s1 = jnp.argmin(score, 1).astype(jnp.int32)
+        feas1 = jnp.take_along_axis(score, s1[:, None], 1)[:, 0] < big
+        # pool short -> control-plane fallback: start the VM all-local
+        ok2 = (fc >= c) & (um + m <= sgb[:, None])
+        score2 = jnp.where(ok2, fc, big)
+        s2 = jnp.argmin(score2, 1).astype(jnp.int32)
+        feas2 = jnp.take_along_axis(score2, s2[:, None], 1)[:, 0] < big
+        sel = jnp.where(feas1, s1, s2)
+        place = feas1 | feas2
+        s_aff = jnp.where(is_arr, sel, s_cur)
+        act_arr = is_arr & place
+        act_dep = is_dep & has
+        um_s = jnp.take_along_axis(um, s_aff[:, None], 1)[:, 0]
+        act_mig = is_mig & has & (um_s + p <= sgb)   # QoS: pool -> local
+        oh = cols[None, :] == s_aff[:, None]
+        dfc = jnp.where(act_dep, c, zero) - jnp.where(act_arr, c, zero)
+        dum = (jnp.where(act_arr, jnp.where(feas1, l, m), zero)
+               - jnp.where(act_dep, jnp.where(mg_cur, m, l), zero)
+               + jnp.where(act_mig, p, zero))
+        g_aff = group_of[s_aff]
+        goh = gcols[None, :] == g_aff[:, None]
+        dup = (jnp.where(act_arr & feas1, p, zero)
+               - jnp.where(act_dep & ~mg_cur, p, zero)
+               - jnp.where(act_mig, p, zero))
+        fc = fc + oh * dfc[:, None]
+        um = um + oh * dum[:, None]
+        up = up + goh * dup[:, None]
+        aval = jnp.where(place, sel * 2 + jnp.where(feas1, 0, 1), -1)
+        new_val = jnp.where(is_arr, aval,
+                            jnp.where(is_dep, -1,
+                                      jnp.where(act_mig, val | 1, val)))
+        slots = lax.dynamic_update_index_in_dim(
+            slots, new_val.astype(slots.dtype), sl, 0)
+        rejects = rejects + (is_arr & ~feas1 & ~feas2)
+        return (fc, um, up, slots, rejects, sgb, pgb, group_of), None
+
+    def sweep_carry(evs, group_of, fc0, um0, up0, slots0, rej0, sgb, pgb):
+        init = (fc0, um0, up0, slots0, rej0, sgb, pgb, group_of)
+        out, _ = lax.scan(body, init, evs)
+        return out[0], out[1], out[2], out[3], out[4]
+
+    def sweep(evs, group_of, fc0, um0, up0, slots0, sgb, pgb):
+        init = (fc0, um0, up0, slots0,
+                jnp.zeros(sgb.shape[0], jnp.int32), sgb, pgb, group_of)
+        out, _ = lax.scan(body, init, evs)
+        return out[4]
+
+    return sweep_carry if with_carry else sweep
+
+
+#: positions of the packed carry in the ``with_carry`` sweep signature
+#: ``(evs, group_of, fc0, um0, up0, slots0, rej0, sgb, pgb)`` — donated
+#: so the shard-to-shard state is reused in place (device-resident)
+_CARRY_ARGNUMS = (2, 3, 4, 5, 6)
+
+
+def get_sweep(state_dtype: str = "int32", *, with_carry: bool = False,
+              batched: bool = False):
+    """Jitted sweep from the keyed cache, or None when jax is missing.
+
+    ONE cache keyed by ``(state_dtype, with_carry, batched)`` serves
+    every engine — compiled lazily, one jit per key actually used:
+
+    * ``(dt, False, False)`` — monolithic single-trace sweep
+      (``CompiledReplay``).
+    * ``(dt, True, False)`` — shard sweep with carried state
+      (``CompiledReplayStream``); carry args donated.
+    * ``(dt, False, True)`` — vmapped over a leading trace axis with a
+      SHARED all-free initial state (``CompiledReplayBatch``): per-trace
+      event streams and candidate capacities, one scan with a batched
+      carry for K traces.
+    * ``(dt, True, True)`` — vmapped shard sweep with a PER-TRACE carry
+      (``CompiledReplayStreamBatch``): K streams thread one batched
+      carry shard-to-shard; carry args donated.
+    """
+    if not jax_importable():
+        return None
+    key = (state_dtype, with_carry, batched)
+    fn = _SWEEPS.get(key)
+    if fn is None:
+        import jax
+        base = build_sweep(state_dtype, with_carry)
+        if batched and with_carry:
+            base = jax.vmap(base, in_axes=((0, 0, 0, 0, 0, 0), None,
+                                           0, 0, 0, 0, 0, 0, 0))
+        elif batched:
+            base = jax.vmap(base, in_axes=((0, 0, 0, 0, 0, 0), None,
+                                           None, None, None, None, 0, 0))
+        fn = jax.jit(base, donate_argnums=_CARRY_ARGNUMS
+                     if with_carry else ())
+        _SWEEPS[key] = fn
+    return fn
+
+
+def jit_cache_keys() -> list:
+    """Keys compiled so far (introspection for tests/benchmarks)."""
+    return sorted(_SWEEPS)
+
+
+# ------------------------------------------------------------- state rules --
+def state_np_dtype(state_dtype: str):
+    """Host numpy dtype of the packed sweep state."""
+    return np.int16 if state_dtype == "int16" else np.int32
+
+
+def state_sentinel(state_dtype: str) -> int:
+    """Best-fit score sentinel / "infinite" magnitude for the dtype."""
+    return I16_BIG if state_dtype == "int16" else I32_BIG
+
+
+def pick_state_dtype(cores_per_server: float, n_servers: int,
+                     sgb_i: np.ndarray, pgb_i: np.ndarray,
+                     pay_mem_max: float, pay_pool_max: float,
+                     mig_pool_sum: float = 0.0) -> str:
+    """``"int16"`` when every sweep intermediate provably fits int16.
+
+    The admission tests compute at most ``capacity + one payload``
+    (used mem is invariantly <= server_gb, used pool <= pool_gb), so
+    int16 is bit-equivalent to int32 whenever the candidate maxima
+    plus the per-VM payload maxima stay within :data:`I16_SAFE`, the
+    best-fit score sentinel exceeds every free-cores value, and the
+    packed slot values (server * 2 + 1) fit.  MIGRATE-bearing traces
+    need one more bound: the oracle's fallback-migrate quirk returns
+    pool a fallback-placed VM never consumed, driving the used-pool
+    carry NEGATIVE — by at most the pool payload of each compiled
+    MIGRATE event, so the total compiled migrate-event pool
+    (``mig_pool_sum``) bounds the deficit.  When that sum plus the
+    payload headroom fits :data:`I16_SAFE` too, migrate traces pack to
+    int16 like any other; anything else falls back to int32
+    automatically.
+    """
+    if (cores_per_server < I16_BIG
+            and n_servers * 2 + 1 < I16_BIG
+            and len(sgb_i) and sgb_i.min() >= 0 and pgb_i.min() >= 0
+            and sgb_i.max() + pay_mem_max <= I16_SAFE
+            and pgb_i.max() + pay_pool_max <= I16_SAFE
+            and mig_pool_sum + pay_pool_max <= I16_SAFE):
+        return "int16"
+    return "int32"
+
+
+def quantize_capacities(server_gb, pool_gb):
+    """Floor + clip candidate capacities to the int sweep's domain.
+
+    Integral quantities: flooring keeps every admission test identical
+    to the float64 oracle; ±2^30 stands in for "infinite" probes.
+    """
+    sgb_i = np.clip(np.floor(server_gb), -I32_BIG, I32_BIG)
+    pgb_i = np.clip(np.floor(pool_gb), -I32_BIG, I32_BIG)
+    return sgb_i, pgb_i
+
+
+# ---------------------------------------------------------------- padding --
+def pad_up(n: int, granularity: int, minimum: int | None = None) -> int:
+    """``n`` rounded up to a multiple of ``granularity`` (>= minimum)."""
+    m = granularity if minimum is None else minimum
+    return max(m, (n + granularity - 1) // granularity * granularity)
+
+
+def bucket_width(k: int) -> int:
+    """Padded candidate width for a k-candidate chunk (fixed buckets keep
+    XLA recompiles rare; small buckets matter for narrow probe batches)."""
+    for b in BUCKETS:
+        if k <= b:
+            return b
+    return BUCKETS[-1]
+
+
+def candidate_chunks(n: int):
+    """Yield ``(lo, hi, width)`` candidate chunks of at most JAX_CHUNK,
+    each padded to its bucket width."""
+    for lo in range(0, n, JAX_CHUNK):
+        hi = min(lo + JAX_CHUNK, n)
+        yield lo, hi, bucket_width(hi - lo)
+
+
+def lane_capacities(sgb_i: np.ndarray, pgb_i: np.ndarray, lo: int,
+                    hi: int, width: int, np_dt) -> tuple:
+    """Candidate capacities for one chunk, padded to ``width`` lanes.
+
+    Padding lanes replicate the chunk's last candidate (their results
+    are discarded), so padded lanes never hit a different control-flow
+    path.  Accepts 1-D ``(n,)`` (single trace) or 2-D ``(K, n)``
+    (per-trace candidate grids) arrays.
+    """
+    if sgb_i.ndim == 1:
+        sgb = np.full(width, sgb_i[hi - 1], np_dt)
+        pgb = np.full(width, pgb_i[hi - 1], np_dt)
+        sgb[:hi - lo] = sgb_i[lo:hi]
+        pgb[:hi - lo] = pgb_i[lo:hi]
+    else:
+        sgb = np.repeat(sgb_i[:, hi - 1:hi], width, 1).astype(np_dt)
+        pgb = np.repeat(pgb_i[:, hi - 1:hi], width, 1).astype(np_dt)
+        sgb[:, :hi - lo] = sgb_i[:, lo:hi]
+        pgb[:, :hi - lo] = pgb_i[:, lo:hi]
+    return sgb, pgb
+
+
+# ---------------------------------------------------- carry pack / unpack --
+def init_state(width: int, n_servers: int, cores_per_server: float,
+               s_pad: int, g_pad: int, n_slots: int, np_dt,
+               k: int | None = None) -> tuple:
+    """Packed all-free initial sweep state, as host numpy arrays.
+
+    Returns ``(fc0, um0, up0, slots0, rej0)``: free cores per (lane,
+    server) — padded server columns pinned to the negative sentinel so
+    they never win a best-fit — used local GB, used pool GB per (lane,
+    group), the slot array (-1 = empty) and the int32 reject counters.
+    With ``k`` set, every array gains a leading trace axis (the
+    per-trace carry of the batched streaming sweep).  Callers place the
+    arrays with :func:`device_put`; the carry variants then donate them
+    back to the sweep so the state stays device-resident.
+    """
+    neg = state_sentinel(
+        "int16" if np_dt == np.int16 else "int32")
+    fc0 = np.full((width, s_pad), -neg, np_dt)
+    fc0[:, :n_servers] = np_dt(cores_per_server)
+    um0 = np.zeros((width, s_pad), np_dt)
+    up0 = np.zeros((width, g_pad), np_dt)
+    slots0 = np.full((n_slots, width), -1, np_dt)
+    rej0 = np.zeros(width, np.int32)
+    if k is None:
+        return fc0, um0, up0, slots0, rej0
+    return tuple(np.broadcast_to(a, (k,) + a.shape).copy()
+                 for a in (fc0, um0, up0, slots0, rej0))
+
+
+def assign_slots(ev_kind, ev_vm, n_vms: int) -> tuple:
+    """Map each event's VM to a reusable placement slot.
+
+    Slots free on departure, so the per-candidate placement state is
+    sized by PEAK CONCURRENCY rather than trace length.  Returns the
+    per-event slot array and the raw slot count (pad with
+    :func:`pad_up` / :data:`SLOT_PAD`).
+    """
+    slot_of = np.zeros(n_vms, np.int64)
+    ev_slot = np.zeros(len(ev_kind), np.int64)
+    free_slots: list[int] = []
+    next_slot = 0
+    for e in range(len(ev_kind)):
+        v = ev_vm[e]
+        kind = ev_kind[e]
+        if kind == ARRIVE:
+            if free_slots:
+                slot_of[v] = free_slots.pop()
+            else:
+                slot_of[v] = next_slot
+                next_slot += 1
+        ev_slot[e] = slot_of[v]
+        if kind == DEPART:
+            free_slots.append(int(slot_of[v]))
+    return ev_slot, next_slot
+
+
+# -------------------------------------------------------------- placement --
+def device_put(x):
+    """Place a host array on jax's default device, explicitly.
+
+    One shared entry point so every engine uploads event shards and
+    carry state the same way: on CPU this is a no-copy wrap, on
+    GPU/TPU an explicit host->device transfer — which, combined with
+    the donated carry args of the carry sweeps, keeps the packed state
+    device-resident across shards and peak device memory bounded by
+    one shard (batch) plus the carry.
+    """
+    import jax
+    return jax.device_put(x)

@@ -27,7 +27,10 @@ def test_readme_covers_streaming_scale_out():
     for topic in ("iter_trace_chunks", "CompiledReplayStream",
                   "max_events_per_shard",            # memory budget knob
                   "scripts/fetch_azure_trace.py",
-                  "docs/traces.md", "docs/index.md"):
+                  "docs/traces.md", "docs/index.md",
+                  # the composed streaming-batch axis + its benchmark
+                  "CompiledReplayStreamBatch", "sweep_core",
+                  "stream_batch_", "benchmarks/azure_e2e.py"):
         assert topic in text, f"README misses {topic!r}"
     # measured streaming numbers stay cited (events/s at K seeds x
     # N shards come from the perf-smoke artifact)
@@ -40,9 +43,19 @@ def test_replay_engine_doc_exists_and_covers_architecture():
                   "CompiledReplayBatch", "lax.scan",
                   # streaming/sharded-carry design + int16 packing rules
                   "CompiledReplayStream", "max_events_per_shard",
-                  "int16", "carry"):
+                  "int16", "carry",
+                  # the unified sweep core (layer diagram + keyed cache
+                  # + device placement) and the composed batch axis
+                  "sweep_core", "keyed jit cache", "pick_state_dtype",
+                  "CompiledReplayStreamBatch", "device_put", "donated",
+                  "azure_e2e"):
         assert topic.lower() in text.lower(), \
             f"docs/replay_engine.md misses {topic!r}"
+    # the layer diagram names each layer of the stack
+    for layer in ("core/sweep_core.py", "core/replay_engine.py",
+                  "core/cluster_sim.py", "benchmarks/"):
+        assert layer in text, \
+            f"docs/replay_engine.md layer diagram misses {layer!r}"
 
 
 def test_policy_engine_doc_exists_and_covers_architecture():
@@ -87,8 +100,8 @@ def test_docs_index_links_every_docs_page_and_resolves():
     missing = pages - {os.path.basename(p) for p in linked}
     assert not missing, f"docs/index.md misses pages {sorted(missing)}"
     # the index names every core module it maps
-    for mod in ("traces.py", "replay_engine.py", "cluster_sim.py",
-                "control_plane.py"):
+    for mod in ("traces.py", "sweep_core.py", "replay_engine.py",
+                "cluster_sim.py", "control_plane.py"):
         assert mod in text, f"docs/index.md misses module {mod}"
 
 

@@ -78,6 +78,32 @@ def test_stream_chunked_construction_matches_monolithic():
             decide=lambda ch: [dmap[id(v)] for v in ch])
 
 
+def test_stream_chunked_soa_slice_decisions_match_monolithic():
+    """Chunked ingestion fed by PolicyDecisions.slice (the compiled
+    policy SoA, sliced at the running row offset — no VMDecision
+    objects) replays bit-exactly like the monolithic engine."""
+    vms, _ = _trace()
+    order = sorted(range(len(vms)), key=lambda i: vms[i].arrival)
+    svms = [vms[i] for i in order]
+    dec, _ = cluster_sim.policy_decisions(svms, "static",
+                                          static_pool_frac=0.25,
+                                          as_arrays=True)
+    mono = replay_engine.CompiledReplay(svms, dec, CFG).reject_rates(
+        _SERVER, _POOL)
+    off = [0]
+
+    def decide(chunk):
+        lo = off[0]
+        off[0] += len(chunk)
+        return dec.slice(lo, off[0])
+
+    stream = replay_engine.CompiledReplayStream(
+        iter([svms[i:i + 97] for i in range(0, len(svms), 97)]),
+        None, CFG, max_events_per_shard=256, decide=decide)
+    assert stream.n_shards > 1
+    assert stream.reject_rates(_SERVER, _POOL).tolist() == mono.tolist()
+
+
 def test_stream_100k_vm_trace_bit_exact_and_memory_bounded():
     """Acceptance: >=100k VMs, bit-exact vs monolithic, peak event
     tensor bounded by max_events_per_shard."""
@@ -300,11 +326,152 @@ def test_savings_analysis_streams_past_shard_budget():
                 vms, "static", static_pool_frac=0.25)[0], CFG,
             max_events_per_shard=256).peak_pool_demand() + 1e-9
     assert streamed.server_gb <= streamed.baseline_server_gb + 1e-9
-    # batched entry point takes the same path per trace
+    # the batched entry point streams through a CompiledReplayStreamBatch
+    # running the SAME lockstep searches as the monolithic batch — every
+    # probe is bit-exact, so the provisioning results match bitwise
+    mono_rows = cluster_sim.savings_analysis_batched(
+        [vms, vms], CFG, "static", static_pool_frac=0.25)
     cache: dict = {}
     rows = cluster_sim.savings_analysis_batched(
         [vms, vms], CFG, "static", static_pool_frac=0.25, cache=cache,
         max_events_per_shard=256)
-    assert [r.server_gb for r in rows] == [streamed.server_gb] * 2
-    assert [r.pool_group_gb for r in rows] == \
-        [streamed.pool_group_gb] * 2
+    assert isinstance(cache["local_batch"],
+                      replay_engine.CompiledReplayStreamBatch)
+    for got, want in zip(rows, mono_rows):
+        assert got.server_gb == want.server_gb
+        assert got.pool_group_gb == want.pool_group_gb
+        assert got.baseline_server_gb == want.baseline_server_gb
+        assert got.reject_rate == want.reject_rate
+
+
+# ------------------------------------------------ streaming trace batch ---
+def test_stream_batch_bit_exact_vs_independent_streams():
+    """K batched streams == K independent stream runs, bit-for-bit, on
+    both backends and both forced state dtypes (the batched carry sweep
+    reads the keyed jit cache, so int16 engages for batches too)."""
+    vms, _ = _trace()
+    streams, singles = [], []
+    for frac in (0.10, 0.25, 0.40):       # K=3 decision seeds, one trace
+        dec, _ = cluster_sim.policy_decisions(vms, "static",
+                                              static_pool_frac=frac)
+        streams.append(replay_engine.CompiledReplayStream(
+            vms, dec, CFG, max_events_per_shard=256))
+        singles.append(streams[-1].reject_rates(_SERVER, _POOL))
+    batch = replay_engine.CompiledReplayStreamBatch(streams)
+    assert batch.n_shards > 1
+    want = np.stack(singles)
+    assert batch.reject_rates(_SERVER, _POOL).tolist() == want.tolist()
+    assert batch.reject_rates(_SERVER, _POOL,
+                              backend="numpy").tolist() == want.tolist()
+    # int16-eligible candidate block: forced packings agree bitwise
+    srv16 = np.array([768.0, 200.0, 140.0, 60.0])
+    pool16 = np.array([2048.0, 300.0, 0.0, 2048.0])
+    sq = np.broadcast_to(np.floor(srv16), (3, 4))
+    pq = np.broadcast_to(np.floor(pool16), (3, 4))
+    assert batch._pick_state_dtype(sq, pq) == "int16"
+    i16 = batch.reject_rates(srv16, pool16, state_dtype="int16")
+    i32 = batch.reject_rates(srv16, pool16, state_dtype="int32")
+    want16 = np.stack([s.reject_rates(srv16, pool16) for s in streams])
+    assert i16.tolist() == i32.tolist() == want16.tolist()
+    # per-trace (K, n_cand) candidate grids work like the mono batch
+    per = np.stack([_SERVER[:3], _SERVER[1:4], _SERVER[2:5]])
+    perp = np.stack([_POOL[:3], _POOL[1:4], _POOL[2:5]])
+    got = batch.reject_rates(per, perp)
+    for i, s in enumerate(streams):
+        assert got[i].tolist() == s.reject_rates(per[i],
+                                                 perp[i]).tolist()
+
+
+def test_stream_batch_fixture_and_memory_bound():
+    vms = traces.load_trace_file(traces.fixture_trace_path())
+    cfg = cluster_sim.ClusterConfig(n_servers=4, pool_sockets=4,
+                                    gb_per_core=4.0)
+    server = np.array([768.0, 120.0, 60.0, 30.0])
+    pool = np.array([512.0, 64.0, 0.0, 512.0])
+    streams = []
+    for frac in (0.15, 0.30):
+        dec, _ = cluster_sim.policy_decisions(vms, "static",
+                                              static_pool_frac=frac)
+        streams.append(replay_engine.CompiledReplayStream(
+            vms, dec, cfg, max_events_per_shard=256))
+    batch = replay_engine.CompiledReplayStreamBatch(streams)
+    want = np.stack([s.reject_rates(server, pool) for s in streams])
+    assert batch.reject_rates(server, pool).tolist() == want.tolist()
+    assert batch.reject_rates(server, pool,
+                              backend="numpy").tolist() == want.tolist()
+    # THE memory bound: one stacked shard batch of K rows, set by the
+    # shard budget — not by total event count
+    assert batch.shard_pad_events <= 256
+    assert batch.peak_shard_bytes == \
+        batch.k * 6 * 4 * batch.shard_pad_events
+
+
+@pytest.mark.slow
+def test_stream_batch_100k_vm_trace_bit_exact():
+    """Acceptance: >=100k VMs x K rows through the batched carry,
+    bit-exact vs each independent stream, memory bounded."""
+    n = 100_000
+    rng = np.random.default_rng(11)
+    arrival = np.sort(rng.uniform(0, 30 * 86400, n)).round(3)
+    life = rng.integers(1800, 86400, n).astype(float)
+    cores = rng.choice([2, 4, 8], n, p=[.5, .3, .2])
+    mem = cores * rng.choice([2, 4], n)
+    pmu = np.zeros(traces.N_PMU_FEATURES, np.float32)
+    vms = [traces.VM(i, 0, 0, 0, 0, int(cores[i]), float(mem[i]),
+                     float(arrival[i]), float(life[i]), 0.5, 0.0, 0.0,
+                     pmu)
+           for i in range(n)]
+    cfg = cluster_sim.ClusterConfig(n_servers=112, pool_sockets=16,
+                                    gb_per_core=4.75)
+    server = np.array([768.0, 44.0, 30.0])
+    pool = np.array([6144.0, 512.0, 0.0])
+    budget = 32_768
+    streams = []
+    for frac in (0.15, 0.30):
+        dec = [cluster_sim.VMDecision(
+            v.mem_gb - float(np.floor(v.mem_gb * frac)),
+            float(np.floor(v.mem_gb * frac)), False, None) for v in vms]
+        streams.append(replay_engine.CompiledReplayStream(
+            vms, dec, cfg, max_events_per_shard=budget))
+    batch = replay_engine.CompiledReplayStreamBatch(streams)
+    assert batch.n_shards >= 6
+    assert batch.shard_pad_events <= budget
+    assert batch.peak_shard_bytes == 2 * 6 * 4 * batch.shard_pad_events
+    want = np.stack([s.reject_rates(server, pool) for s in streams])
+    assert len(set(want.ravel().tolist())) > 1    # memory actually binds
+    assert batch.reject_rates(server, pool).tolist() == want.tolist()
+
+
+def test_stream_batch_lockstep_search_equivalence():
+    """search_min_multi / pool_search_multi on a streaming batch land on
+    the monolithic batch's exact results: every probe is bit-exact and
+    the reject_cap early exit never flips a feasibility answer."""
+    vms, _ = _trace(horizon=2 * 86400)
+    decs = [cluster_sim.policy_decisions(vms, "static",
+                                         static_pool_frac=f)[0]
+            for f in (0.15, 0.30)]
+    mono = replay_engine.CompiledReplayBatch(
+        [replay_engine.CompiledReplay(vms, d, CFG) for d in decs])
+    sb = replay_engine.CompiledReplayStreamBatch(
+        [replay_engine.CompiledReplayStream(vms, d, CFG,
+                                            max_events_per_shard=256)
+         for d in decs])
+    hi = CFG.cores_per_server * 12.0
+    big_pool = hi * CFG.n_servers
+    tol = mono.reject_rates(hi, big_pool)[:, 0] + 0.005
+    cap = int(np.floor(tol * np.maximum(mono.n_vms, 1)).max())
+    k = mono.k
+    want_min = replay_engine.search_min_multi(
+        lambda g: mono.reject_rates(g, np.full_like(g, big_pool))
+        <= tol[:, None], np.zeros(k), np.full(k, hi))
+    got_min = replay_engine.search_min_multi(
+        lambda g: sb.reject_rates(g, np.full_like(g, big_pool),
+                                  reject_cap=cap)
+        <= tol[:, None], np.zeros(k), np.full(k, hi))
+    assert got_min.tolist() == want_min.tolist()
+    grids = np.linspace(want_min, np.full(k, hi * 0.8), 3, axis=1)
+    want_pool = replay_engine.pool_search_multi(mono, grids, big_pool,
+                                                tol)
+    got_pool = replay_engine.pool_search_multi(sb, grids, big_pool, tol,
+                                               reject_cap=cap)
+    assert got_pool.tolist() == want_pool.tolist()

@@ -1,0 +1,149 @@
+"""The shared sweep core: keyed jit cache (one cache for every engine
+variant — the old module-global batch sweep ignored the state dtype),
+int16/int32 packing rules, padding buckets and carry pack/unpack."""
+import numpy as np
+import pytest
+
+from repro.core import cluster_sim, replay_engine, sweep_core, traces
+
+jax = pytest.importorskip("jax")
+
+
+def test_jit_cache_keyed_by_dtype_carry_and_batch():
+    """One cache serves every (state_dtype, with_carry, batched) variant;
+    lookups are stable (no recompiles for a repeated key) and distinct
+    keys get distinct compiled functions."""
+    seen = {}
+    for dt in ("int16", "int32"):
+        for carry in (False, True):
+            for batched in (False, True):
+                fn = sweep_core.get_sweep(dt, with_carry=carry,
+                                          batched=batched)
+                assert fn is not None
+                assert fn is sweep_core.get_sweep(dt, with_carry=carry,
+                                                  batched=batched)
+                seen[(dt, carry, batched)] = fn
+    assert len(set(map(id, seen.values()))) == 8
+    assert set(seen) <= set(sweep_core.jit_cache_keys())
+
+
+def test_batched_sweep_honors_state_dtype_regression():
+    """Regression: the old ``_JAX_BATCH_SWEEP`` module global was pinned
+    to int32, so batched sweeps never packed to int16 even when every
+    trace was eligible.  The keyed cache compiles one vmapped sweep per
+    dtype: an int16-eligible batch picks int16, the packing is bitwise
+    equivalent to int32, and both match the per-trace engines."""
+    cfg = cluster_sim.ClusterConfig(n_servers=8, pool_sockets=8,
+                                    gb_per_core=4.75)
+    pop = traces.Population(seed=0)
+    n = cluster_sim.arrivals_for_util(cfg, 0.8, 2 * 86400)
+    vms = pop.sample_vms(n, 2 * 86400, seed=5, start_id=10 ** 6)
+    engines = []
+    for frac in (0.15, 0.30):
+        dec, _ = cluster_sim.policy_decisions(vms, "static",
+                                              static_pool_frac=frac)
+        engines.append(replay_engine.CompiledReplay(vms, dec, cfg))
+    batch = replay_engine.CompiledReplayBatch(engines)
+    server = np.array([768.0, 200.0, 140.0, 60.0])
+    pool = np.array([2048.0, 300.0, 0.0, 2048.0])
+    sq = np.broadcast_to(np.floor(server), (2, 4))
+    pq = np.broadcast_to(np.floor(pool), (2, 4))
+    # every row eligible -> the batch packs to int16
+    assert batch._pick_state_dtype(sq, pq) == "int16"
+    i16 = batch.reject_rates(server, pool, state_dtype="int16")
+    i32 = batch.reject_rates(server, pool, state_dtype="int32")
+    auto = batch.reject_rates(server, pool)
+    want = np.stack([e.reject_rates(server, pool) for e in engines])
+    assert i16.tolist() == i32.tolist() == auto.tolist() == want.tolist()
+    assert ("int16", False, True) in sweep_core.jit_cache_keys()
+    # one ineligible row (a huge "infinite pool" probe) forces the
+    # whole vmapped batch back to int32
+    big = np.full((2, 4), float(sweep_core.I32_BIG))
+    assert batch._pick_state_dtype(sq, big) == "int32"
+
+
+def test_pick_state_dtype_boundaries():
+    safe = sweep_core.I16_SAFE
+    kw = dict(cores_per_server=64.0, n_servers=16,
+              pay_mem_max=32.0, pay_pool_max=8.0)
+    sgb = np.array([float(safe - 32)])
+    pgb = np.array([float(safe - 8)])
+    assert sweep_core.pick_state_dtype(
+        sgb_i=sgb, pgb_i=pgb, **kw) == "int16"
+    # one GB past either headroom bound -> int32
+    assert sweep_core.pick_state_dtype(
+        sgb_i=sgb + 1.0, pgb_i=pgb, **kw) == "int32"
+    assert sweep_core.pick_state_dtype(
+        sgb_i=sgb, pgb_i=pgb + 1.0, **kw) == "int32"
+    # negative capacities and empty batches never pack
+    assert sweep_core.pick_state_dtype(
+        sgb_i=np.array([-1.0]), pgb_i=np.array([0.0]), **kw) == "int32"
+    assert sweep_core.pick_state_dtype(
+        sgb_i=np.array([]), pgb_i=np.array([]), **kw) == "int32"
+    # the migrate-event pool deficit counts against the pool headroom
+    assert sweep_core.pick_state_dtype(
+        sgb_i=sgb, pgb_i=np.array([0.0]),
+        mig_pool_sum=float(safe - 8), **kw) == "int16"
+    assert sweep_core.pick_state_dtype(
+        sgb_i=sgb, pgb_i=np.array([0.0]),
+        mig_pool_sum=float(safe - 7), **kw) == "int32"
+
+
+def test_padding_buckets_and_chunks():
+    assert [sweep_core.bucket_width(k) for k in (1, 2, 3, 4, 5, 16, 17,
+                                                 32, 33, 96, 1000)] == \
+        [2, 2, 4, 4, 16, 16, 32, 32, 96, 96, 96]
+    chunks = list(sweep_core.candidate_chunks(200))
+    assert chunks == [(0, 96, 96), (96, 192, 96), (192, 200, 16)]
+    assert sweep_core.pad_up(1, 256) == 256
+    assert sweep_core.pad_up(257, 256) == 512
+    assert sweep_core.pad_up(0, 32) == 32
+    assert sweep_core.pad_up(3, 16, minimum=16) == 16
+
+
+def test_lane_capacities_and_quantize():
+    sgb_i, pgb_i = sweep_core.quantize_capacities(
+        np.array([200.7, np.inf]), np.array([-np.inf, 12.2]))
+    assert sgb_i.tolist() == [200.0, sweep_core.I32_BIG]
+    assert pgb_i.tolist() == [-sweep_core.I32_BIG, 12.0]
+    s, p = sweep_core.lane_capacities(sgb_i, pgb_i, 0, 2, 4, np.int32)
+    # padded lanes replicate the chunk's last candidate
+    assert s.tolist() == [200, sweep_core.I32_BIG, sweep_core.I32_BIG,
+                          sweep_core.I32_BIG]
+    assert p.dtype == np.int32 and p[2] == p[1]
+    s2, p2 = sweep_core.lane_capacities(
+        np.broadcast_to(sgb_i, (3, 2)), np.broadcast_to(pgb_i, (3, 2)),
+        0, 2, 4, np.int16)
+    assert s2.shape == (3, 4) and s2.dtype == np.int16
+
+
+def test_init_state_shapes_and_batch_axis():
+    fc0, um0, up0, slots0, rej0 = sweep_core.init_state(
+        4, n_servers=3, cores_per_server=64.0, s_pad=16, g_pad=16,
+        n_slots=32, np_dt=np.int16)
+    assert fc0.shape == (4, 16) and fc0.dtype == np.int16
+    assert (fc0[:, :3] == 64).all()
+    # padded server columns are pinned to the dtype's negative sentinel
+    assert (fc0[:, 3:] == -sweep_core.I16_BIG).all()
+    assert um0.shape == (4, 16) and not um0.any()
+    assert up0.shape == (4, 16) and slots0.shape == (32, 4)
+    assert (slots0 == -1).all()
+    assert rej0.dtype == np.int32 and rej0.shape == (4,)
+    batched = sweep_core.init_state(
+        4, n_servers=3, cores_per_server=64.0, s_pad=16, g_pad=16,
+        n_slots=32, np_dt=np.int32, k=5)
+    assert [a.shape for a in batched] == \
+        [(5, 4, 16), (5, 4, 16), (5, 4, 16), (5, 32, 4), (5, 4)]
+    # per-trace carries must be distinct writable buffers (donation)
+    assert all(a.flags.writeable and a.flags.c_contiguous
+               for a in batched)
+
+
+def test_assign_slots_reuses_on_departure():
+    A, D = sweep_core.ARRIVE, sweep_core.DEPART
+    kinds = [A, A, D, A, D, D]
+    vmx = [0, 1, 0, 2, 2, 1]
+    ev_slot, n_slots = sweep_core.assign_slots(kinds, vmx, 3)
+    # vm2 arrives after vm0 departed: slot 0 is reused
+    assert ev_slot.tolist() == [0, 1, 0, 0, 0, 1]
+    assert n_slots == 2
