@@ -68,11 +68,25 @@ def synth_dump(path: str, n_vms: int = DUMP_VMS,
 
 
 def e2e_dump_bench(path: str, cfg, budget: int = BUDGET,
-                   chunk_vms: int = 8192, n_cand: int = 8) -> dict:
-    """Dump -> chunked ingest -> SoA decisions -> streaming sweep."""
+                   chunk_vms: int = 8192, n_cand: int = 8,
+                   max_bad_rows: int = 0, io_retries: int = 0,
+                   checkpoint=None) -> dict:
+    """Dump -> chunked ingest -> SoA decisions -> streaming sweep.
+
+    ``max_bad_rows``/``io_retries`` switch on fault-hardened ingestion
+    (malformed-row quarantine + transient-IO retry; the
+    ``IngestReport`` summary lands in the returned dict).
+    ``checkpoint`` (a :class:`replay_engine.CheckpointSpec`) runs one
+    resumable probe sweep before the timed ones — with
+    ``kill_after_shards`` set it raises ``SweepInterrupted`` after
+    snapshotting, and a ``--resume`` rerun finishes bit-exact.
+    """
+    hardened = max_bad_rows > 0 or io_retries > 0
+    report = (traces.IngestReport(max_bad_rows=max_bad_rows)
+              if hardened else None)
     t0 = time.perf_counter()
-    vms = [v for chunk in traces.iter_trace_chunks(path,
-                                                   chunk_vms=chunk_vms)
+    vms = [v for chunk in traces.iter_trace_chunks(
+        path, chunk_vms=chunk_vms, io_retries=io_retries, report=report)
            for v in chunk]
     t_ingest = time.perf_counter() - t0
     t1 = time.perf_counter()
@@ -91,19 +105,40 @@ def e2e_dump_bench(path: str, cfg, budget: int = BUDGET,
         return dec.slice(lo, off[0])
 
     t2 = time.perf_counter()
+    replay_report = (traces.IngestReport(max_bad_rows=max_bad_rows)
+                     if hardened else None)
     stream = replay_engine.CompiledReplayStream(
-        traces.iter_trace_chunks(path, chunk_vms=chunk_vms), None, cfg,
-        max_events_per_shard=budget, decide=decide)
+        traces.iter_trace_chunks(path, chunk_vms=chunk_vms,
+                                 io_retries=io_retries,
+                                 report=replay_report),
+        None, cfg, max_events_per_shard=budget, decide=decide)
     t_compile = time.perf_counter() - t2
     hi = cfg.cores_per_server * 6.0
     probe_s = np.linspace(hi * 0.4, hi, n_cand)
     probe_p = np.linspace(0.0, 2.0 * hi, n_cand)
+    ckpt_info = None
+    if checkpoint is not None:
+        # the resumable sweep: with kill_after_shards this raises
+        # SweepInterrupted after snapshotting (simulated preemption)
+        rates = stream.reject_rates(probe_s, probe_p,
+                                    checkpoint=checkpoint)
+        ckpt_info = {"path": checkpoint.path,
+                     "resumed": bool(checkpoint.resume),
+                     "every_shards": int(checkpoint.every_shards),
+                     "rates": np.asarray(rates).round(6).tolist()}
     stream.reject_rates(probe_s, probe_p)            # warm the compile
     t3 = time.perf_counter()
     stream.reject_rates(probe_s, probe_p)
     t_sweep = time.perf_counter() - t3
     wall = time.perf_counter() - t0
+    if report is not None and replay_report is not None:
+        # one ledger per pass (the budget is per pass; both passes see
+        # the same rows) — surface the ingest pass + total IO retries
+        report.io_retries += replay_report.io_retries
     return {
+        "ingest_report": report.summary() if report is not None
+        else None,
+        "checkpoint": ckpt_info,
         "n_vms": int(stream.n_vms),
         "n_events": int(stream.n_events),
         "n_shards": int(stream.n_shards),
@@ -169,7 +204,9 @@ def stream_batch_bench(vms_list, cfg, budget: int = BUDGET,
     }
 
 
-def run(quick: bool = True, trace_file: str | None = None) -> dict:
+def run(quick: bool = True, trace_file: str | None = None,
+        max_bad_rows: int = 0, io_retries: int = 0,
+        checkpoint=None) -> dict:
     print("== Azure e2e: chunked ingest + batched streaming replay ==")
     cfg = cluster_sim.ClusterConfig(n_servers=16, pool_sockets=16,
                                     gb_per_core=4.75)
@@ -183,10 +220,29 @@ def run(quick: bool = True, trace_file: str | None = None) -> dict:
             label = f"stand-in dump ({n_dump} VMs)"
         else:
             path, label = trace_file, trace_file
-        e2e = e2e_dump_bench(path, cfg, budget=4096 if quick else 65536)
+        try:
+            e2e = e2e_dump_bench(path, cfg,
+                                 budget=4096 if quick else 65536,
+                                 max_bad_rows=max_bad_rows,
+                                 io_retries=io_retries,
+                                 checkpoint=checkpoint)
+        except replay_engine.SweepInterrupted as e:
+            print(f"  sweep interrupted after {e.shards_done} shard "
+                  f"sweeps; checkpoint at {e.path} — rerun with "
+                  f"--resume to finish bit-exact")
+            raise
     finally:
         if tmp is not None:
             shutil.rmtree(tmp, ignore_errors=True)
+    if e2e["ingest_report"] is not None:
+        r = e2e["ingest_report"]
+        print(f"  hardened ingest: {r['n_quarantined']} rows "
+              f"quarantined, {r['io_retries']} IO retries")
+    if e2e["checkpoint"] is not None:
+        c = e2e["checkpoint"]
+        print(f"  checkpointed sweep "
+              f"({'resumed' if c['resumed'] else 'fresh'}) -> "
+              f"{len(c['rates'])} candidate rates via {c['path']}")
     print(f"  [{label}] ingest {e2e['n_vms']} VMs in {e2e['ingest_s']}s "
           f"({e2e['ingest_vms_per_sec']:.0f} VMs/s), "
           f"{e2e['n_events']} events -> {e2e['n_shards']} shards "
@@ -226,8 +282,34 @@ def main(argv=None):
                     help="a fetch_azure_trace.py dump (CSV/CSV.gz); "
                          "default: generate a synthetic stand-in")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--max-bad-rows", type=int, default=0,
+                    help="quarantine up to N malformed rows per ingest "
+                         "pass instead of aborting (default strict)")
+    ap.add_argument("--io-retries", type=int, default=0,
+                    help="retry transient IO errors up to N consecutive "
+                         "times with exponential backoff")
+    ap.add_argument("--checkpoint", default=None, metavar="PATH",
+                    help="snapshot the probe sweep to PATH every "
+                         "--checkpoint-every shard sweeps")
+    ap.add_argument("--checkpoint-every", type=int, default=8)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume the probe sweep from --checkpoint "
+                         "(bit-exact vs an uninterrupted run)")
+    ap.add_argument("--kill-after", type=int, default=None,
+                    metavar="SHARDS",
+                    help="chaos hook: kill the checkpointed sweep after "
+                         "N shard sweeps (exercises --resume)")
     args = ap.parse_args(argv)
-    run(quick=not args.full, trace_file=args.trace_file)
+    ckpt = None
+    if args.checkpoint is not None:
+        ckpt = replay_engine.CheckpointSpec(
+            args.checkpoint, every_shards=args.checkpoint_every,
+            resume=args.resume, kill_after_shards=args.kill_after)
+    elif args.resume or args.kill_after is not None:
+        ap.error("--resume/--kill-after need --checkpoint PATH")
+    run(quick=not args.full, trace_file=args.trace_file,
+        max_bad_rows=args.max_bad_rows, io_retries=args.io_retries,
+        checkpoint=ckpt)
 
 
 if __name__ == "__main__":

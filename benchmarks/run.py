@@ -29,6 +29,7 @@ MODULES = [
     "benchmarks.fig18_um_model",
     "benchmarks.fig20_combined",
     "benchmarks.fig21_e2e",
+    "benchmarks.fig_availability",
     "benchmarks.kernel_bench",
     "benchmarks.roofline",
 ]

@@ -39,6 +39,7 @@ import gzip
 import os
 import sqlite3
 import sys
+import time
 import urllib.request
 
 # From the AzurePublicDataset repo (AzureTracesForPacking2020.md); the
@@ -46,6 +47,9 @@ import urllib.request
 DEFAULT_URL = ("https://azurepublicdatasettraces.blob.core.windows.net/"
                "azurepublicdatasetv2/trace_data/"
                "packing_trace_zone_a_v1.sqlite")
+
+#: injectable for tests (no real sleeping in the flaky-opener test)
+_sleep = time.sleep
 
 #: vm join vmType, one row per VM; vmType repeats per candidate machine,
 #: so take the max normalized core/memory per type (the shape the
@@ -60,24 +64,87 @@ ORDER BY v.starttime
 """
 
 
-def download(url: str, dest: str, quiet: bool = False) -> str:
-    """Fetch ``url`` to ``dest`` (skipped when the file already exists)."""
+def _total_bytes(resp, done: int) -> int:
+    """Total download size from the response headers (0 = unknown).
+
+    A 206 carries ``Content-Range: bytes a-b/total``; a 200 carries
+    ``Content-Length`` for the whole object (``done`` is 0 then).
+    """
+    headers = getattr(resp, "headers", None)
+    if headers is None:
+        return 0
+    crange = headers.get("Content-Range", "")
+    if "/" in crange:
+        try:
+            return int(crange.rsplit("/", 1)[1])
+        except ValueError:
+            pass
+    try:
+        return done + int(headers.get("Content-Length", 0))
+    except (TypeError, ValueError):
+        return 0
+
+
+def download(url: str, dest: str, quiet: bool = False, retries: int = 5,
+             backoff_s: float = 2.0, opener=None,
+             chunk_bytes: int = 1 << 20) -> str:
+    """Fetch ``url`` to ``dest``, resumable and retrying.
+
+    The blob is ~2 GB, so a dropped connection at 90% must not restart
+    from zero: progress persists in ``dest + ".part"`` across attempts
+    AND across process runs, and every retry requests only the missing
+    suffix via an HTTP ``Range`` header (Azure blob storage serves
+    ranged GETs).  ``retries`` bounds CONSECUTIVE failed attempts —
+    any attempt that lands new bytes resets the budget — with
+    exponential backoff (``backoff_s * 2**attempt``, injectable
+    :data:`_sleep`).  A server that ignores the ``Range`` header
+    (status 200 instead of 206) restarts the partial cleanly.
+    ``opener`` defaults to ``urllib.request.urlopen`` and is
+    injectable for tests.  Skipped entirely when ``dest`` exists.
+    """
     if os.path.exists(dest):
         if not quiet:
             print(f"reusing existing {dest}")
         return dest
     if not quiet:
         print(f"downloading {url} -> {dest} (this is a ~2 GB file)")
-
-    def report(blocks, bsize, total):
-        if quiet or total <= 0:
-            return
-        done = blocks * bsize * 100 // total
-        sys.stdout.write(f"\r  {min(done, 100)}%")
-        sys.stdout.flush()
-
+    opener = opener or urllib.request.urlopen
     tmp = dest + ".part"
-    urllib.request.urlretrieve(url, tmp, reporthook=report)
+    attempt = 0
+    while True:
+        done = os.path.getsize(tmp) if os.path.exists(tmp) else 0
+        req = urllib.request.Request(url)
+        if done > 0:
+            req.add_header("Range", f"bytes={done}-")
+        got = 0
+        try:
+            with opener(req) as resp:
+                if done > 0 and getattr(resp, "status", 200) != 206:
+                    done = 0              # Range ignored: full restart
+                total = _total_bytes(resp, done)
+                with open(tmp, "ab" if done > 0 else "wb") as f:
+                    while True:
+                        buf = resp.read(chunk_bytes)
+                        if not buf:
+                            break
+                        f.write(buf)
+                        done += len(buf)
+                        got += len(buf)
+                        if not quiet and total > 0:
+                            sys.stdout.write(
+                                f"\r  {min(done * 100 // total, 100)}%")
+                            sys.stdout.flush()
+            if total > 0 and done < total:
+                raise OSError(f"connection closed early at byte {done} "
+                              f"of {total}")
+            break
+        except OSError:
+            if got > 0:
+                attempt = 0               # progress resets the budget
+            attempt += 1
+            if attempt > retries:
+                raise
+            _sleep(backoff_s * 2 ** (attempt - 1))
     os.replace(tmp, dest)
     if not quiet:
         print()

@@ -120,3 +120,9 @@ class PoolManager:
 
     def fail_pool_manager(self) -> None:
         self.alive = False
+
+    def recover_pool_manager(self) -> None:
+        """PM restart: reassignment resumes.  Nothing to rebuild —
+        grants live on the EMCs and the datapath never stopped serving
+        them while the PM was down (Pond §4.2)."""
+        self.alive = True

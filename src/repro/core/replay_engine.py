@@ -110,6 +110,8 @@ orchestration layers over that shared core (see
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import os
 import time
 
 import numpy as np
@@ -120,6 +122,7 @@ from repro.core import sweep_core
 ARRIVE, DEPART, MIGRATE = (sweep_core.ARRIVE, sweep_core.DEPART,
                            sweep_core.MIGRATE)
 PAD = sweep_core.PAD  # no-op event kind padding the XLA event stream
+FAIL, RECOVER = sweep_core.FAIL, sweep_core.RECOVER  # §4.2 domain events
 MAX_WAVES = 12        # state-rebuild budget per sweep (numpy backend)
 MAX_TRAJS = 16        # per-server-size trajectories per sweep
 SNAP = 64             # snapshot stride (events) in trajectories
@@ -230,11 +233,46 @@ class _Trajectory:
     mig_idx: np.ndarray           # (V,) event index the flag was set
 
 
+@dataclasses.dataclass
+class AvailabilityResult:
+    """Failure-priced sweep outcome, per candidate (and per trace for
+    the batched engines: every array gains a leading K axis).
+
+    ``reject_rate`` includes the failure model (down domains grant no
+    pool slices); the counters are totals over the schedule's FAIL
+    events.  ``affected_per_failure`` is the per-failure distribution
+    ``(n_failures, n_cand)`` (or a per-trace list for batches), None
+    when not requested.
+    """
+
+    reject_rate: np.ndarray
+    affected: np.ndarray
+    killed: np.ndarray
+    remigrated: np.ndarray
+    lost_vm_minutes: np.ndarray
+    n_failures: "int | np.ndarray"
+    affected_per_failure: "np.ndarray | list | None"
+    mitigation: str
+
+    @property
+    def remigration_success_rate(self) -> np.ndarray:
+        """remigrated / affected, defined as 1.0 where nothing was
+        affected (no failure touched a pooled VM)."""
+        aff = np.asarray(self.affected, float)
+        rem = np.asarray(self.remigrated, float)
+        return np.where(aff > 0, rem / np.maximum(aff, 1), 1.0)
+
+
 class CompiledReplay:
     """One ``(vms, decisions)`` pair compiled for batched replay sweeps."""
 
-    def __init__(self, vms, decisions, cfg):
+    def __init__(self, vms, decisions, cfg, failure_schedule=None):
         self.cfg = cfg
+        # references kept for the scalar-oracle availability fallback
+        # (no copies, no materialization; the compiled arrays below are
+        # the sweep's actual inputs)
+        self._vms = vms
+        self._decisions_src = decisions
         self.n_vms = n = len(vms)
         self.n_servers = n_srv = cfg.n_servers
         self.n_groups = cfg.n_groups
@@ -293,18 +331,42 @@ class CompiledReplay:
         # quirk: bounds the negative side of the int16 pool carry
         # (see _pick_state_dtype)
         self._mig_pool_sum = float(pool_a[mig_keep].sum())
-        times[2::3] = np.fromiter((vm.departure for vm in vms), float, n)
+        dep_a = np.fromiter((vm.departure for vm in vms), float, n)
+        times[2::3] = dep_a
         kinds = np.tile(np.array([ARRIVE, MIGRATE, DEPART], np.int64), n)
         vmidx = np.repeat(np.arange(n, dtype=np.int64), 3)
         keep = ~np.isnan(times)
         times, kinds, vmidx = times[keep], kinds[keep], vmidx[keep]
+        # failure-domain events (Pond §4.2) merge into the same sorted
+        # stream: FAIL/RECOVER kinds sort AFTER same-time VM events and
+        # are no-ops in the plain sweep (reject_rates stays happy-path);
+        # the failure sweep (availability()) resolves the blast radius
+        doms = np.full(len(times), -1, np.int64)
+        self.failure_schedule = failure_schedule
+        if failure_schedule is not None and len(failure_schedule):
+            if failure_schedule.max_domain() >= self.n_groups:
+                raise ValueError(
+                    f"failure domain {failure_schedule.max_domain()} out "
+                    f"of range for {self.n_groups} pool groups")
+            fk = np.where(failure_schedule.recovers,
+                          sweep_core.RECOVER, sweep_core.FAIL)
+            times = np.concatenate([times, failure_schedule.times])
+            kinds = np.concatenate([kinds, fk])
+            vmidx = np.concatenate(
+                [vmidx, np.zeros(len(failure_schedule), np.int64)])
+            doms = np.concatenate([doms, failure_schedule.domains])
         order = np.lexsort((kinds, times))
         self.ev_time = times[order]
         self._ev_kind = kinds[order].tolist()
         self._ev_vm = vmidx[order].tolist()
+        self._ev_dom = doms[order]
+        #: per-VM departure minute (int32): the availability metrics'
+        #: VM-minutes-lost clock, quantized exactly like the oracle
+        self._dep_min = np.floor(dep_a / 60.0).astype(np.int32)
         self.n_events = len(self._ev_kind)
         self._trajs: dict[float | None, _Trajectory] = {}
         self._jax_ev = None
+        self._jax_ev_fail = None
         self._peak_pool = None
 
     def peak_pool_demand(self) -> float:
@@ -372,6 +434,151 @@ class CompiledReplay:
         return sweep_core.pick_state_dtype(
             self.cores_per_server, self.n_servers, sgb_i, pgb_i,
             self._pay_mem_max, self._pay_pool_max, self._mig_pool_sum)
+
+    def _jax_events_fail(self):
+        """The plain event tensors plus the failure sweep's two extra
+        int32 streams: ``x`` (departure minute at ARRIVE, failure minute
+        at FAIL — the VM-minutes-lost clock) and ``dmn`` (the failure
+        domain at FAIL/RECOVER, -1 otherwise)."""
+        if self._jax_ev_fail is not None:
+            return self._jax_ev_fail
+        evs, group_of, n_slots, s_pad, g_pad = self._jax_events()
+        e_pad = int(np.asarray(evs[0]).shape[0])
+        kind = np.asarray(self._ev_kind)
+        x = np.zeros(e_pad, np.int32)
+        dmn = np.full(e_pad, -1, np.int32)
+        n_ev = self.n_events
+        vmx = np.asarray(self._ev_vm)
+        x[:n_ev] = np.where(
+            kind == ARRIVE, self._dep_min[vmx],
+            np.where(kind == FAIL,
+                     np.floor(self.ev_time / 60.0).astype(np.int32), 0))
+        dmn[:n_ev] = self._ev_dom
+        evs8 = evs + (sweep_core.device_put(x),
+                      sweep_core.device_put(dmn))
+        self._jax_ev_fail = (evs8, group_of, n_slots, s_pad, g_pad)
+        return self._jax_ev_fail
+
+    def availability(self, server_gb, pool_gb,
+                     mitigation: str = "remigrate",
+                     backend: str = "auto",
+                     state_dtype: str | None = None,
+                     per_failure: bool = True) -> "AvailabilityResult":
+        """Price the merged failure schedule: reject rates WITH the
+        §4.2 failure model, plus availability metrics, per candidate.
+
+        Requires the engine to have been built with
+        ``failure_schedule=``.  Broadcasting matches
+        :meth:`reject_rates`.  ``mitigation`` picks the blast-radius
+        policy (``"remigrate"`` pulls affected pool into host-local
+        DRAM where the server's free memory allows, all-or-nothing per
+        server; ``"kill"`` terminates every affected VM).  The jax
+        backend resolves failures inside the same scan step
+        (``sweep_core.build_fail_sweep``); ``backend="oracle"`` (also
+        the non-jax/non-integral fallback) loops the scalar
+        blast-radius oracle ``cluster_sim.replay_with_failures`` —
+        bit-exact either way (``tests/test_failures.py``).
+
+        Returns an :class:`AvailabilityResult`; with
+        ``per_failure=True`` it includes the ``(n_failures, n_cand)``
+        VMs-affected-per-failure distribution.
+        """
+        if self.failure_schedule is None:
+            raise ValueError(
+                "availability() needs a failure_schedule= at compile "
+                "time (see runtime.fault.FailureSchedule)")
+        server_gb = np.atleast_1d(np.asarray(server_gb, float))
+        pool_gb = np.atleast_1d(np.asarray(pool_gb, float))
+        server_gb, pool_gb = np.broadcast_arrays(server_gb, pool_gb)
+        t0 = time.perf_counter()
+        if backend == "auto":
+            backend = "jax" if (self._exact and
+                                sweep_core.get_fail_sweep()) else "oracle"
+        if backend == "jax":
+            res = self._availability_jax(server_gb, pool_gb, mitigation,
+                                         state_dtype, per_failure)
+        else:
+            res = self._availability_oracle(server_gb, pool_gb,
+                                            mitigation, per_failure)
+        _STATS.sweeps += 1
+        _STATS.events += self.n_events
+        _STATS.candidate_events += self.n_events * len(server_gb)
+        _STATS.wall_s += time.perf_counter() - t0
+        return res
+
+    def _availability_jax(self, server_gb, pool_gb, mitigation,
+                          state_dtype, per_failure):
+        evs, group_of, n_slots, s_pad, g_pad = self._jax_events_fail()
+        n0 = len(server_gb)
+        sgb_i, pgb_i = sweep_core.quantize_capacities(server_gb, pool_gb)
+        dt_name = state_dtype or self._pick_state_dtype(sgb_i, pgb_i)
+        np_dt = sweep_core.state_np_dtype(dt_name)
+        sweep = sweep_core.get_fail_sweep(dt_name, mitigation,
+                                          with_dist=per_failure)
+        kind = np.asarray(self._ev_kind)
+        fail_pos = np.flatnonzero(kind == FAIL)
+        out = {k: np.empty(n0, np.int64) for k in
+               ("rejects", "affected", "killed", "remig", "lost")}
+        dist = (np.empty((len(fail_pos), n0), np.int64)
+                if per_failure else None)
+        for lo, hi, width in sweep_core.candidate_chunks(n0):
+            sgb, pgb = sweep_core.lane_capacities(sgb_i, pgb_i, lo, hi,
+                                                  width, np_dt)
+            fc0, um0, up0, slots0, _ = sweep_core.init_state(
+                width, self.n_servers, self.cores_per_server, s_pad,
+                g_pad, n_slots, np_dt)
+            fstate = sweep_core.init_fail_state(n_slots, g_pad)
+            res = sweep(evs, group_of,
+                        *(sweep_core.device_put(a) for a in
+                          (fc0, um0, up0, slots0) + fstate),
+                        sweep_core.device_put(sgb),
+                        sweep_core.device_put(pgb))
+            for key, a in zip(("rejects", "affected", "killed", "remig",
+                               "lost"), res[:5]):
+                out[key][lo:hi] = np.asarray(a)[:hi - lo]
+            if per_failure:
+                dist[:, lo:hi] = \
+                    np.asarray(res[5])[fail_pos, :hi - lo]
+        return AvailabilityResult(
+            reject_rate=out["rejects"] / max(self.n_vms, 1),
+            affected=out["affected"], killed=out["killed"],
+            remigrated=out["remig"], lost_vm_minutes=out["lost"],
+            n_failures=len(fail_pos), affected_per_failure=dist,
+            mitigation=mitigation)
+
+    def _availability_oracle(self, server_gb, pool_gb, mitigation,
+                             per_failure):
+        """Scalar-oracle fallback (no jax / non-integral decisions):
+        one ``cluster_sim.replay_with_failures`` call per candidate."""
+        from repro.core import cluster_sim  # deferred: cyclic at import
+        decisions = (self._decisions_src.as_vmdecisions()
+                     if hasattr(self._decisions_src, "as_vmdecisions")
+                     else self._decisions_src)
+        n0 = len(server_gb)
+        out = {k: np.empty(n0, np.int64) for k in
+               ("affected", "killed", "remig", "lost")}
+        rates = np.empty(n0)
+        dist = None
+        for i in range(n0):
+            r = cluster_sim.replay_with_failures(
+                self._vms, decisions, self.cfg,
+                float(server_gb[i]), float(pool_gb[i]),
+                self.failure_schedule, mitigation)
+            if per_failure and dist is None:
+                dist = np.empty((r.n_failures, n0), np.int64)
+            rates[i] = r.reject_rate
+            out["affected"][i] = r.affected
+            out["killed"][i] = r.killed
+            out["remig"][i] = r.remigrated
+            out["lost"][i] = r.lost_vm_minutes
+            if per_failure:
+                dist[:, i] = r.affected_per_failure
+            n_failures = r.n_failures
+        return AvailabilityResult(
+            reject_rate=rates, affected=out["affected"],
+            killed=out["killed"], remigrated=out["remig"],
+            lost_vm_minutes=out["lost"], n_failures=n_failures,
+            affected_per_failure=dist, mitigation=mitigation)
 
     def _reject_rates_jax(self, server_gb, pool_gb,
                           state_dtype: str | None = None) -> np.ndarray:
@@ -503,7 +710,7 @@ class CompiledReplay:
                 else:
                     um[s] -= local_of[v]
                     up[group_of[s]] -= pool_of[v]
-            else:                               # MIGRATE: pool -> local if
+            elif kind == MIGRATE:               # MIGRATE: pool -> local if
                 if not live[v] or mig[v]:       # the host has local room
                     if live[v] and mig[v]:
                         # oracle quirk: a fallback-placed VM can still be
@@ -703,6 +910,9 @@ class CompiledReplay:
             cand_events += len(alive)
             v = ev_vm[e]
             kind = ev_kind[e]
+            if kind > MIGRATE:      # FAIL/RECOVER: happy-path no-ops
+                e += 1              # (availability() prices them)
+                continue
             if kind == DEPART:
                 if v in clean:                   # all rows placed, none
                     s = placed[:, v]             # migrated
@@ -833,7 +1043,7 @@ def _np_stream_sweep(shard, gcols, free, placed, migrated, rejects):
     cidx = np.arange(free.shape[0])
     for e in range(len(kind)):
         k = kind[e]
-        if k == PAD:
+        if k >= PAD:                 # PAD and FAIL/RECOVER: no-ops here
             continue
         sl = slot[e]
         if k == DEPART:
@@ -896,6 +1106,117 @@ def _np_stream_sweep(shard, gcols, free, placed, migrated, rejects):
                 placed[rows2, sl] = sv2
                 migrated[rows2, sl] = True       # departs as all-local
             rejects[bad[inf2]] += 1
+
+
+# ------------------------------------------------- checkpoint / resume ----
+class SweepInterrupted(RuntimeError):
+    """A streaming sweep was killed by the chaos hook
+    (``CheckpointSpec.kill_after_shards``) after writing its
+    checkpoint.  Carries the checkpoint path and the number of shard
+    sweeps completed before the kill."""
+
+    def __init__(self, path: str, shards_done: int):
+        self.path, self.shards_done = path, shards_done
+        super().__init__(
+            f"sweep interrupted after {shards_done} shard sweeps "
+            f"(checkpoint at {path})")
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointSpec:
+    """Checkpoint/resume policy for the streaming sweeps.
+
+    Passed as ``checkpoint=`` to
+    :meth:`CompiledReplayStream.reject_rates` /
+    :meth:`CompiledReplayStreamBatch.reject_rates`: every
+    ``every_shards`` shard sweeps the engine snapshots the packed
+    carry, the shard cursor and the candidate-chunk schedule position
+    to ``path`` (one ``.npz``, written atomically: tmp file +
+    ``os.replace``, so a kill mid-write never corrupts the previous
+    snapshot).  With ``resume=True`` an existing checkpoint whose
+    fingerprint matches the sweep (backend, state dtype, event/shard
+    counts, candidate grid bytes, reject cap) is loaded first and the
+    sweep fast-forwards — completed candidate chunks keep their
+    counts, the current chunk restarts from the checkpointed shard
+    with the restored carry.  Resumed results are BIT-IDENTICAL to an
+    uninterrupted sweep (``tests/test_checkpoint_stream.py`` kills at
+    shard k
+    and proves it, both backends, both state dtypes); a fingerprint
+    mismatch raises ``ValueError`` rather than silently pricing a
+    different sweep.
+
+    ``kill_after_shards`` is the chaos hook: after that many shard
+    sweeps the engine force-writes a snapshot and raises
+    :class:`SweepInterrupted` (how the chaos tests and
+    ``benchmarks/azure_e2e.py --kill-after`` simulate preemption).
+    """
+
+    path: str
+    every_shards: int = 8
+    resume: bool = False
+    kill_after_shards: int | None = None
+
+
+def _sweep_fingerprint(backend: str, dt_name: str, n_events, n_shards,
+                       n_vms, reject_cap, server_gb, pool_gb) -> str:
+    """Identity of one streaming sweep: resuming under any other
+    configuration would silently produce wrong counts, so the
+    checkpoint refuses to load when this differs."""
+    h = hashlib.sha256()
+    h.update(repr((backend, dt_name, np.asarray(n_events).tolist(),
+                   np.asarray(n_shards).tolist(),
+                   np.asarray(n_vms).tolist(), reject_cap)).encode())
+    h.update(np.ascontiguousarray(np.asarray(server_gb, float)).tobytes())
+    h.update(np.ascontiguousarray(np.asarray(pool_gb, float)).tobytes())
+    return h.hexdigest()
+
+
+class _CheckpointIO:
+    """Snapshot cadence + atomic npz IO + the chaos kill hook for one
+    streaming sweep (shared by the jax and numpy shard loops)."""
+
+    def __init__(self, spec: CheckpointSpec, fingerprint: str):
+        self.spec = spec
+        self.fp = fingerprint
+        self.shards_done = 0
+
+    def load(self) -> dict | None:
+        if not (self.spec.resume and os.path.exists(self.spec.path)):
+            return None
+        with np.load(self.spec.path, allow_pickle=False) as z:
+            state = {key: z[key] for key in z.files}
+        got = str(state.pop("fingerprint"))
+        if got != self.fp:
+            raise ValueError(
+                f"checkpoint {self.spec.path} belongs to a different "
+                "sweep (backend/state dtype/trace/candidates/reject cap "
+                "changed); delete it or rerun the original sweep")
+        return state
+
+    def save(self, state: dict) -> None:
+        tmp = self.spec.path + ".tmp.npz"
+        np.savez(tmp, fingerprint=self.fp, **state)
+        os.replace(tmp, self.spec.path)
+
+    def tick(self, state_fn) -> None:
+        """After each shard sweep: snapshot on cadence; then, if the
+        chaos hook fires, force a snapshot and raise."""
+        self.shards_done += 1
+        kill = (self.spec.kill_after_shards is not None
+                and self.shards_done >= self.spec.kill_after_shards)
+        due = (self.spec.every_shards > 0
+               and self.shards_done % self.spec.every_shards == 0)
+        if due or kill:
+            self.save(state_fn())
+        if kill:
+            raise SweepInterrupted(self.spec.path, self.shards_done)
+
+    def done(self) -> None:
+        """Completed sweeps delete their checkpoint: a later resume of
+        a finished run recomputes from scratch instead of loading a
+        stale cursor."""
+        if os.path.exists(self.spec.path):
+            os.remove(self.spec.path)
 
 
 class CompiledReplayStream:
@@ -1181,7 +1502,9 @@ class CompiledReplayStream:
     def reject_rates(self, server_gb, pool_gb,
                      reject_cap: int | None = None,
                      backend: str = "auto",
-                     state_dtype: str | None = None) -> np.ndarray:
+                     state_dtype: str | None = None,
+                     checkpoint: "CheckpointSpec | None" = None
+                     ) -> np.ndarray:
         """Reject fraction per candidate, streamed shard by shard.
 
         Same contract and broadcasting as
@@ -1194,6 +1517,13 @@ class CompiledReplayStream:
         count so far — a lower bound at or above
         ``(reject_cap + 1) / n_vms``, satisfying the same
         feasibility-test contract as the other backends).
+
+        ``checkpoint`` (a :class:`CheckpointSpec`) snapshots the packed
+        carry + cursors to disk every N shard sweeps and, with
+        ``resume=True``, fast-forwards an interrupted sweep — resumed
+        results are bit-identical to an uninterrupted run, both
+        backends.  Under ``POND_DEBUG_INVARIANTS=1`` the carry is
+        verified after every shard (``sweep_core.check_invariants``).
 
         Usage::
 
@@ -1215,17 +1545,38 @@ class CompiledReplayStream:
                 else "numpy"
         if backend == "jax":
             rejects, cand_events = self._sweep_jax(
-                server_gb, pool_gb, reject_cap, state_dtype)
+                server_gb, pool_gb, reject_cap, state_dtype, checkpoint)
         else:
             rejects, cand_events = self._sweep_numpy(
-                server_gb, pool_gb, reject_cap)
+                server_gb, pool_gb, reject_cap, checkpoint)
         _STATS.sweeps += 1
         _STATS.events += self.n_events
         _STATS.candidate_events += cand_events
         _STATS.wall_s += time.perf_counter() - t0
         return rejects / denom
 
-    def _sweep_jax(self, server_gb, pool_gb, reject_cap, state_dtype):
+    def _checkpoint_io(self, backend, dt_name, reject_cap, server_gb,
+                       pool_gb, spec):
+        if spec is None:
+            return None, None
+        io = _CheckpointIO(spec, _sweep_fingerprint(
+            backend, dt_name, self.n_events, self.n_shards, self.n_vms,
+            reject_cap, server_gb, pool_gb))
+        return io, io.load()
+
+    def _debug_check_events(self) -> None:
+        for si, shard in enumerate(self._shards):
+            sweep_core.check_event_tensors(shard, si, self._n_slots)
+
+    def _debug_check_carry(self, fc, um, up, si: int) -> None:
+        sweep_core.check_invariants(
+            np.asarray(fc), np.asarray(um), np.asarray(up),
+            n_servers=self.n_servers,
+            cores_per_server=self.cores_per_server, shard=si,
+            up_slack=self._mig_pool_sum)
+
+    def _sweep_jax(self, server_gb, pool_gb, reject_cap, state_dtype,
+                   ckpt=None):
         n0 = len(server_gb)
         rejects = np.empty(n0, np.int64)
         sgb_i, pgb_i = sweep_core.quantize_capacities(server_gb, pool_gb)
@@ -1236,18 +1587,41 @@ class CompiledReplayStream:
         sweep = sweep_core.get_sweep(dt_name, with_carry=True)
         group_j = sweep_core.device_put(self._group_np)
         cand_events = 0
-        for lo, hi, width in sweep_core.candidate_chunks(n0):
+        io, st = self._checkpoint_io("jax", dt_name, reject_cap,
+                                     server_gb, pool_gb, ckpt)
+        start_chunk = start_shard = 0
+        resumed = None
+        if st is not None:
+            start_chunk, start_shard = (int(st["chunk_idx"]),
+                                        int(st["shard_idx"]))
+            n_done = int(st["n_done"])
+            rejects[:n_done] = st["rejects_done"]
+            resumed = tuple(st[f"carry{j}"] for j in range(5))
+            io.shards_done = int(st["shards_done"])
+        debug = sweep_core.invariants_enabled()
+        if debug:
+            self._debug_check_events()
+        for ci, (lo, hi, width) in enumerate(
+                sweep_core.candidate_chunks(n0)):
+            if ci < start_chunk:
+                continue              # counts restored from checkpoint
             k = hi - lo
             sgb, pgb = sweep_core.lane_capacities(sgb_i, pgb_i, lo, hi,
                                                   width, np_dt)
-            carry = tuple(sweep_core.device_put(a)
-                          for a in sweep_core.init_state(
-                              width, self.n_servers,
-                              self.cores_per_server, self._s_pad,
-                              self._g_pad, self._n_slots, np_dt))
+            if resumed is not None:
+                carry = tuple(sweep_core.device_put(a) for a in resumed)
+                shard_from, resumed = start_shard, None
+            else:
+                carry = tuple(sweep_core.device_put(a)
+                              for a in sweep_core.init_state(
+                                  width, self.n_servers,
+                                  self.cores_per_server, self._s_pad,
+                                  self._g_pad, self._n_slots, np_dt))
+                shard_from = 0
             sgb_j = sweep_core.device_put(sgb)
             pgb_j = sweep_core.device_put(pgb)
-            for shard in self._shards:
+            for si in range(shard_from, self.n_shards):
+                shard = self._shards[si]
                 # ONE shard's padded tensor lives on device at a time
                 # (rebuilt per candidate chunk by design: caching every
                 # shard's device tensor would void the memory bound)
@@ -1259,14 +1633,26 @@ class CompiledReplayStream:
                        _i32(shard["p"]), _i32(shard["m"]))
                 carry = sweep(evs, group_j, *carry, sgb_j, pgb_j)
                 cand_events += self.shard_pad_events * width
+                if debug:
+                    self._debug_check_carry(carry[0], carry[1],
+                                            carry[2], si)
+                if io is not None:
+                    io.tick(lambda: {
+                        "chunk_idx": ci, "shard_idx": si + 1,
+                        "n_done": lo, "rejects_done": rejects[:lo],
+                        "shards_done": io.shards_done,
+                        **{f"carry{j}": np.asarray(c)
+                           for j, c in enumerate(carry)}})
                 if reject_cap is not None:
                     rej_now = np.asarray(carry[4])[:k]
                     if (rej_now > reject_cap).all():
                         break                   # every candidate decided
             rejects[lo:hi] = np.asarray(carry[4])[:k]
+        if io is not None:
+            io.done()
         return rejects, cand_events
 
-    def _sweep_numpy(self, server_gb, pool_gb, reject_cap):
+    def _sweep_numpy(self, server_gb, pool_gb, reject_cap, ckpt=None):
         n0 = len(server_gb)
         n_srv = self.n_servers
         free = np.empty((n0, n_srv + 1, 3))
@@ -1278,12 +1664,40 @@ class CompiledReplayStream:
         migrated = np.zeros((n0, self._n_slots), bool)
         rejects = np.zeros(n0, np.int64)
         cand_events = 0
-        for shard in self._shards:
+        io, st = self._checkpoint_io("numpy", "float64", reject_cap,
+                                     server_gb, pool_gb, ckpt)
+        start_shard = 0
+        if st is not None:
+            free, placed, migrated = (st["free"], st["placed"],
+                                      st["migrated"])
+            rejects = st["rejects"]
+            start_shard = int(st["shard_idx"])
+            io.shards_done = int(st["shards_done"])
+        debug = sweep_core.invariants_enabled()
+        if debug:
+            self._debug_check_events()
+            # representative server per group: every member mirrors the
+            # group's free pool, so column 2 of the first member IS it
+            firsts = np.unique(self.group_of, return_index=True)[1]
+        for si in range(start_shard, self.n_shards):
+            shard = self._shards[si]
             _np_stream_sweep(shard, self._gcols, free, placed, migrated,
                              rejects)
             cand_events += len(shard["kind"]) * n0
+            if debug:
+                self._debug_check_carry(
+                    free[:, :n_srv, 0],
+                    server_gb[:, None] - free[:, :n_srv, 1],
+                    pool_gb[:, None] - free[:, firsts, 2], si)
+            if io is not None:
+                io.tick(lambda: {
+                    "shard_idx": si + 1, "free": free, "placed": placed,
+                    "migrated": migrated, "rejects": rejects,
+                    "shards_done": io.shards_done})
             if reject_cap is not None and (rejects > reject_cap).all():
                 break
+        if io is not None:
+            io.done()
         return rejects, cand_events
 
 
@@ -1366,6 +1780,7 @@ class CompiledReplayBatch:
         self.n_events = np.array([e.n_events for e in engines], np.int64)
         self._exact = all(e._exact for e in engines)
         self._jax_batch = None
+        self._jax_batch_fail = None
 
     def _jax_batch_events(self):
         """Stack per-trace padded event streams to one (K, E_max) tensor."""
@@ -1455,6 +1870,114 @@ class CompiledReplayBatch:
         _STATS.candidate_events += int(self.n_events.sum()) * n0
         _STATS.wall_s += time.perf_counter() - t0
         return rates
+
+    def _jax_batch_events_fail(self):
+        """Stack the per-trace 8-stream failure event tensors (each
+        trace's OWN merged schedule) to ``(K, E_max)``; padding events
+        are no-ops (kind PAD, domain -1)."""
+        if self._jax_batch_fail is not None:
+            return self._jax_batch_fail
+        per = [e._jax_events_fail() for e in self.engines]
+        e_max = max(p[0][0].shape[0] for p in per)
+        n_slots = max(p[2] for p in per)
+        s_pad, g_pad = per[0][3], per[0][4]
+        fills = (PAD, 0, 0, 0, 0, 0, 0, -1)
+        streams = []
+        for j, fill in enumerate(fills):
+            col = np.full((self.k, e_max), fill, np.int32)
+            for i, p in enumerate(per):
+                arr = np.asarray(p[0][j])
+                col[i, :arr.shape[0]] = arr
+            streams.append(sweep_core.device_put(col))
+        self._jax_batch_fail = (tuple(streams), per[0][1], n_slots,
+                                s_pad, g_pad)
+        return self._jax_batch_fail
+
+    def availability(self, server_gb, pool_gb,
+                     mitigation: str = "remigrate",
+                     backend: str = "auto",
+                     state_dtype: str | None = None) -> AvailabilityResult:
+        """Failure-priced sweep over all K (trace, schedule) rows at
+        once: one vmapped scan per candidate chunk.
+
+        Every engine must carry its own ``failure_schedule`` (rows may
+        differ — e.g. one failure rate per row, the
+        ``benchmarks/fig_availability.py`` frontier axis).  Returns an
+        :class:`AvailabilityResult` whose arrays are ``(K, n_cand)``;
+        ``n_failures`` is the per-trace ``(K,)`` count and the
+        per-failure distribution is not materialized (schedules differ
+        in length across rows — use the single-trace
+        :meth:`CompiledReplay.availability` for it).  Row ``k`` is
+        bit-exact vs ``engines[k].availability(...)``.
+        """
+        for i, e in enumerate(self.engines):
+            if e.failure_schedule is None:
+                raise ValueError(
+                    f"engine {i} has no failure_schedule; the batched "
+                    "availability sweep needs one per trace")
+        server_gb, pool_gb = _broadcast_candidates(self.k, server_gb,
+                                                   pool_gb)
+        n0 = server_gb.shape[1]
+        if backend == "auto":
+            backend = "jax" if (self._exact and
+                                sweep_core.get_fail_sweep()) else "oracle"
+        t0 = time.perf_counter()
+        if backend != "jax":
+            per = [eng.availability(server_gb[i], pool_gb[i], mitigation,
+                                    backend=backend,
+                                    state_dtype=state_dtype,
+                                    per_failure=False)
+                   for i, eng in enumerate(self.engines)]
+            return AvailabilityResult(
+                reject_rate=np.stack([r.reject_rate for r in per]),
+                affected=np.stack([r.affected for r in per]),
+                killed=np.stack([r.killed for r in per]),
+                remigrated=np.stack([r.remigrated for r in per]),
+                lost_vm_minutes=np.stack([r.lost_vm_minutes
+                                          for r in per]),
+                n_failures=np.array([r.n_failures for r in per]),
+                affected_per_failure=None, mitigation=mitigation)
+        evs, group_of, n_slots, s_pad, g_pad = \
+            self._jax_batch_events_fail()
+        sgb_i, pgb_i = sweep_core.quantize_capacities(server_gb, pool_gb)
+        dt_name = state_dtype or self._pick_state_dtype(sgb_i, pgb_i)
+        np_dt = sweep_core.state_np_dtype(dt_name)
+        sweep = sweep_core.get_fail_sweep(dt_name, mitigation,
+                                          batched=True, with_dist=False)
+        out = {key: np.empty((self.k, n0), np.int64) for key in
+               ("rejects", "affected", "killed", "remig", "lost")}
+        for lo, hi, width in sweep_core.candidate_chunks(n0):
+            kc = hi - lo
+            sgb, pgb = sweep_core.lane_capacities(sgb_i, pgb_i, lo, hi,
+                                                  width, np_dt)
+            # unlike the plain batched sweep the initial state carries
+            # a leading trace axis: the vmapped failure carry includes
+            # per-trace slot payload records
+            fc0, um0, up0, slots0, _ = sweep_core.init_state(
+                width, self.n_servers, self.cores_per_server, s_pad,
+                g_pad, n_slots, np_dt, k=self.k)
+            fstate = sweep_core.init_fail_state(n_slots, g_pad,
+                                                k=self.k)
+            res = sweep(evs, group_of,
+                        *(sweep_core.device_put(a) for a in
+                          (fc0, um0, up0, slots0) + fstate),
+                        sweep_core.device_put(sgb),
+                        sweep_core.device_put(pgb))
+            for key, a in zip(("rejects", "affected", "killed", "remig",
+                               "lost"), res[:5]):
+                out[key][:, lo:hi] = np.asarray(a)[:, :kc]
+        _STATS.sweeps += 1
+        _STATS.events += int(self.n_events.max(initial=0))
+        _STATS.candidate_events += int(self.n_events.sum()) * n0
+        _STATS.wall_s += time.perf_counter() - t0
+        return AvailabilityResult(
+            reject_rate=out["rejects"] / np.maximum(self.n_vms,
+                                                    1)[:, None],
+            affected=out["affected"], killed=out["killed"],
+            remigrated=out["remig"], lost_vm_minutes=out["lost"],
+            n_failures=np.array([e.failure_schedule.n_failures
+                                 for e in self.engines]),
+            affected_per_failure=None, mitigation=mitigation)
 
 
 # -------------------------------------------------- streaming trace batch ---
@@ -1553,7 +2076,9 @@ class CompiledReplayStreamBatch:
     def reject_rates(self, server_gb, pool_gb,
                      reject_cap: int | None = None,
                      backend: str = "auto",
-                     state_dtype: str | None = None) -> np.ndarray:
+                     state_dtype: str | None = None,
+                     checkpoint: "CheckpointSpec | None" = None
+                     ) -> np.ndarray:
         """Reject fraction per (trace, candidate): shape ``(K, n_cand)``.
 
         Candidates broadcast like :meth:`CompiledReplayBatch.reject_rates`
@@ -1567,6 +2092,12 @@ class CompiledReplayStreamBatch:
         ``max_i floor(tol_i * n_vms_i)``).  ``backend="numpy"`` (or
         non-integral decisions) loops the per-stream float64 shard
         sweeps instead — same bit-exact rates, K passes instead of one.
+
+        ``checkpoint`` snapshots the batched carry + cursors like the
+        single-stream engine (resume is bit-identical); the numpy
+        fallback derives one per-stream spec per row
+        (``<path>.k<i>``).  ``POND_DEBUG_INVARIANTS=1`` verifies the
+        per-trace carry after every shard.
         """
         t0 = time.perf_counter()
         server_gb, pool_gb = _broadcast_candidates(self.k, server_gb,
@@ -1580,7 +2111,11 @@ class CompiledReplayStreamBatch:
         if backend != "jax":
             return np.stack([
                 s.reject_rates(server_gb[i], pool_gb[i],
-                               reject_cap=reject_cap, backend=backend)
+                               reject_cap=reject_cap, backend=backend,
+                               checkpoint=None if checkpoint is None
+                               else dataclasses.replace(
+                                   checkpoint,
+                                   path=f"{checkpoint.path}.k{i}"))
                 for i, s in enumerate(self.engines)])
         sgb_i, pgb_i = sweep_core.quantize_capacities(server_gb, pool_gb)
         dt_name = state_dtype or self._pick_state_dtype(sgb_i, pgb_i)
@@ -1590,28 +2125,73 @@ class CompiledReplayStreamBatch:
         group_j = sweep_core.device_put(self._group_np)
         rejects = np.empty((self.k, n0), np.int64)
         cand_events = 0
-        for lo, hi, width in sweep_core.candidate_chunks(n0):
+        io = None
+        start_chunk = start_shard = 0
+        resumed = None
+        if checkpoint is not None:
+            io = _CheckpointIO(checkpoint, _sweep_fingerprint(
+                "jax-batch", dt_name, self.n_events, self.n_shards,
+                self.n_vms, reject_cap, server_gb, pool_gb))
+            st = io.load()
+            if st is not None:
+                start_chunk, start_shard = (int(st["chunk_idx"]),
+                                            int(st["shard_idx"]))
+                rejects[:, :int(st["n_done"])] = st["rejects_done"]
+                resumed = tuple(st[f"carry{j}"] for j in range(5))
+                io.shards_done = int(st["shards_done"])
+        debug = sweep_core.invariants_enabled()
+        if debug:
+            for s in self.engines:
+                s._debug_check_events()
+        for ci, (lo, hi, width) in enumerate(
+                sweep_core.candidate_chunks(n0)):
+            if ci < start_chunk:
+                continue
             kc = hi - lo
             sgb, pgb = sweep_core.lane_capacities(sgb_i, pgb_i, lo, hi,
                                                   width, np_dt)
-            # PER-TRACE carry (leading K axis), donated shard-to-shard
-            carry = tuple(sweep_core.device_put(a)
-                          for a in sweep_core.init_state(
-                              width, self.n_servers,
-                              self.cores_per_server, self._s_pad,
-                              self._g_pad, self._n_slots, np_dt,
-                              k=self.k))
+            if resumed is not None:
+                carry = tuple(sweep_core.device_put(a) for a in resumed)
+                shard_from, resumed = start_shard, None
+            else:
+                # PER-TRACE carry (leading K axis), donated
+                # shard-to-shard
+                carry = tuple(sweep_core.device_put(a)
+                              for a in sweep_core.init_state(
+                                  width, self.n_servers,
+                                  self.cores_per_server, self._s_pad,
+                                  self._g_pad, self._n_slots, np_dt,
+                                  k=self.k))
+                shard_from = 0
             sgb_j = sweep_core.device_put(sgb)
             pgb_j = sweep_core.device_put(pgb)
-            for si in range(self.n_shards):
+            for si in range(shard_from, self.n_shards):
                 evs = self._stacked_shard(si)
                 carry = sweep(evs, group_j, *carry, sgb_j, pgb_j)
                 cand_events += self.k * self.shard_pad_events * width
+                if debug:
+                    sweep_core.check_invariants(
+                        np.asarray(carry[0]), np.asarray(carry[1]),
+                        np.asarray(carry[2]),
+                        n_servers=self.n_servers,
+                        cores_per_server=self.cores_per_server,
+                        shard=si,
+                        up_slack=max(s._mig_pool_sum
+                                     for s in self.engines))
+                if io is not None:
+                    io.tick(lambda: {
+                        "chunk_idx": ci, "shard_idx": si + 1,
+                        "n_done": lo, "rejects_done": rejects[:, :lo],
+                        "shards_done": io.shards_done,
+                        **{f"carry{j}": np.asarray(c)
+                           for j, c in enumerate(carry)}})
                 if reject_cap is not None:
                     rej_now = np.asarray(carry[4])[:, :kc]
                     if (rej_now > reject_cap).all():
                         break               # every lane decided
             rejects[:, lo:hi] = np.asarray(carry[4])[:, :kc]
+        if io is not None:
+            io.done()
         rates = rejects / np.maximum(self.n_vms, 1)[:, None]
         _STATS.sweeps += 1
         _STATS.events += int(self.n_events.max(initial=0))

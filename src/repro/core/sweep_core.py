@@ -62,10 +62,16 @@ exactly ``used_mem + local_gb <= floor(server_gb)`` over int32 (see
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 ARRIVE, DEPART, MIGRATE = 0, 1, 2
 PAD = 3               # no-op event kind used to pad the XLA event stream
+FAIL, RECOVER = 4, 5  # failure-domain events (EMC/pod blast radius, §4.2);
+# no-ops in the plain sweep, resolved in-scan by the failure sweep
+# (:func:`build_fail_sweep`).  Sort AFTER same-time VM events: a VM
+# departing at the instant of the failure has already left.
 JAX_CHUNK = 96        # max candidate bucket per compiled sweep
 BUCKETS = (2, 4, 16, 32, JAX_CHUNK)   # padded candidate widths (lazy
 # compiles, one per width actually used; the small buckets matter for
@@ -247,6 +253,328 @@ def get_sweep(state_dtype: str = "int32", *, with_carry: bool = False,
 def jit_cache_keys() -> list:
     """Keys compiled so far (introspection for tests/benchmarks)."""
     return sorted(_SWEEPS)
+
+
+# ------------------------------------------------------------ failure sweep --
+_FAIL_SWEEPS: dict = {}   # (state_dtype, mitigation, batched, with_dist)
+
+MITIGATIONS = ("remigrate", "kill")
+
+
+def build_fail_sweep(state_dtype: str = "int32",
+                     mitigation: str = "remigrate",
+                     with_dist: bool = True):
+    """Build the (unjitted) failure-aware event sweep.
+
+    Same integer admission/departure/migration semantics as
+    :func:`build_sweep`, plus the Pond §4.2 failure model resolved
+    inside the scan step:
+
+    * Events carry two extra int32 streams: ``x`` (the VM's departure
+      minute at ARRIVE; the failure minute at FAIL) and ``dmn`` (the
+      failure domain at FAIL/RECOVER, -1 otherwise).  One failure
+      domain per EMC group.
+    * While a domain is down (between its FAIL and RECOVER) its pool
+      capacity is offline: arrivals needing pool slices there fail the
+      pooled admission test and take the all-local fallback (or
+      reject), per §4.3.
+    * ``FAIL(d)``: every live VM holding pool slices in domain ``d``
+      is affected (the blast-radius rule).  ``mitigation="kill"``
+      terminates them all; ``mitigation="remigrate"`` pulls each
+      server's affected pool into host-local DRAM when the server's
+      free local memory covers its TOTAL affected pool demand
+      (all-or-nothing per server — the host either absorbs its pooled
+      pages or loses those VMs), killing the rest.  Either way the
+      domain's EMC slices are lost: its used-pool column resets to 0.
+    * Availability counters ride in the carry per candidate lane:
+      VMs affected, VMs killed, VMs remigrated, and VM-minutes lost
+      (``departure_minute - failure_minute`` summed over kills, int32).
+      With ``with_dist=True`` the scan also emits the per-event
+      affected count (zeros off FAIL events), giving the
+      VMs-affected-per-failure distribution.
+
+    The blast-radius step scans the whole ``(n_slots, C)`` placement
+    array at EVERY event, so this kernel costs ~O(n_slots) more per
+    event than the plain sweep — use :func:`get_sweep` when no failure
+    events are present.  Bit-exact against the scalar oracle
+    ``cluster_sim.replay_with_failures`` for integral-GB traces
+    (``tests/test_failures.py``).
+    """
+    if mitigation not in MITIGATIONS:
+        raise ValueError(f"mitigation must be one of {MITIGATIONS}")
+    import jax.numpy as jnp
+    from jax import lax
+    dt = jnp.int16 if state_dtype == "int16" else jnp.int32
+    big = jnp.asarray(I16_BIG if state_dtype == "int16" else I32_BIG, dt)
+    zero = jnp.asarray(0, dt)
+    remigrate = mitigation == "remigrate"
+
+    def body(carry, ev):
+        (fc, um, up, slots, rejects, slot_c, slot_l, slot_p, slot_dep,
+         dom_down, affected, killed, remig, lost_min,
+         sgb, pgb, group_of) = carry
+        kind, sl, c, l, p, m, x, dmn = ev            # all int32
+        ci, li, pi = c, l, p                         # int32 bookkeeping
+        c, l, p, m = (c.astype(dt), l.astype(dt), p.astype(dt),
+                      m.astype(dt))
+        is_arr, is_dep, is_mig = kind == ARRIVE, kind == DEPART, \
+            kind == MIGRATE
+        is_fail, is_rec = kind == FAIL, kind == RECOVER
+        val = slots[sl]                              # (C,) packed s*2+mig
+        has = val >= 0
+        s_cur = jnp.where(has, val >> 1, 0)
+        mg_cur = has & ((val & 1) == 1)
+        cols = jnp.arange(fc.shape[1], dtype=jnp.int32)
+        gcols = jnp.arange(up.shape[1], dtype=jnp.int32)
+        # admission as the plain sweep, plus: a down domain has no EMC
+        # slices to grant, so pool-bearing arrivals skip its servers
+        upg = up[:, group_of]
+        dom_ok = (pi == 0) | (dom_down[group_of] == 0)[None, :]
+        ok = ((fc >= c) & (um + l <= sgb[:, None])
+              & (upg + p <= pgb[:, None]) & dom_ok)
+        score = jnp.where(ok, fc, big)
+        s1 = jnp.argmin(score, 1).astype(jnp.int32)
+        feas1 = jnp.take_along_axis(score, s1[:, None], 1)[:, 0] < big
+        ok2 = (fc >= c) & (um + m <= sgb[:, None])
+        score2 = jnp.where(ok2, fc, big)
+        s2 = jnp.argmin(score2, 1).astype(jnp.int32)
+        feas2 = jnp.take_along_axis(score2, s2[:, None], 1)[:, 0] < big
+        sel = jnp.where(feas1, s1, s2)
+        place = feas1 | feas2
+        s_aff = jnp.where(is_arr, sel, s_cur)
+        act_arr = is_arr & place
+        act_dep = is_dep & has
+        um_s = jnp.take_along_axis(um, s_aff[:, None], 1)[:, 0]
+        act_mig = is_mig & has & (um_s + p <= sgb)   # QoS: pool -> local
+        oh = cols[None, :] == s_aff[:, None]
+        dfc = jnp.where(act_dep, c, zero) - jnp.where(act_arr, c, zero)
+        dum = (jnp.where(act_arr, jnp.where(feas1, l, m), zero)
+               - jnp.where(act_dep, jnp.where(mg_cur, m, l), zero)
+               + jnp.where(act_mig, p, zero))
+        g_aff = group_of[s_aff]
+        goh = gcols[None, :] == g_aff[:, None]
+        dup = (jnp.where(act_arr & feas1, p, zero)
+               - jnp.where(act_dep & ~mg_cur, p, zero)
+               - jnp.where(act_mig, p, zero))
+        fc = fc + oh * dfc[:, None]
+        um = um + oh * dum[:, None]
+        up = up + goh * dup[:, None]
+        aval = jnp.where(place, sel * 2 + jnp.where(feas1, 0, 1), -1)
+        new_val = jnp.where(is_arr, aval,
+                            jnp.where(is_dep, -1,
+                                      jnp.where(act_mig, val | 1, val)))
+        slots = lax.dynamic_update_index_in_dim(
+            slots, new_val.astype(slots.dtype), sl, 0)
+        rejects = rejects + (is_arr & ~feas1 & ~feas2)
+        # ARRIVE records the slot's payload — shared across lanes (slot
+        # assignment is host-side, identical in every lane; lanes where
+        # the VM was rejected keep val < 0 and never read it)
+        slot_c = lax.dynamic_update_index_in_dim(
+            slot_c, jnp.where(is_arr, ci, slot_c[sl]), sl, 0)
+        slot_l = lax.dynamic_update_index_in_dim(
+            slot_l, jnp.where(is_arr, li, slot_l[sl]), sl, 0)
+        slot_p = lax.dynamic_update_index_in_dim(
+            slot_p, jnp.where(is_arr, pi, slot_p[sl]), sl, 0)
+        slot_dep = lax.dynamic_update_index_in_dim(
+            slot_dep, jnp.where(is_arr, x, slot_dep[sl]), sl, 0)
+        # ------- blast radius: whole-slot-array step (no-op off FAIL) --
+        live = slots >= 0                            # (n_slots, C)
+        srv = jnp.where(live, (slots >> 1).astype(jnp.int32), 0)
+        pooled = live & ((slots & 1) == 0) & (slot_p[:, None] > 0)
+        aff = is_fail & pooled & (group_of[srv] == dmn)
+        lanes = jnp.arange(fc.shape[0], dtype=jnp.int32)[None, :]
+        if remigrate:
+            # all-or-nothing per server: total affected pool demand on
+            # the server must fit its free local memory (checked in
+            # int32 — per-server sums can exceed the int16 domain)
+            demand = jnp.zeros(fc.shape, jnp.int32).at[lanes, srv].add(
+                jnp.where(aff, slot_p[:, None], 0))
+            fits = (um.astype(jnp.int32) + demand
+                    <= sgb.astype(jnp.int32)[:, None])
+            rem_mask = aff & fits[lanes, srv]
+            kill_mask = aff & ~fits[lanes, srv]
+        else:
+            rem_mask = jnp.zeros_like(aff)
+            kill_mask = aff
+        dfc_f = jnp.zeros(fc.shape, jnp.int32).at[lanes, srv].add(
+            jnp.where(kill_mask, slot_c[:, None], 0))
+        dum_f = (jnp.zeros(fc.shape, jnp.int32).at[lanes, srv].add(
+            jnp.where(rem_mask, slot_p[:, None], 0))
+            - jnp.zeros(fc.shape, jnp.int32).at[lanes, srv].add(
+                jnp.where(kill_mask, slot_l[:, None], 0)))
+        fc = fc + dfc_f.astype(dt)
+        um = um + dum_f.astype(dt)
+        # the failed domain loses every slice: used pool resets to 0
+        # (its pool comes back EMPTY at RECOVER)
+        up = jnp.where(is_fail & (gcols == dmn)[None, :], zero, up)
+        slots = jnp.where(kill_mask, jnp.asarray(-1, slots.dtype),
+                          jnp.where(rem_mask, slots | 1, slots))
+        dom_down = jnp.where((is_fail | is_rec) & (gcols == dmn),
+                             jnp.where(is_fail, 1, 0), dom_down)
+        n_aff = jnp.sum(aff, 0, dtype=jnp.int32)     # (C,)
+        affected = affected + n_aff
+        killed = killed + jnp.sum(kill_mask, 0, dtype=jnp.int32)
+        remig = remig + jnp.sum(rem_mask, 0, dtype=jnp.int32)
+        lost_min = lost_min + jnp.sum(
+            jnp.where(kill_mask,
+                      jnp.maximum(slot_dep - x, 0)[:, None], 0),
+            0, dtype=jnp.int32)
+        new_carry = (fc, um, up, slots, rejects, slot_c, slot_l, slot_p,
+                     slot_dep, dom_down, affected, killed, remig,
+                     lost_min, sgb, pgb, group_of)
+        return new_carry, (n_aff if with_dist else None)
+
+    def sweep(evs, group_of, fc0, um0, up0, slots0,
+              slot_c0, slot_l0, slot_p0, slot_dep0, dom0, sgb, pgb):
+        zc = jnp.zeros(sgb.shape[0], jnp.int32)
+        init = (fc0, um0, up0, slots0, zc, slot_c0, slot_l0, slot_p0,
+                slot_dep0, dom0, zc, zc, zc, zc, sgb, pgb, group_of)
+        out, ys = lax.scan(body, init, evs)
+        return (out[4], out[10], out[11], out[12], out[13],
+                ys if with_dist else None)
+
+    return sweep
+
+
+def get_fail_sweep(state_dtype: str = "int32",
+                   mitigation: str = "remigrate", *,
+                   batched: bool = False, with_dist: bool = True):
+    """Jitted failure sweep from the keyed cache (None without jax).
+
+    Keyed by ``(state_dtype, mitigation, batched, with_dist)``; the
+    batched variant vmaps over a leading trace axis — per-trace event
+    streams (each with its own merged failure schedule), per-trace
+    packed state, shared group map — so K (trace, schedule) rows price
+    their candidate batches in ONE scan (the
+    ``benchmarks/fig_availability.py`` frontier pass).
+    """
+    if not jax_importable():
+        return None
+    key = (state_dtype, mitigation, batched, with_dist)
+    fn = _FAIL_SWEEPS.get(key)
+    if fn is None:
+        import jax
+        base = build_fail_sweep(state_dtype, mitigation, with_dist)
+        if batched:
+            base = jax.vmap(base, in_axes=((0,) * 8, None,
+                                           0, 0, 0, 0, 0, 0, 0, 0, 0,
+                                           0, 0))
+        fn = jax.jit(base)
+        _FAIL_SWEEPS[key] = fn
+    return fn
+
+
+def init_fail_state(n_slots: int, g_pad: int,
+                    k: int | None = None) -> tuple:
+    """All-empty failure-sweep extras: per-slot payload records
+    (cores, local GB, pool GB, departure minute — int32, shared across
+    candidate lanes) and the per-domain down flags.  With ``k`` set,
+    every array gains a leading trace axis (batched variant)."""
+    out = (np.zeros(n_slots, np.int32), np.zeros(n_slots, np.int32),
+           np.zeros(n_slots, np.int32), np.zeros(n_slots, np.int32),
+           np.zeros(g_pad, np.int32))
+    if k is None:
+        return out
+    return tuple(np.broadcast_to(a, (k,) + a.shape).copy() for a in out)
+
+
+# --------------------------------------------------------- invariant guard --
+class SweepInvariantError(RuntimeError):
+    """A sweep invariant failed under ``POND_DEBUG_INVARIANTS=1``.
+
+    Structured: ``what`` names the violated invariant, ``shard``/
+    ``lane`` (and ``trace`` for batched sweeps) locate the first
+    offending state entry.
+    """
+
+    def __init__(self, what: str, *, shard: int, lane: int,
+                 trace: int | None = None, detail: str = ""):
+        self.what, self.shard, self.lane, self.trace = \
+            what, shard, lane, trace
+        loc = f"shard {shard}, lane {lane}"
+        if trace is not None:
+            loc = f"shard {shard}, trace {trace}, lane {lane}"
+        msg = f"sweep invariant violated: {what} at {loc}"
+        super().__init__(msg + (f" ({detail})" if detail else ""))
+
+
+def invariants_enabled() -> bool:
+    """Opt-in debug mode: ``POND_DEBUG_INVARIANTS=1`` in the
+    environment makes the streaming engines verify the packed carry
+    and the event tensors after every shard (host round-trip per
+    shard — debug cost, never on by default)."""
+    return os.environ.get("POND_DEBUG_INVARIANTS", "") == "1"
+
+
+def check_invariants(fc, um, up, *, n_servers: int,
+                     cores_per_server: float, shard: int,
+                     up_slack: float = 0.0) -> None:
+    """Verify the packed carry after a shard (any backend's layout:
+    ``(C, S)``/``(C, G)`` or batched ``(K, C, S)``/``(K, C, G)``).
+
+    Checks, on the real server columns: free cores within
+    ``[0, cores_per_server]`` (capacity conservation per server — used
+    cores never negative, never above capacity), used local memory
+    non-negative, used pool above ``-up_slack`` (the documented
+    fallback-migrate deficit bound) and every entry finite.  Raises
+    :class:`SweepInvariantError` naming the shard and the first
+    offending (trace,) lane.
+    """
+    fc = np.asarray(fc, np.float64)[..., :n_servers]
+    um = np.asarray(um, np.float64)[..., :n_servers]
+    up = np.asarray(up, np.float64)
+
+    def _raise(what, lane_mask, detail=""):
+        first = np.argwhere(lane_mask)[0]
+        trace = int(first[0]) if lane_mask.ndim == 2 else None
+        lane = int(first[-1])
+        raise SweepInvariantError(what, shard=shard, lane=lane,
+                                  trace=trace, detail=detail)
+
+    for name, a in (("free-cores", fc), ("used-local-GB", um),
+                    ("used-pool-GB", up)):
+        bad = ~np.isfinite(a)
+        if bad.any():
+            _raise(f"non-finite {name}", bad.any(-1))
+    bad = (fc < 0) | (fc > cores_per_server)
+    if bad.any():
+        _raise("free cores outside [0, cores_per_server]", bad.any(-1),
+               f"range [{fc.min()}, {fc.max()}]")
+    if (um < 0).any():
+        _raise("negative used local memory", (um < 0).any(-1),
+               f"min {um.min()}")
+    if (up < -up_slack - 1e-9).any():
+        _raise("used pool below the migrate-deficit bound",
+               (up < -up_slack - 1e-9).any(-1),
+               f"min {up.min()} < -{up_slack}")
+
+
+def check_event_tensors(shard: dict, shard_idx: int,
+                        n_slots: int) -> None:
+    """Verify one shard's event tensors (finite, kinds/slots/payloads
+    in domain) under the invariant guard; ``lane`` in the raised error
+    is the offending EVENT index within the shard."""
+    def _raise(what, mask):
+        raise SweepInvariantError(what, shard=shard_idx,
+                                  lane=int(np.argwhere(mask)[0][-1]))
+
+    kind = np.asarray(shard["kind"])
+    bad = (kind < ARRIVE) | (kind > RECOVER)
+    if bad.any():
+        _raise("event kind out of range", bad)
+    slot = np.asarray(shard["slot"])
+    bad = (slot < 0) | (slot >= n_slots)
+    if bad.any():
+        _raise("event slot out of range", bad)
+    for key in ("c", "l", "p", "m"):
+        if key not in shard:
+            continue
+        a = np.asarray(shard[key], np.float64)
+        if not np.isfinite(a).all():
+            _raise(f"non-finite event payload {key!r}", ~np.isfinite(a))
+        vm_ev = (kind == ARRIVE) | (kind == DEPART) | (kind == MIGRATE)
+        if (vm_ev & (a < 0)).any():
+            _raise(f"negative event payload {key!r}", vm_ev & (a < 0))
 
 
 # ------------------------------------------------------------- state rules --

@@ -26,6 +26,7 @@ import csv
 import dataclasses
 import gzip
 import os
+import time
 
 import numpy as np
 
@@ -382,6 +383,143 @@ def _schema_arrays(cols: dict, path: str, row_offset: int = 0):
     return arrival, lifetime, cores, mem
 
 
+#: injectable sleep for the IO-retry backoff (tests monkeypatch this so
+#: retry schedules are asserted without real waiting)
+_sleep = time.sleep
+
+
+@dataclasses.dataclass
+class IngestReport:
+    """Fault ledger of one chunked ingestion pass.
+
+    Pass ``report=IngestReport(max_bad_rows=...)`` to
+    :func:`iter_trace_chunks`: malformed rows (non-numeric/non-finite
+    cells or domain violations in the four schema columns) are
+    QUARANTINED — dropped with a record here — instead of aborting the
+    stream, until the budget is exceeded, at which point ingestion
+    raises :class:`TraceSchemaError` citing the budget.  Transient IO
+    errors retried by the resilient reader increment ``io_retries``.
+    ``benchmarks/azure_e2e.py`` surfaces :meth:`summary` in its run
+    report.
+    """
+
+    max_bad_rows: int = 0
+    bad_rows: list = dataclasses.field(default_factory=list)
+    io_retries: int = 0
+
+    @property
+    def n_quarantined(self) -> int:
+        return len(self.bad_rows)
+
+    def add(self, path: str, row: int, column: str, value,
+            reason: str) -> None:
+        self.bad_rows.append({"row": row, "column": column,
+                              "value": str(value)[:80],
+                              "reason": reason})
+        if self.n_quarantined > self.max_bad_rows:
+            raise TraceSchemaError(
+                f"{path}: too many malformed rows "
+                f"({self.n_quarantined} > max_bad_rows="
+                f"{self.max_bad_rows}); last: row {row} column "
+                f"{column!r}: {value!r} {reason}")
+
+    def summary(self) -> dict:
+        """JSON-able digest (first 20 quarantine records)."""
+        return {"n_quarantined": self.n_quarantined,
+                "io_retries": self.io_retries,
+                "bad_rows": self.bad_rows[:20]}
+
+
+def _lenient_numeric(vals) -> tuple[np.ndarray, np.ndarray]:
+    """Float array + bad mask (non-numeric/non-finite), never raising."""
+    out = np.empty(len(vals))
+    bad = np.zeros(len(vals), bool)
+    for i, v in enumerate(vals):
+        try:
+            out[i] = float(v)
+        except (TypeError, ValueError):
+            out[i], bad[i] = np.nan, True
+    bad |= ~np.isfinite(out)
+    return out, bad
+
+
+def _schema_arrays_quarantine(cols: dict, path: str, row_offset: int,
+                              report: IngestReport):
+    """Per-row masked pendant of :func:`_schema_arrays`: instead of
+    aborting on the first malformed row, every offending row is
+    recorded in ``report`` (which enforces its ``max_bad_rows`` budget)
+    and masked out.  Returns the validated arrays pre-filtered to the
+    kept rows plus the keep mask (for filtering the non-schema
+    columns).  Each quarantined row records its FIRST offending column
+    in schema order.
+    """
+    arrival, bad_arr = _lenient_numeric(cols["arrival"])
+    if "lifetime" in cols:
+        lifetime, bad_life = _lenient_numeric(cols["lifetime"])
+        life_src = "lifetime"
+    else:
+        dep, bad_life = _lenient_numeric(cols["departure"])
+        lifetime = dep - arrival
+        bad_life |= bad_arr
+        life_src = "departure"
+    cores, bad_cores = _lenient_numeric(cols["cores"])
+    mem, bad_mem = _lenient_numeric(cols["mem_gb"])
+    rules = (("arrival", "arrival", bad_arr, arrival < 0, ">= 0"),
+             ("lifetime", life_src, bad_life, ~(lifetime > 0), "> 0"),
+             ("cores", "cores", bad_cores, ~(cores >= 1), ">= 1"),
+             ("mem_gb", "mem_gb", bad_mem, ~(mem > 0), "> 0"))
+    keep = np.ones(len(arrival), bool)
+    for name, src, bad_num, bad_dom, req in rules:
+        bad = (bad_num | bad_dom) & keep
+        keep &= ~bad
+        for i in np.flatnonzero(bad):
+            i = int(i)
+            report.add(path, row_offset + i + 1, name,
+                       cols[src][i],
+                       "is not a finite number" if bad_num[i]
+                       else f"must be {req}")
+    idx = np.flatnonzero(keep)
+    return arrival[idx], lifetime[idx], cores[idx], mem[idx], keep
+
+
+def _resilient_raw_chunks(path: str, chunk_vms: int, io_retries: int,
+                          io_backoff_s: float,
+                          report: IngestReport | None):
+    """Retry wrapper over :func:`_iter_raw_chunks` for transient IO.
+
+    On an ``OSError`` mid-stream the file is reopened, already-delivered
+    chunks are skipped (chunk boundaries are deterministic in
+    ``chunk_vms``), and reading resumes — with exponential backoff
+    (``io_backoff_s * 2**attempt`` via the injectable :data:`_sleep`).
+    ``io_retries`` bounds CONSECUTIVE failed attempts; any successfully
+    delivered chunk resets the budget.  Schema errors are never
+    retried — they are deterministic, not transient.
+    """
+    delivered = 0
+    attempt = 0
+    while True:
+        try:
+            to_skip = delivered      # frozen: delivered grows mid-loop
+            skipped = 0
+            for cols in _iter_raw_chunks(path, chunk_vms):
+                if skipped < to_skip:
+                    skipped += 1
+                    continue
+                yield cols
+                delivered += 1
+                attempt = 0
+            return
+        except TraceSchemaError:
+            raise
+        except OSError:
+            attempt += 1
+            if attempt > io_retries:
+                raise
+            if report is not None:
+                report.io_retries += 1
+            _sleep(io_backoff_s * 2 ** (attempt - 1))
+
+
 def load_trace_file(path: str, max_vms: int | None = None,
                     start_id: int = 0, seed: int = 0,
                     population: "Population | None" = None) -> list[VM]:
@@ -537,7 +675,10 @@ def _iter_raw_chunks(path: str, chunk_vms: int):
 def iter_trace_chunks(path: str, chunk_vms: int = 65536,
                       max_vms: int | None = None, start_id: int = 0,
                       seed: int = 0,
-                      population: "Population | None" = None):
+                      population: "Population | None" = None,
+                      max_bad_rows: int = 0, io_retries: int = 0,
+                      io_backoff_s: float = 0.5,
+                      report: "IngestReport | None" = None):
     """Stream a trace file as bounded-memory chunks of ``VM`` records.
 
     Out-of-core pendant of :func:`load_trace_file` for traces that do
@@ -561,14 +702,43 @@ def iter_trace_chunks(path: str, chunk_vms: int = 65536,
     raises :class:`TraceSchemaError` naming the row — sort the file or
     fall back to :func:`load_trace_file`.
 
+    **Fault hardening** (all off by default — defaults are strict and
+    bit-identical to the old behavior):
+
+    * ``max_bad_rows > 0`` — malformed rows (non-numeric/non-finite
+      cells, domain violations in the four schema columns) are
+      QUARANTINED: dropped with a record in the :class:`IngestReport`
+      instead of aborting a multi-hour ingest, until the budget is
+      exceeded (then :class:`TraceSchemaError` cites the budget).
+      Cross-chunk ordering violations and duplicate ``vm_id`` remain
+      strict errors — they poison the replay, not just one row.  Under
+      quarantine, row numbers in later per-chunk errors count kept
+      rows.
+    * ``io_retries > 0`` — transient ``OSError`` mid-stream (network
+      filesystems, flaky disks) reopens the file and resumes after the
+      already-delivered chunks, with exponential backoff
+      (``io_backoff_s * 2**attempt``); the budget bounds consecutive
+      failures and resets on every delivered chunk.
+    * ``report=IngestReport(...)`` — pass your own ledger to read
+      ``n_quarantined`` / ``io_retries`` / ``bad_rows`` afterwards
+      (its ``max_bad_rows`` field then carries the budget); with
+      ``max_bad_rows``/``io_retries`` args alone one is created
+      internally.  ``benchmarks/azure_e2e.py`` surfaces the summary in
+      its run report.
+
     Usage (bounded-memory replay of an arbitrarily long trace)::
 
+        report = traces.IngestReport(max_bad_rows=100)
         stream = replay_engine.CompiledReplayStream(
             traces.iter_trace_chunks("azure_packing.csv.gz",
-                                     chunk_vms=100_000),
+                                     chunk_vms=100_000, io_retries=3,
+                                     report=report),
             None, cfg, max_events_per_shard=250_000)
         rates = stream.reject_rates([300.0], [512.0])
+        print(report.summary())
     """
+    if report is None and (max_bad_rows > 0 or io_retries > 0):
+        report = IngestReport(max_bad_rows=max_bad_rows)
     pop = population or Population(n_customers=64, seed=seed)
     rng = np.random.default_rng(seed)
     cust_map: dict = {}
@@ -579,14 +749,31 @@ def iter_trace_chunks(path: str, chunk_vms: int = 65536,
     row_offset = 0
     emitted = 0
     any_rows = False
-    for cols in _iter_raw_chunks(path, chunk_vms):
+    chunks = (_resilient_raw_chunks(path, chunk_vms, io_retries,
+                                    io_backoff_s, report)
+              if io_retries > 0 else _iter_raw_chunks(path, chunk_vms))
+    for cols in chunks:
         _require_schema(cols, path)
-        n = len(cols["arrival"])
+        n_raw = n = len(cols["arrival"])
         if n == 0:
             continue
         any_rows = True
-        arrival, lifetime, cores, mem = _schema_arrays(
-            cols, path, row_offset)
+        if report is not None:
+            arrival, lifetime, cores, mem, keep = \
+                _schema_arrays_quarantine(cols, path, row_offset,
+                                          report)
+            if not keep.all():
+                idx = np.flatnonzero(keep).tolist()
+                for key in ("customer", "vm_id", "untouched"):
+                    if key in cols:
+                        cols[key] = [cols[key][i] for i in idx]
+                n = len(arrival)
+                if n == 0:
+                    row_offset += n_raw
+                    continue
+        else:
+            arrival, lifetime, cores, mem = _schema_arrays(
+                cols, path, row_offset)
         bad = arrival < prev_max
         if bad.any():
             i = int(np.flatnonzero(bad)[0])
@@ -665,7 +852,7 @@ def iter_trace_chunks(path: str, chunk_vms: int = 65536,
                 slow182=float(slow182_all[i]),
                 slow222=float(slow222_all[i]),
                 pmu=pop._pmu(float(u_all[i]), rng)))
-        row_offset += n
+        row_offset += n_raw
         emitted += len(vms)
         if vms:
             yield vms

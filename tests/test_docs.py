@@ -30,7 +30,10 @@ def test_readme_covers_streaming_scale_out():
                   "docs/traces.md", "docs/index.md",
                   # the composed streaming-batch axis + its benchmark
                   "CompiledReplayStreamBatch", "sweep_core",
-                  "stream_batch_", "benchmarks/azure_e2e.py"):
+                  "stream_batch_", "benchmarks/azure_e2e.py",
+                  # robustness layer: chaos tests + resumable sweeps
+                  "CheckpointSpec", "--resume", "max_bad_rows",
+                  "-m chaos"):
         assert topic in text, f"README misses {topic!r}"
     # measured streaming numbers stay cited (events/s at K seeds x
     # N shards come from the perf-smoke artifact)
@@ -48,7 +51,14 @@ def test_replay_engine_doc_exists_and_covers_architecture():
                   # + device placement) and the composed batch axis
                   "sweep_core", "keyed jit cache", "pick_state_dtype",
                   "CompiledReplayStreamBatch", "device_put", "donated",
-                  "azure_e2e"):
+                  "azure_e2e",
+                  # the failure-domain chaos layer + availability sweep
+                  "FailureSchedule", "blast radius", "remigrate",
+                  "replay_with_failures", "fig_availability",
+                  # checkpoint/resume + the invariant guard
+                  "CheckpointSpec", "SweepInterrupted",
+                  "kill_after_shards", "POND_DEBUG_INVARIANTS",
+                  "SweepInvariantError"):
         assert topic.lower() in text.lower(), \
             f"docs/replay_engine.md misses {topic!r}"
     # the layer diagram names each layer of the stack
@@ -82,7 +92,10 @@ def test_traces_doc_covers_schema_and_ingestion():
                   "vmcreated", "vmcorecount",                # aliases
                   "TraceSchemaError", "iter_trace_chunks",
                   "fixture_trace_path", "fetch_azure_trace.py",
-                  "non-decreasing"):
+                  "non-decreasing",
+                  # fault-hardened ingestion + the resumable fetch
+                  "max_bad_rows", "IngestReport", "io_retries",
+                  "quarantine", "backoff", "Range"):
         assert topic in text, f"docs/traces.md misses {topic!r}"
 
 

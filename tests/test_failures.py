@@ -1,0 +1,157 @@
+"""Failure-domain chaos layer: compiled blast radius vs scalar oracle.
+
+The contract under test: merging a :class:`FailureSchedule` into the
+compiled event stream and resolving EMC blast radius + mitigation
+inside the XLA scan (``sweep_core.build_fail_sweep``) is bit-exact
+against the scalar oracle ``cluster_sim.replay_with_failures`` — both
+mitigation policies, both state dtypes, fixture trace plus seeded
+traces.
+"""
+import numpy as np
+import pytest
+
+from repro.core import cluster_sim, replay_engine, sweep_core, traces
+from repro.runtime.fault import FailureSchedule
+
+CFG = cluster_sim.ClusterConfig(n_servers=8, pool_sockets=8,
+                                gb_per_core=4.0)
+HORIZON = 86400
+_SERVER = np.array([768.0, 200.0, 96.0])
+_POOL = np.array([512.0, 300.0, 64.0])
+
+
+def _trace(seed):
+    pop = traces.Population(seed=0)
+    n = cluster_sim.arrivals_for_util(CFG, 0.8, HORIZON)
+    vms = pop.sample_vms(n, HORIZON, seed=seed, start_id=10 ** 6)
+    dec, _ = cluster_sim.policy_decisions(vms, "static",
+                                          static_pool_frac=0.25)
+    return vms, dec
+
+
+def _schedule(seed, mtbf_s=4 * 3600.0, cfg=CFG, horizon=HORIZON):
+    return FailureSchedule.generate(horizon, cfg.n_groups, mtbf_s,
+                                    1800.0, seed=seed)
+
+
+_FIELDS = ("reject_rate", "affected", "killed", "remigrated",
+           "lost_vm_minutes")
+
+
+def _assert_same(a, b, ctx):
+    for f in _FIELDS:
+        assert np.array_equal(getattr(a, f), getattr(b, f)), (ctx, f)
+
+
+@pytest.mark.parametrize("mitigation", sweep_core.MITIGATIONS)
+def test_fail_sweep_bit_exact_on_fixture(mitigation):
+    vms = traces.load_trace_file(traces.fixture_trace_path())
+    cfg = cluster_sim.ClusterConfig(n_servers=4, pool_sockets=4,
+                                    gb_per_core=4.0)
+    dec, _ = cluster_sim.policy_decisions(vms, "static",
+                                          static_pool_frac=0.25)
+    horizon = max(vm.departure for vm in vms)
+    sched = _schedule(0, mtbf_s=horizon / 6, cfg=cfg, horizon=horizon)
+    assert sched.n_failures > 0
+    eng = replay_engine.CompiledReplay(vms, dec, cfg,
+                                       failure_schedule=sched)
+    server = np.array([768.0, 120.0, 30.0])
+    pool = np.array([512.0, 64.0, 512.0])
+    oracle = eng.availability(server, pool, mitigation, backend="oracle")
+    for dt in ("int32", "int16"):
+        jx = eng.availability(server, pool, mitigation, backend="jax",
+                              state_dtype=dt)
+        _assert_same(oracle, jx, (mitigation, dt))
+        assert np.array_equal(oracle.affected_per_failure,
+                              jx.affected_per_failure)
+
+
+@pytest.mark.parametrize("seed", [3, 4, 5])
+@pytest.mark.parametrize("mitigation", sweep_core.MITIGATIONS)
+def test_fail_sweep_bit_exact_seeded(seed, mitigation):
+    vms, dec = _trace(seed)
+    sched = _schedule(seed)
+    eng = replay_engine.CompiledReplay(vms, dec, CFG,
+                                       failure_schedule=sched)
+    oracle = eng.availability(_SERVER, _POOL, mitigation,
+                              backend="oracle")
+    jx = eng.availability(_SERVER, _POOL, mitigation, backend="jax")
+    _assert_same(oracle, jx, (seed, mitigation))
+    assert np.array_equal(oracle.affected_per_failure,
+                          jx.affected_per_failure)
+    # the schedule actually bites: failures touch pooled VMs somewhere
+    assert int(np.asarray(oracle.affected).sum()) > 0
+
+
+def test_failures_degrade_availability_not_happy_path():
+    """reject_rates (plain sweep) ignores FAIL/RECOVER events;
+    availability prices them: down domains grant no pool."""
+    vms, dec = _trace(3)
+    sched = _schedule(7, mtbf_s=2 * 3600.0)
+    eng_f = replay_engine.CompiledReplay(vms, dec, CFG,
+                                         failure_schedule=sched)
+    eng_0 = replay_engine.CompiledReplay(vms, dec, CFG)
+    # merged failure events are no-ops in the plain sweep
+    assert eng_f.reject_rates(_SERVER, _POOL).tolist() == \
+        eng_0.reject_rates(_SERVER, _POOL).tolist()
+    av = eng_f.availability(_SERVER, _POOL, "kill")
+    # the failure model changes admission outcomes (down domains grant
+    # no pool; kills free capacity) — rates differ from the happy path
+    assert np.asarray(av.reject_rate).tolist() != \
+        eng_0.reject_rates(_SERVER, _POOL).tolist()
+    assert av.n_failures == sched.n_failures
+    assert av.affected_per_failure.shape == (sched.n_failures,
+                                             len(_SERVER))
+    assert (av.affected_per_failure.sum(0)
+            == np.asarray(av.affected)).all()
+
+
+def test_remigrate_beats_kill_on_lost_minutes_with_headroom():
+    vms, dec = _trace(4)
+    sched = _schedule(1)
+    eng = replay_engine.CompiledReplay(vms, dec, CFG,
+                                       failure_schedule=sched)
+    server = np.array([768.0])      # generous local DRAM: all fits
+    pool = np.array([512.0])
+    rem = eng.availability(server, pool, "remigrate")
+    kil = eng.availability(server, pool, "kill")
+    assert int(rem.killed[0]) == 0
+    assert int(rem.lost_vm_minutes[0]) == 0
+    assert int(kil.killed[0]) == int(kil.affected[0])
+    assert rem.remigration_success_rate[0] == 1.0
+
+
+def test_batch_availability_matches_single_rows():
+    engines = []
+    for k, seed in enumerate([3, 4]):
+        vms, dec = _trace(seed)
+        engines.append(replay_engine.CompiledReplay(
+            vms, dec, CFG, failure_schedule=_schedule(k)))
+    batch = replay_engine.CompiledReplayBatch(engines)
+    for mitigation in sweep_core.MITIGATIONS:
+        br = batch.availability(_SERVER, _POOL, mitigation)
+        for i, e in enumerate(engines):
+            r = e.availability(_SERVER, _POOL, mitigation,
+                               per_failure=False)
+            for f in _FIELDS:
+                assert np.array_equal(getattr(br, f)[i],
+                                      getattr(r, f)), (mitigation, i, f)
+            assert br.n_failures[i] == r.n_failures
+
+
+def test_availability_requires_schedule():
+    vms, dec = _trace(3)
+    eng = replay_engine.CompiledReplay(vms, dec, CFG)
+    with pytest.raises(ValueError, match="failure_schedule"):
+        eng.availability(_SERVER, _POOL)
+    with pytest.raises(ValueError, match="mitigation"):
+        sweep_core.build_fail_sweep(mitigation="nope")
+
+
+def test_out_of_range_domain_rejected():
+    vms, dec = _trace(3)
+    bad = FailureSchedule(np.array([10.0]),
+                          np.array([CFG.n_groups]),   # one past the end
+                          np.array([False]))
+    with pytest.raises(ValueError, match="domain"):
+        replay_engine.CompiledReplay(vms, dec, CFG, failure_schedule=bad)

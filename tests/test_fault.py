@@ -49,6 +49,45 @@ def test_failure_injector():
     assert inj.failed_by(9) == {"h1", "h2"}
 
 
+def test_failure_schedule_generate_deterministic():
+    a = fault.FailureSchedule.generate(86400, 4, 3600.0, 600.0, seed=3)
+    b = fault.FailureSchedule.generate(86400, 4, 3600.0, 600.0, seed=3)
+    np.testing.assert_array_equal(a.times, b.times)
+    np.testing.assert_array_equal(a.domains, b.domains)
+    np.testing.assert_array_equal(a.recovers, b.recovers)
+    c = fault.FailureSchedule.generate(86400, 4, 3600.0, 600.0, seed=4)
+    assert not np.array_equal(a.times, c.times)
+
+
+def test_failure_schedule_shape_and_order():
+    s = fault.FailureSchedule.generate(10 * 86400, 3, 6 * 3600.0,
+                                       1800.0, seed=0)
+    assert len(s) > 0
+    assert (np.diff(s.times) >= 0).all()
+    assert s.max_domain() < 3
+    assert s.n_failures == int((~s.recovers).sum())
+    # every domain's events alternate FAIL, RECOVER, FAIL, ...
+    for d in range(3):
+        rec = s.recovers[s.domains == d]
+        assert (rec == (np.arange(len(rec)) % 2 == 1)).all()
+    # a FAIL and a RECOVER at the same instant keep FAIL first
+    t = fault.FailureSchedule(np.array([5.0, 5.0]), np.array([0, 1]),
+                              np.array([True, False]))
+    assert len(t) == 2
+
+
+def test_failure_schedule_validation():
+    with pytest.raises(ValueError):
+        fault.FailureSchedule(np.array([2.0, 1.0]), np.array([0, 0]),
+                              np.array([False, True]))
+    with pytest.raises(ValueError):
+        fault.FailureSchedule(np.array([1.0]), np.array([-1]),
+                              np.array([False]))
+    with pytest.raises(ValueError):
+        fault.FailureSchedule(np.array([1.0]), np.array([0, 1]),
+                              np.array([False]))
+
+
 def test_checkpoint_elastic_reshard(tmp_path, rng):
     """A checkpoint restores under different shardings (mesh-agnostic)."""
     tree = {"w": jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32))}

@@ -113,3 +113,148 @@ def test_cli_main_converts_existing_sqlite(sqlite_fixture, tmp_path):
     fetch_azure_trace.main(["--sqlite", sqlite_fixture, "--out", out,
                             "--days", "3", "--max-vms", "3", "--quiet"])
     assert len(traces.load_trace_file(out)) == 3
+
+
+# ---------------------------------------------------------------------------
+# Resumable download: retry + backoff + HTTP Range (flaky fake blob)
+
+class _Resp:
+    """One fake ranged-GET response; raises OSError mid-body after
+    ``fail_at`` bytes (None = healthy)."""
+
+    def __init__(self, data, status, headers, fail_at):
+        self.data, self.status, self.headers = data, status, headers
+        self.pos = 0
+        self.fail_at = len(data) + 1 if fail_at is None else fail_at
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+    def read(self, n):
+        if self.pos >= self.fail_at:
+            raise OSError("connection reset by peer")
+        end = min(self.pos + n, len(self.data), self.fail_at)
+        buf, self.pos = self.data[self.pos:end], end
+        return buf
+
+
+def _fake_blob(payload, fail_after=None, truncate=None,
+               support_range=True):
+    """Opener over ``payload``: call k drops the connection after
+    ``fail_after[k]`` bytes / silently truncates to ``truncate[k]``."""
+    fail_after, truncate = fail_after or {}, truncate or {}
+    calls = []
+
+    def opener(req):
+        k = len(calls)
+        calls.append(req)
+        start, status = 0, 200
+        rng = req.get_header("Range")
+        if rng and support_range:
+            start, status = int(rng.split("=")[1].rstrip("-")), 206
+        data = payload[start:]
+        headers = {"Content-Length": str(len(data))}
+        if status == 206:
+            headers["Content-Range"] = (
+                f"bytes {start}-{len(payload) - 1}/{len(payload)}")
+        if k in truncate:
+            data = data[:truncate[k]]
+        return _Resp(data, status, headers, fail_after.get(k))
+
+    return opener, calls
+
+
+def _patched_sleep(monkeypatch):
+    sleeps = []
+    monkeypatch.setattr(fetch_azure_trace, "_sleep", sleeps.append)
+    return sleeps
+
+
+@pytest.mark.chaos
+def test_download_resumes_with_range_after_drops(tmp_path, monkeypatch):
+    payload = bytes(range(256)) * 4
+    opener, calls = _fake_blob(payload, fail_after={0: 37, 1: 23})
+    sleeps = _patched_sleep(monkeypatch)
+    dest = str(tmp_path / "blob.sqlite")
+    got = fetch_azure_trace.download("http://x/blob", dest, quiet=True,
+                                     retries=1, backoff_s=0.5,
+                                     opener=opener, chunk_bytes=8)
+    assert got == dest
+    assert open(dest, "rb").read() == payload
+    assert not os.path.exists(dest + ".part")      # atomic finish
+    # each retry re-requested ONLY the missing suffix
+    assert len(calls) == 3
+    assert calls[0].get_header("Range") is None
+    assert calls[1].get_header("Range") == "bytes=37-"
+    assert calls[2].get_header("Range") == "bytes=60-"
+    # every failed attempt had landed bytes first -> budget reset, so
+    # both backoffs sit on the first rung (and retries=1 sufficed)
+    assert sleeps == [0.5, 0.5]
+
+
+def test_download_detects_short_body_and_resumes(tmp_path, monkeypatch):
+    payload = b"azure-packing-trace" * 40
+    # call 0 truncates silently (no exception): the Content-Length
+    # check must turn that into a retried OSError, not a corrupt file
+    opener, calls = _fake_blob(payload, truncate={0: 100})
+    _patched_sleep(monkeypatch)
+    dest = str(tmp_path / "blob.sqlite")
+    fetch_azure_trace.download("http://x/blob", dest, quiet=True,
+                               retries=1, opener=opener, chunk_bytes=64)
+    assert open(dest, "rb").read() == payload
+    assert calls[1].get_header("Range") == "bytes=100-"
+
+
+def test_download_restarts_when_server_ignores_range(tmp_path,
+                                                     monkeypatch):
+    payload = b"x" * 300
+    opener, calls = _fake_blob(payload, fail_after={0: 100},
+                               support_range=False)
+    _patched_sleep(monkeypatch)
+    dest = str(tmp_path / "blob.sqlite")
+    fetch_azure_trace.download("http://x/blob", dest, quiet=True,
+                               retries=1, opener=opener, chunk_bytes=50)
+    # the retry asked for a Range, got a 200, and restarted cleanly
+    assert calls[1].get_header("Range") == "bytes=100-"
+    assert open(dest, "rb").read() == payload
+
+
+def test_download_resumes_part_file_across_runs(tmp_path, monkeypatch):
+    payload = bytes(range(200))
+    dest = str(tmp_path / "blob.sqlite")
+    with open(dest + ".part", "wb") as f:
+        f.write(payload[:30])         # a previous run got this far
+    opener, calls = _fake_blob(payload)
+    _patched_sleep(monkeypatch)
+    fetch_azure_trace.download("http://x/blob", dest, quiet=True,
+                               opener=opener, chunk_bytes=64)
+    assert calls[0].get_header("Range") == "bytes=30-"
+    assert open(dest, "rb").read() == payload
+
+
+def test_download_budget_exhausted_reraises(tmp_path, monkeypatch):
+    opener, calls = _fake_blob(b"y" * 100,
+                               fail_after={k: 0 for k in range(9)})
+    sleeps = _patched_sleep(monkeypatch)
+    dest = str(tmp_path / "blob.sqlite")
+    with pytest.raises(OSError, match="connection reset"):
+        fetch_azure_trace.download("http://x/blob", dest, quiet=True,
+                                   retries=2, backoff_s=0.5,
+                                   opener=opener, chunk_bytes=8)
+    assert sleeps == [0.5, 1.0]       # exponential rungs, no progress
+    assert not os.path.exists(dest)
+    assert os.path.exists(dest + ".part")   # progress survives the run
+
+
+def test_download_skips_existing_dest(tmp_path):
+    dest = str(tmp_path / "blob.sqlite")
+    with open(dest, "wb") as f:
+        f.write(b"already here")
+    def opener(req):                  # any call would be a bug
+        raise AssertionError("network touched despite existing dest")
+    fetch_azure_trace.download("http://x/blob", dest, quiet=True,
+                               opener=opener)
+    assert open(dest, "rb").read() == b"already here"

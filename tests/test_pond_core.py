@@ -86,6 +86,60 @@ def test_pool_manager_release_replenishes():
     assert pm.stats.blocked_starts == 1
 
 
+def test_emc_failure_releases_only_that_emcs_grants():
+    """Blast radius containment: losing EMC0 wipes EMC0's grants and
+    ONLY those — a host spanning EMC0+EMC1 keeps its EMC1 slices, and
+    hosts on other EMCs are untouched."""
+    pm = PoolManager(pool_gb=64, num_emcs=4)    # 16 GB per EMC
+    assert pm.add_capacity(0, 24, now=0.0)      # EMC0 (16) + EMC1 (8)
+    assert pm.add_capacity(1, 8, now=0.0)       # rest of EMC1
+    assert pm.add_capacity(2, 16, now=0.0)      # EMC2
+    assert pm.fail_emc(0) == [0]                # only host0 touched EMC0
+    assert pm.host_pool_gb(0) == 8              # EMC1 slices survive
+    assert pm.host_pool_gb(1) == 8
+    assert pm.host_pool_gb(2) == 16
+    assert pm.assigned_gb() == 32
+    # the replaced EMC's slices rejoin the free pool
+    assert pm.emcs[0].free_gb() == 16
+    for emc in pm.emcs:
+        emc.check_invariants()
+
+
+def test_pm_down_blocks_reassignment_not_datapath():
+    pm = PoolManager(pool_gb=32, num_emcs=2)
+    assert pm.add_capacity(0, 8, now=0.0)
+    granted = list(pm.grants[(0, 0)])
+    pm.fail_pool_manager()
+    # control plane is down: no new assignment, no release bookkeeping
+    assert not pm.add_capacity(1, 1, now=1.0)
+    pm.release_capacity(0, now=1.0)
+    assert pm.stats.releases == 0
+    assert pm.host_pool_gb(0) == 8
+    # ... but the datapath keeps serving already-granted slices: loads
+    # through the EMC still pass the permission check
+    for sid in granted:
+        pm.emcs[0].check_access(0, sid)
+    with pytest.raises(PermissionError_):
+        pm.emcs[0].check_access(2, granted[0])
+
+
+def test_buffer_replenishes_after_pm_recovery():
+    pm = PoolManager(pool_gb=32, num_emcs=1, buffer_gb=8)
+    assert pm.add_capacity(0, 30, now=0.0)
+    pm.fail_pool_manager()
+    pm.recover_pool_manager()
+    assert pm.alive
+    assert pm.host_pool_gb(0) == 30         # grants survived the outage
+    pm.release_capacity(0, now=1.0)
+    # the drain is asynchronous: a start right after release still
+    # finds the buffer short ...
+    assert not pm.add_capacity(1, 30, now=1.0)
+    # ... and once the offline path completes, capacity (and with it
+    # the free buffer) is fully replenished
+    assert pm.add_capacity(1, 30, now=1.0 + 30 * 0.2)
+    assert pm.total_free_gb(now=1.0 + 30 * 0.2) == 2.0
+
+
 # --------------------------------------------------------------- zNUMA -----
 @settings(max_examples=20, deadline=None)
 @given(st.integers(1, 16), st.integers(0, 16),

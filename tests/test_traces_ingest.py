@@ -245,3 +245,153 @@ def test_fixture_exists_and_replays_through_engine():
             for s, p in zip(server, pool)]
     assert got.tolist() == want          # bit-exact vs the scalar oracle
     assert got[0] == 0.0                 # ample capacity schedules all
+
+
+# ---------------------------------------------------------------------------
+# Fault-hardened ingestion: malformed-row quarantine + transient-IO retry
+# (defaults stay strict — the hardening is opt-in via iter_trace_chunks
+# kwargs, see the docstring's "Fault hardening" section).
+
+_DIRTY = ("vmid,arrival,lifetime,cores,mem_gb\n"
+          "1,0,100,2,4\n"
+          "2,5,abc,2,4\n"        # row 2: non-numeric lifetime
+          "3,10,100,2,4\n"
+          "4,12,100,0,4\n"       # row 4: cores < 1
+          "5,15,100,2,4\n"
+          "6,20,100,2,-8\n"      # row 6: mem_gb <= 0
+          "7,25,100,2,4\n")
+_CLEAN = ("vmid,arrival,lifetime,cores,mem_gb\n"
+          "1,0,100,2,4\n3,10,100,2,4\n5,15,100,2,4\n7,25,100,2,4\n")
+
+
+def _schema_cols(vms):
+    return [(v.vm_id, v.arrival, v.lifetime, v.cores, v.mem_gb)
+            for v in vms]
+
+
+@pytest.mark.chaos
+def test_quarantine_keeps_good_rows_and_records_bad(tmp_path):
+    dirty = _write(tmp_path, "dirty.csv", _DIRTY)
+    clean = _write(tmp_path, "clean.csv", _CLEAN)
+    # strict default still aborts on the first malformed row
+    with pytest.raises(traces.TraceSchemaError, match="row 2"):
+        list(traces.iter_trace_chunks(dirty, chunk_vms=2))
+    report = traces.IngestReport(max_bad_rows=3)
+    kept = [v for ch in traces.iter_trace_chunks(dirty, chunk_vms=2,
+                                                 report=report)
+            for v in ch]
+    # schema columns of the survivors == ingesting the pre-cleaned file
+    assert _schema_cols(kept) == \
+        _schema_cols(traces.load_trace_file(clean))
+    assert report.n_quarantined == 3
+    assert [r["row"] for r in report.bad_rows] == [2, 4, 6]
+    assert [r["column"] for r in report.bad_rows] == \
+        ["lifetime", "cores", "mem_gb"]
+    assert "finite" in report.bad_rows[0]["reason"]
+    assert ">= 1" in report.bad_rows[1]["reason"]
+    s = report.summary()
+    assert s["n_quarantined"] == 3 and s["io_retries"] == 0
+    assert len(s["bad_rows"]) == 3
+    # the bare max_bad_rows kwarg (no report handle) works too
+    alt = [v for ch in traces.iter_trace_chunks(dirty, chunk_vms=2,
+                                                max_bad_rows=3)
+           for v in ch]
+    assert _schema_cols(alt) == _schema_cols(kept)
+
+
+def test_quarantine_budget_exceeded_raises(tmp_path):
+    dirty = _write(tmp_path, "dirty.csv", _DIRTY)
+    with pytest.raises(traces.TraceSchemaError,
+                       match=r"max_bad_rows=1") as e:
+        list(traces.iter_trace_chunks(dirty, chunk_vms=2,
+                                      max_bad_rows=1))
+    # the overflow error names the last offending row
+    assert "row 4" in str(e.value) and "cores" in str(e.value)
+
+
+def test_quarantine_drops_whole_chunk_and_keeps_order_check(tmp_path):
+    # chunk 2 (rows 3-4) is entirely malformed: the stream skips it
+    p = _write(tmp_path, "allbad.csv",
+               "arrival,lifetime,cores,mem_gb\n"
+               "0,100,2,4\n5,100,2,4\n"
+               "x,100,2,4\n9,nan,2,4\n"
+               "12,100,2,4\n")
+    kept = [v for ch in traces.iter_trace_chunks(p, chunk_vms=2,
+                                                 max_bad_rows=2)
+            for v in ch]
+    assert [v.arrival for v in kept] == [0.0, 5.0, 12.0]
+    # cross-chunk ordering violations stay STRICT under quarantine —
+    # they poison the replay, not just one row
+    p2 = _write(tmp_path, "unsorted.csv",
+                "arrival,lifetime,cores,mem_gb\n"
+                "0,100,2,4\n20,100,2,4\n"
+                "x,100,2,4\n5,100,2,4\n")
+    with pytest.raises(traces.TraceSchemaError,
+                       match="non-decreasing"):
+        list(traces.iter_trace_chunks(p2, chunk_vms=2, max_bad_rows=5))
+    # ... and so do duplicate vm_ids
+    p3 = _write(tmp_path, "dup.csv",
+                "vmid,arrival,lifetime,cores,mem_gb\n"
+                "7,0,100,2,4\n7,5,100,2,4\n")
+    with pytest.raises(traces.TraceSchemaError, match="duplicate"):
+        list(traces.iter_trace_chunks(p3, chunk_vms=1, max_bad_rows=5))
+
+
+def _flaky_reader(monkeypatch, fail_after):
+    """Patch _iter_raw_chunks so call k raises OSError after yielding
+    fail_after[k] chunks (absent k => clean), and capture backoffs."""
+    real = traces._iter_raw_chunks
+    calls = []
+
+    def wrapper(path, chunk_vms):
+        k = len(calls)
+        calls.append(k)
+        limit = fail_after.get(k)
+        for i, cols in enumerate(real(path, chunk_vms)):
+            if limit is not None and i >= limit:
+                raise OSError("transient read failure")
+            yield cols
+
+    monkeypatch.setattr(traces, "_iter_raw_chunks", wrapper)
+    sleeps = []
+    monkeypatch.setattr(traces, "_sleep", sleeps.append)
+    return sleeps
+
+
+@pytest.mark.chaos
+def test_io_retry_resumes_after_transient_errors(tmp_path, monkeypatch):
+    path = traces.fixture_trace_path()
+    baseline = [v for ch in traces.iter_trace_chunks(path, chunk_vms=7)
+                for v in ch]
+    # attempt 0 dies after 1 chunk, the retry dies after 2, then clean
+    sleeps = _flaky_reader(monkeypatch, {0: 1, 1: 2})
+    report = traces.IngestReport()
+    got = [v for ch in traces.iter_trace_chunks(
+        path, chunk_vms=7, io_retries=1, io_backoff_s=0.125,
+        report=report) for v in ch]
+    assert _schema_cols(got) == _schema_cols(baseline)
+    assert report.io_retries == 2
+    # each failure was first-after-a-delivered-chunk: budget reset, so
+    # both backoffs sit at the first rung
+    assert sleeps == [0.125, 0.125]
+
+
+def test_io_retry_budget_exhausted_reraises(monkeypatch):
+    path = traces.fixture_trace_path()
+    # every attempt dies before delivering anything new
+    sleeps = _flaky_reader(monkeypatch, {k: 0 for k in range(10)})
+    with pytest.raises(OSError, match="transient"):
+        list(traces.iter_trace_chunks(path, chunk_vms=7, io_retries=2,
+                                      io_backoff_s=0.125))
+    assert sleeps == [0.125, 0.25]        # exponential backoff rungs
+
+
+def test_schema_errors_are_never_retried(tmp_path, monkeypatch):
+    dirty = _write(tmp_path, "dirty.csv", _DIRTY)
+    sleeps = _flaky_reader(monkeypatch, {})
+    # io_retries alone keeps the zero-tolerance row budget: the first
+    # malformed row still raises, citing the budget — and without a
+    # single retry sleep (schema errors are deterministic)
+    with pytest.raises(traces.TraceSchemaError, match="max_bad_rows=0"):
+        list(traces.iter_trace_chunks(dirty, chunk_vms=2, io_retries=3))
+    assert sleeps == []
