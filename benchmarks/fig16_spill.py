@@ -1,62 +1,129 @@
 """Figs 15+16: zNUMA traffic containment and slowdown vs spilled fraction.
 
-Fig 15 analogue: the decode engine with a correctly-sized local tier sends
-~0% of KV reads to the pool.  Fig 16 analogue: undersizing the local tier
-(overpredicted untouched memory) spills KV pages to the pool; the tier
-model turns the measured pool-traffic fraction into a slowdown.
+Rewired onto the grid engine: K seeded synthetic KV-cache alloc/free
+event streams (paged decode requests, peak demand ~16 pages) replay
+against the whole ``num_local`` config grid in ONE
+``latency_engine.spill_grid`` scan — bit-exact vs the scalar
+``ZNumaAllocator`` replay oracle — and the measured spill fractions are
+priced by both the 2-tier model and the 3-tier hierarchy (with and
+without a DRAM-cache front).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import time
+
 import numpy as np
 
 from benchmarks import common
-from repro.configs.registry import get_smoke
-from repro.core.latency_model import TierModel
-from repro.models.model_zoo import build_model
-from repro.serving.engine import DecodeEngine, paged_kv_config
-from repro.serving.scheduler import Request
+from repro.core import latency_engine as le
+from repro.core.latency_model import TierHierarchy, TierModel
+
+SEEDS = (3, 4, 5)
+NUM_POOL = 64
+LOCAL_GRID = (16, 12, 8, 4, 2)
 
 
-def _run_engine(model, params, cfg, num_local, pdm=2.0):
-    eng = DecodeEngine(model, params,
-                       paged_kv_config(cfg, page_size=4,
-                                       num_local=num_local, num_pool=64),
-                       max_batch=2, pdm=pdm)
-    rng = np.random.default_rng(3)
-    for r in range(2):
-        eng.submit(Request(req_id=r, prompt_len=16, max_new_tokens=8),
-                   rng.integers(0, cfg.vocab_size, 16))
-    stats = eng.run(60)
-    return float(np.mean(stats.pool_traffic_fracs or [0.0]))
+def synthetic_kv_events(seed: int, n_requests: int = 24,
+                        peak_pages: int = 16):
+    """Paged-KV alloc/free stream for a decode engine: each request
+    allocates 3-6 pages (prompt + generated tokens), oldest requests
+    retire when concurrent demand exceeds ``peak_pages``.  Returns
+    (events, peak) where peak is the max concurrent page demand."""
+    rng = np.random.default_rng(seed)
+    events, active, key, live, peak = [], [], 0, 0, 0
+    for _ in range(n_requests):
+        pages = int(rng.integers(3, 7))
+        keys = list(range(key, key + pages))
+        key += pages
+        for k in keys:
+            events.append(("alloc", k))
+        live += pages
+        peak = max(peak, live)
+        active.append(keys)
+        while live > peak_pages:
+            retired = active.pop(0)
+            for k in retired:
+                events.append(("free", k))
+            live -= len(retired)
+    for keys in active:
+        for k in keys:
+            events.append(("free", k))
+    return events, peak
+
+
+def _event_batch():
+    """(K, E) padded kind/key arrays + per-stream peaks."""
+    kinds, keys, peaks = [], [], []
+    for seed in SEEDS:
+        ev, peak = synthetic_kv_events(seed)
+        k, b = le.compile_block_events(ev)
+        kinds.append(k)
+        keys.append(b)
+        peaks.append(peak)
+    e = max(len(k) for k in kinds)
+    pad = lambda a, v: np.concatenate(
+        [a, np.full(e - len(a), v, np.int32)])
+    return (np.stack([pad(k, le.PAD) for k in kinds]),
+            np.stack([pad(b, 0) for b in keys]), peaks)
 
 
 def run(quick: bool = True) -> dict:
-    print("== Fig 15/16: zNUMA traffic + spill slowdown ==")
-    cfg = get_smoke("qwen2-1.5b")
-    model = build_model(cfg)
-    params = jax.tree.map(lambda a: a.astype(jnp.float32),
-                          model.init_params(jax.random.key(0)))
-    res = {}
+    print("== Fig 15/16: zNUMA traffic + spill slowdown "
+          f"(grid engine, K={len(SEEDS)} streams) ==")
+    ev_kind, ev_key, peaks = _event_batch()
+    # config lane 0 is the correctly-sized tier (local >= peak demand)
+    locals_ = np.array([max(peaks)] + list(LOCAL_GRID), np.int32)
+    pools = np.full_like(locals_, NUM_POOL)
+    t0 = time.perf_counter()
+    grid = le.spill_grid(ev_kind, ev_key, locals_, pools)
+    grid_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ref = [[le.scalar_spill_replay(ev_kind[s], ev_key[s], nl, NUM_POOL)
+            for nl in locals_] for s in range(len(SEEDS))]
+    scalar_s = time.perf_counter() - t0
+    bit_exact = all(
+        int(grid.allocs[s, c]) == int(r.allocs)
+        and int(grid.pool_allocs[s, c]) == int(r.pool_allocs)
+        and int(grid.failed[s, c]) == int(r.failed)
+        and int(grid.local_in_use[s, c]) == int(r.local_in_use)
+        and int(grid.pool_in_use[s, c]) == int(r.pool_in_use)
+        for s, row in enumerate(ref) for c, r in enumerate(row))
+    res = {"perf": {"grid_cells": int(len(SEEDS) * len(locals_)),
+                    "grid_wall_s": round(grid_s, 6),
+                    "scalar_wall_s": round(scalar_s, 6),
+                    "bit_exact": bool(bit_exact)}}
+    common.claim(res, "spill grid bit-exact vs ZNumaAllocator replay",
+                 bit_exact, f"{len(SEEDS)}x{len(locals_)} configs")
+    fracs = grid.spill_fraction          # (K, C)
+    mean, std = fracs.mean(0), fracs.std(0)
     # Fig 15: correct sizing -> no pool traffic
-    traffic_ok = _run_engine(model, params, cfg, num_local=16)
-    print(f"  correctly-sized local tier: pool traffic = {traffic_ok:.4f}")
+    print(f"  correctly-sized local tier ({locals_[0]} pages): "
+          f"pool traffic = {mean[0]:.4f}±{std[0]:.4f}")
     common.claim(res, "zNUMA contains traffic (<0.5%, paper 0.06-0.38%)",
-                 traffic_ok < 0.005, f"{traffic_ok:.4f}")
-    # Fig 16: spill sweep
+                 mean[0] < 0.005, f"{mean[0]:.4f}")
+    # Fig 16: spill sweep priced by the tier models
     tier = TierModel()
+    h3 = TierHierarchy.three_tier()
+    hc = TierHierarchy.three_tier(cache_hit_rate=0.5)
+    far = 0.25                           # fraction of spill on far tier
     rows = []
-    for num_local in (12, 8, 4, 2):
-        frac = _run_engine(model, params, cfg, num_local=num_local)
-        slow = tier.slowdown_factor(frac) - 1.0
-        rows.append((num_local, frac, slow))
-        print(f"  local={num_local:2d} pages: spilled={frac:5.2f} "
-              f"modeled slowdown={slow * 100:5.1f}%")
+    for c, num_local in enumerate(LOCAL_GRID, start=1):
+        f = float(mean[c])
+        slow2 = tier.slowdown_factor(f) - 1.0
+        split = [f * (1 - far), f * far]
+        slow3 = h3.slowdown_factor(split) - 1.0
+        slowc = hc.slowdown_factor(split) - 1.0
+        rows.append((num_local, f, slow2, slow3, slowc))
+        print(f"  local={num_local:2d} pages: spilled={f:5.2f}±"
+              f"{std[c]:4.2f} slowdown 2-tier={slow2 * 100:5.1f}% "
+              f"3-tier={slow3 * 100:5.1f}% +cache={slowc * 100:5.1f}%")
     res["rows"] = rows
     common.claim(res, "slowdown grows monotonically with spill (Fig 16)",
                  all(a[2] <= b[2] + 1e-9 for a, b in zip(rows, rows[1:])),
                  str([round(r[2], 3) for r in rows]))
     common.claim(res, "full spill reaches ~>30% slowdown band",
                  rows[-1][2] > 0.3, f"{rows[-1][2]:.2f}")
+    common.claim(res, "DRAM-cache front prices below plain 3-tier",
+                 all(r[4] < r[3] + 1e-12 for r in rows if r[1] > 0),
+                 f"{rows[-1][4]:.3f} < {rows[-1][3]:.3f}")
     return res

@@ -1,50 +1,78 @@
 """Figs 18+19: untouched-memory model — GBM vs static strawman + temporal
-stability (nightly retrain)."""
+stability (nightly retrain).
+
+Rewired onto the grid engine: the tau axis fits via
+``policy_engine.fit_um_grid`` (shared with the policy grid), every
+(UM, OP) curve point evaluates in ONE ``latency_engine.um_curve_grid``
+pass (bit-exact vs the scalar ``pred.mean()`` / ``(ut < pred).mean()``
+loops), and the tradeoff interpolations go through
+``latency_engine.interp_tradeoff`` — stable even if a fitted curve
+comes out non-monotone.
+"""
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
 from benchmarks import common
-from repro.core import traces
+from repro.core import latency_engine as le
+from repro.core import policy_engine, traces
 from repro.core.predictors.models import UntouchedMemoryModel
+
+TAUS = (0.02, 0.05, 0.1, 0.2)
+STATIC = (0.1, 0.2, 0.3)
 
 
 def run(quick: bool = True) -> dict:
-    print("== Fig 18/19: untouched-memory model ==")
+    print("== Fig 18/19: untouched-memory model (grid engine) ==")
     train = list(common.train_vms())
     test = list(common.test_vms())
     hist = common.history()
+    Xtr = traces.metadata_features(train, hist)
     ut_tr = np.array([v.untouched for v in train])
     ut_te = np.array([v.untouched for v in test])
     Xte = traces.metadata_features(test, hist)
-    res = {"gbm": [], "static": []}
-    for tau in (0.02, 0.05, 0.1, 0.2):
-        m = UntouchedMemoryModel(tau).fit(
-            traces.metadata_features(train, hist), ut_tr)
-        pred = m.predict(Xte)
-        um, op = float(pred.mean()), float((ut_te < pred).mean())
-        res["gbm"].append((tau, um, op))
-        print(f"  GBM tau={tau:4.2f}: UM={um:5.3f} OP={op:5.3f}")
-    for f in (0.1, 0.2, 0.3):
-        op = float((ut_te < f).mean())
-        res["static"].append((f, f, op))
-        print(f"  static {f:4.2f}:   UM={f:5.3f} OP={op:5.3f}")
-    # interpolate GBM OP at UM=0.2
+    models = policy_engine.fit_um_grid(Xtr, ut_tr, TAUS)
+    preds = np.stack([models[float(t)].predict(Xte)
+                      for t in TAUS]).astype(np.float64)
+    t0 = time.perf_counter()
+    um, op = le.um_curve_grid(preds, ut_te)          # (T,) one pass
+    grid_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ref = [(float(p.mean()), float((ut_te < p).mean())) for p in preds]
+    scalar_s = time.perf_counter() - t0
+    bit_exact = all((um[i], op[i]) == r for i, r in enumerate(ref))
+    res = {"gbm": [], "static": [],
+           "perf": {"grid_cells": int(preds.shape[0] * preds.shape[1]),
+                    "grid_wall_s": round(grid_s, 6),
+                    "scalar_wall_s": round(scalar_s, 6),
+                    "bit_exact": bool(bit_exact)}}
+    common.claim(res, "UM curve grid bit-exact vs scalar loops",
+                 bit_exact, f"{len(TAUS)} taus x {len(test)} VMs")
+    for i, tau in enumerate(TAUS):
+        res["gbm"].append((tau, float(um[i]), float(op[i])))
+        print(f"  GBM tau={tau:4.2f}: UM={um[i]:5.3f} OP={op[i]:5.3f}")
+    # static strawman, vectorized: UM is the setting itself
+    fs = np.asarray(STATIC)
+    s_op = (ut_te[None, :] < fs[:, None]).mean(axis=1)
+    for f, o in zip(STATIC, s_op):
+        res["static"].append((f, f, float(o)))
+        print(f"  static {f:4.2f}:   UM={f:5.3f} OP={float(o):5.3f}")
     gums = np.array([g[1] for g in res["gbm"]])
     gops = np.array([g[2] for g in res["gbm"]])
-    op_at_20 = float(np.interp(0.2, gums, gops))
+    op_at_20 = float(le.interp_tradeoff(0.2, gums, gops))
     static_at_20 = res["static"][1][2]
     common.claim(res, "GBM ~5x fewer overpredictions than static at "
                  "UM=20% (Finding 6)", op_at_20 < static_at_20 / 2.5,
                  f"GBM {op_at_20:.3f} vs static {static_at_20:.3f}")
-    um4 = float(np.interp(0.04, gops, gums))
+    um4 = float(le.interp_tradeoff(0.04, gops, gums))
     common.claim(res, "~25% UM at 4% OP (paper production model)",
                  um4 > 0.15, f"UM@4%OP={um4:.3f}")
     # Fig 19: retrain on window 1, evaluate on window 2 (drift)
     w2 = common.population().sample_vms(800, common.HORIZON, seed=11,
                                         start_id=7 * 10 ** 6)
-    m = UntouchedMemoryModel(0.05).fit(
-        traces.metadata_features(train, hist), ut_tr)
+    m = UntouchedMemoryModel(0.05).fit(Xtr, ut_tr)
     pred2 = m.predict(traces.metadata_features(list(w2), hist))
     op2 = float((np.array([v.untouched for v in w2]) < pred2).mean())
     print(f"  next-window OP (Fig 19 stability): {op2:.3f}")

@@ -14,8 +14,9 @@ import time
 import numpy as np
 
 from benchmarks import common
-from repro.core import cluster_sim, replay_engine
+from repro.core import cluster_sim, policy_engine, replay_engine
 from repro.core.control_plane import ControlPlane, ControlPlaneConfig
+from repro.core.latency_model import TierHierarchy
 from repro.core.pool_manager import PoolManager
 
 
@@ -70,6 +71,24 @@ def run(quick: bool = True) -> dict:
     wall = time.perf_counter() - t0
     res["wall_s"] = round(wall, 3)
     res["engine"] = replay_engine.stats_snapshot()
+    # 3-tier pricing: QoS cost of shifting the pond pool split onto a
+    # far tier (with a DRAM-cache front), one hierarchy grid pass
+    dec = policy_engine.policy_decisions_compiled(
+        list(vms_list[0]), "pond", control_plane=_control_plane())
+    pricing = cluster_sim.tiered_pricing(
+        dec, TierHierarchy.three_tier(cache_hit_rate=0.3),
+        far_fracs=(0.0, 0.25, 0.5))
+    res["tier_pricing"] = [
+        {"far_frac": p.far_frac, "mean_slowdown": p.mean_slowdown,
+         "violation_frac": p.violation_frac} for p in pricing]
+    for p in pricing:
+        print(f"  3-tier far_frac={p.far_frac:.2f}: mean slowdown="
+              f"{p.mean_slowdown:.4f} PDM violations="
+              f"{p.violation_frac:.3f}")
+    common.claim(res, "3-tier pricing: slowdown monotone in far-tier "
+                 "fraction", all(a.mean_slowdown <= b.mean_slowdown + 1e-12
+                                 for a, b in zip(pricing, pricing[1:])),
+                 str([round(p.mean_slowdown, 4) for p in pricing]))
     print(f"  policy loop: {wall:.2f}s (incl. model fits), engine at "
           f"{res['engine']['events_per_sec']:.0f} candidate-events/s")
     row16 = [r for r in res["rows"] if r["pool_sockets"] == 16][0]

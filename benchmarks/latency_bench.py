@@ -1,0 +1,140 @@
+"""Perf bench for the latency/QoS grid engine (``core/latency_engine``).
+
+Times three representative figure-pipeline passes against the scalar
+seed loops they replaced, on quick-sized grids:
+
+* ``bands``   — slowdown-band fractions over a (K, 2, N) seed batch
+  (the fig4 pipeline) vs per-row ``(s < t).mean()`` loops.
+* ``spill``   — zNUMA spill accounting over K event streams x C tier
+  configs in one scan (the fig16 pipeline) vs a per-(stream, config)
+  ``ZNumaAllocator`` replay.
+* ``combine`` — LI threshold sweep + Eq.(1) budget search (the
+  fig17/fig20 pipeline) vs the ``model.curve``-style threshold loop
+  plus nested ``eqn1.combine``.
+
+Every pass must be bitwise equal to its oracle AND >=5x faster; the
+numbers feed the ``latency_*`` keys of ``--perf-smoke``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import eqn1
+from repro.core import latency_engine as le
+
+MIN_SPEEDUP = 5.0
+
+
+def _time(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def _bands_pass(quick: bool) -> dict:
+    k = 512 if quick else 4096
+    rng = np.random.default_rng(0)
+    slow = rng.lognormal(-3.0, 1.2, size=(k, 2, 158))
+    le.slowdown_band_grid(slow, backend="numpy")         # warm
+    grid, grid_s = _time(
+        lambda: le.slowdown_band_grid(slow, backend="numpy"))
+    ref, scalar_s = _time(lambda: np.array(
+        [[[float((s < .01).mean()), float((s < .05).mean()),
+           float((s > .25).mean())] for s in row] for row in slow]))
+    return {"cells": int(np.prod(grid.shape)),
+            "grid_s": grid_s, "scalar_s": scalar_s,
+            "bit_exact": grid.tolist() == ref.tolist()}
+
+
+def _spill_pass(quick: bool) -> dict:
+    from benchmarks.fig16_spill import synthetic_kv_events
+    k, n_req = (4, 96) if quick else (8, 384)
+    streams = [le.compile_block_events(
+        synthetic_kv_events(seed, n_requests=n_req, peak_pages=24)[0])
+        for seed in range(k)]
+    e = max(len(s[0]) for s in streams)
+    pad = lambda a, v: np.concatenate(
+        [a, np.full(e - len(a), v, np.int32)])
+    ev_kind = np.stack([pad(s[0], le.PAD) for s in streams])
+    ev_key = np.stack([pad(s[1], 0) for s in streams])
+    locals_ = np.arange(2, 50, 2, np.int32)
+    pools = np.full_like(locals_, 64)
+    le.spill_grid(ev_kind, ev_key, locals_, pools)       # warm/compile
+    grid, grid_s = _time(
+        lambda: le.spill_grid(ev_kind, ev_key, locals_, pools))
+    ref, scalar_s = _time(lambda: [
+        [le.scalar_spill_replay(ev_kind[s], ev_key[s], nl, 64)
+         for nl in locals_] for s in range(k)])
+    ok = all(
+        int(grid.allocs[s, c]) == int(r.allocs)
+        and int(grid.pool_allocs[s, c]) == int(r.pool_allocs)
+        and int(grid.failed[s, c]) == int(r.failed)
+        and int(grid.local_in_use[s, c]) == int(r.local_in_use)
+        and int(grid.pool_in_use[s, c]) == int(r.pool_in_use)
+        for s, row in enumerate(ref) for c, r in enumerate(row))
+    return {"cells": int(k * len(locals_) * e),
+            "grid_s": grid_s, "scalar_s": scalar_s, "bit_exact": ok}
+
+
+def _combine_pass(quick: bool) -> dict:
+    n = 20000 if quick else 100000
+    rng = np.random.default_rng(1)
+    p = rng.random(n)
+    sens = rng.random(n) < 0.3
+    um_curve = [(float(u), float(u * u / 2))
+                for u in np.linspace(0.0, 0.5, 16)]
+    budgets = np.round(np.linspace(0.005, 0.05, 24), 4)
+    ths = le.default_li_thresholds()
+
+    def grid_fn():
+        _, li, fp = le.li_curve_grid(p, sens, backend="numpy")
+        return le.combine_grid(list(zip(li.tolist(), fp.tolist())),
+                               um_curve, budgets, backend="numpy")
+
+    def scalar_fn():
+        li_curve = []
+        for t in ths:                  # the model.curve threshold loop
+            li = p < t
+            li_curve.append((float(li.mean()), float((li & sens).mean())))
+        return li_curve, [eqn1.combine(li_curve, um_curve, float(b))
+                          for b in budgets]
+
+    grid_fn()                                            # warm
+    pts, grid_s = _time(grid_fn)
+    (_, ref), scalar_s = _time(scalar_fn)
+    return {"cells": int(len(ths) * (len(um_curve) + 1) * len(budgets)),
+            "grid_s": grid_s, "scalar_s": scalar_s,
+            "bit_exact": pts == ref}
+
+
+def latency_bench(quick: bool = True) -> dict:
+    passes = {"bands": _bands_pass(quick), "spill": _spill_pass(quick),
+              "combine": _combine_pass(quick)}
+    for v in passes.values():
+        v["speedup"] = round(v["scalar_s"] / max(v["grid_s"], 1e-12), 1)
+        v["grid_s"] = round(v["grid_s"], 6)
+        v["scalar_s"] = round(v["scalar_s"], 6)
+    return {"passes": passes,
+            "grid_cells": sum(v["cells"] for v in passes.values()),
+            "wall_s": round(sum(v["grid_s"] for v in passes.values()), 6),
+            "min_speedup": min(v["speedup"] for v in passes.values()),
+            "bit_exact": all(v["bit_exact"] for v in passes.values())}
+
+
+def run(quick: bool = True) -> dict:
+    print("== Latency/QoS grid engine perf bench ==")
+    res = latency_bench(quick)
+    for name, v in res["passes"].items():
+        print(f"  {name:8s}: {v['cells']:8d} cells  grid={v['grid_s']}s "
+              f"scalar={v['scalar_s']}s  {v['speedup']}x "
+              f"bit_exact={v['bit_exact']}")
+    common.claim(res, "all grid passes bitwise equal to scalar oracles",
+                 res["bit_exact"], "bands/spill/combine")
+    common.claim(res, f"every pass >={MIN_SPEEDUP:.0f}x vs scalar "
+                 "figure loops",
+                 res["min_speedup"] >= MIN_SPEEDUP,
+                 f"min {res['min_speedup']}x")
+    return res

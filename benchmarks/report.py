@@ -178,12 +178,38 @@ def policy_table(path: str = "experiments/BENCH_replay.json") -> str:
     return "\n".join(lines)
 
 
+def latency_table(path: str = "experiments/BENCH_replay.json") -> str:
+    """Latency/QoS grid-engine pass timings (written by ``run.py
+    --perf-smoke`` since ``core/latency_engine.py``)."""
+    lines = ["| grid cells | wall s | bands | spill | combine | "
+             "min speedup | bit-exact |",
+             "|---|---|---|---|---|---|---|"]
+    if not os.path.isfile(path):
+        lines.append("| (run `python -m benchmarks.run --perf-smoke`) "
+                     "| — | — | — | — | — | — |")
+        return "\n".join(lines)
+    r = json.load(open(path))
+    if r.get("latency_grid_cells") is None:
+        lines.append("| (re-run `python -m benchmarks.run --perf-smoke` "
+                     "to record the latency benchmark) | — | — | — | — "
+                     "| — | — |")
+        return "\n".join(lines)
+    lines.append(
+        f"| {r['latency_grid_cells']} | {r.get('latency_wall_s', '—')} | "
+        f"{r.get('latency_bands_speedup', '—')}x | "
+        f"{r.get('latency_spill_speedup', '—')}x | "
+        f"{r.get('latency_combine_speedup', '—')}x | "
+        f"{r.get('latency_min_speedup_vs_scalar', '—')}x | "
+        f"{'yes' if r.get('latency_bit_exact') else 'NO'} |")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--outdir", default="experiments/dryrun")
     ap.add_argument("--what", default="all",
                     choices=["all", "dryrun", "roofline", "collectives",
-                             "replay", "policy"])
+                             "replay", "policy", "latency"])
     args = ap.parse_args()
     if args.what in ("all", "dryrun"):
         print("### Dry-run matrix\n")
@@ -205,6 +231,11 @@ def main():
         print("### Policy-engine throughput (compiled decision "
               "pipeline + grid sweep)\n")
         print(policy_table())
+        print()
+    if args.what in ("all", "latency"):
+        print("### Latency/QoS grid engine (vectorized figure passes "
+              "vs scalar loops)\n")
+        print(latency_table())
 
 
 if __name__ == "__main__":

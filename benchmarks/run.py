@@ -31,6 +31,7 @@ MODULES = [
     "benchmarks.fig21_e2e",
     "benchmarks.fig_availability",
     "benchmarks.kernel_bench",
+    "benchmarks.latency_bench",
     "benchmarks.roofline",
 ]
 
@@ -53,6 +54,13 @@ def perf_smoke():
     walk, bit-exactness on the timed subset) — plus the (tau x fp)
     grid-sweep benchmark behind ``benchmarks/fig17_sensitivity.py``.
 
+    Since the latency/QoS grid engine (``core/latency_engine.py``) it
+    also records the ``latency_*`` keys from
+    ``benchmarks/latency_bench.py``: the slowdown-band, zNUMA-spill and
+    LI+Eq.(1) grid passes timed against the scalar figure loops they
+    replaced (grid cells, wall seconds, per-pass speedups — each gated
+    at >=5x — and bitwise parity vs the scalar oracles).
+
     Since the unified sweep core it additionally records the
     ``stream_batch_*`` keys from ``benchmarks/azure_e2e.py``: the
     K-seed batched streaming sweep (``CompiledReplayStreamBatch``) vs
@@ -60,7 +68,8 @@ def perf_smoke():
     and the end-to-end chunked-dump replay (ingest VMs/s,
     candidate-events/s, peak shard bytes).
     """
-    from benchmarks import azure_e2e, fig3_poolsize, fig17_sensitivity
+    from benchmarks import (azure_e2e, fig3_poolsize, fig17_sensitivity,
+                            latency_bench)
     t0 = time.time()
     res = fig3_poolsize.run(quick=True)
     wall = time.time() - t0          # fig3-only: comparable across PRs
@@ -73,6 +82,10 @@ def perf_smoke():
           f"bit_exact={policy['bit_exact_subset']})")
     grid_res = fig17_sensitivity.run(quick=True)
     policy_wall = time.time() - t1
+    lat = latency_bench.latency_bench(quick=True)
+    print(f"  latency grids: {lat['grid_cells']} cells in "
+          f"{lat['wall_s']}s (min {lat['min_speedup']}x vs scalar "
+          f"figure loops, bit_exact={lat['bit_exact']})")
     batched = res.get("batched", {})
     narrow = batched.get("narrow2", {})
     streaming = res.get("streaming", {})
@@ -130,6 +143,15 @@ def perf_smoke():
         "policy_grid_pricing_wall_s": grid_res.get("pricing_wall_s"),
         "policy_grid_claims_pass": all(
             c["ok"] for c in grid_res.get("claims", [])),
+        "latency_grid_cells": lat.get("grid_cells"),
+        "latency_wall_s": lat.get("wall_s"),
+        "latency_min_speedup_vs_scalar": lat.get("min_speedup"),
+        "latency_bands_speedup": lat["passes"]["bands"]["speedup"],
+        "latency_spill_speedup": lat["passes"]["spill"]["speedup"],
+        "latency_combine_speedup": lat["passes"]["combine"]["speedup"],
+        "latency_bit_exact": lat.get("bit_exact"),
+        "latency_claims_pass": bool(
+            lat.get("bit_exact") and lat.get("min_speedup", 0.0) >= 5.0),
         "claims_pass": all(c["ok"] for c in res.get("claims", [])),
     }
     os.makedirs("experiments", exist_ok=True)
@@ -143,7 +165,8 @@ def perf_smoke():
           f"batch K={bench['stream_batch_k']} "
           f"{bench['stream_batch_speedup_vs_stream_loop']}x vs stream "
           f"loop, policy {bench['policy_vms_per_sec']} VMs/s "
-          f"({bench['policy_speedup_vs_scalar']}x) "
+          f"({bench['policy_speedup_vs_scalar']}x), latency grids "
+          f"{bench['latency_min_speedup_vs_scalar']}x min "
           f"-> experiments/BENCH_replay.json")
     return bench
 

@@ -58,7 +58,7 @@ import math
 
 import numpy as np
 
-from repro.core import policy_engine, replay_engine, traces
+from repro.core import policy_engine, qos, replay_engine, traces
 from repro.core.control_plane import ControlPlane
 
 
@@ -200,6 +200,10 @@ class PolicyResult:
     mispredictions: float
     mitigations: int
     reject_rate: float
+    # attached by savings_analysis(tier_hierarchy=...): QoS price of the
+    # pool split on a 3-tier hierarchy (list[TierPricing], one per
+    # far_frac grid point); None when priced on the flat 2-tier model
+    tier_pricing: "list[TierPricing] | None" = None
 
     @property
     def total_gb(self) -> float:
@@ -213,6 +217,58 @@ class PolicyResult:
     @property
     def savings(self) -> float:
         return 1.0 - self.total_gb / self.baseline_gb
+
+
+@dataclasses.dataclass
+class TierPricing:
+    """QoS price of one pool split on a tier hierarchy (one grid row)."""
+    far_frac: float            # share of each VM's pool GB on the far tier
+    cache_hit_rate: float
+    mean_slowdown: float       # mean slowdown factor across pooled VMs
+    max_slowdown: float
+    violation_frac: float      # fraction of VMs with slowdown-1 >= pdm
+
+
+def tiered_pricing(decisions, hierarchy=None, far_fracs=(0.0, 0.25, 0.5),
+                   pdm: float = 0.05, backend: str = "auto") -> list:
+    """Price a decision set's QoS on a parameterized tier hierarchy.
+
+    Each VM's pool share (``pool_gb / mem_gb`` — the traffic fraction
+    under the uniform-touch model) splits between the CXL pool and the
+    far tier by ``far_frac``; one ``latency_engine`` grid pass returns
+    the slowdown factors and the inclusive PDM-violation fraction per
+    config.  Capacity-wise the split leaves the DRAM totals (and hence
+    ``PolicyResult.savings``) unchanged — the hierarchy prices *where*
+    the pool GB live and what that costs in slowdown.
+
+    ``decisions``: ``policy_engine.PolicyDecisions`` (or anything with
+    ``local_gb``/``pool_gb`` arrays).  ``hierarchy``: a 3-tier
+    ``latency_model.TierHierarchy`` (default ``three_tier()``).
+    """
+    from repro.core import latency_engine, latency_model
+    hierarchy = hierarchy if hierarchy is not None \
+        else latency_model.TierHierarchy.three_tier()
+    if hierarchy.n_pool_tiers != 2:
+        raise ValueError("tiered_pricing prices local/CXL/far hierarchies")
+    mem = np.asarray(decisions.local_gb) + np.asarray(decisions.pool_gb)
+    traffic = np.where(mem > 0,
+                       np.asarray(decisions.pool_gb)
+                       / np.where(mem > 0, mem, 1.0), 0.0)
+    ratios, hits = latency_engine.hierarchy_params([hierarchy])
+    out = []
+    far_fracs = np.atleast_1d(np.asarray(far_fracs, float))
+    # (F, N, 2) traffic splits -> one grid pass -> (F, N, 1) slowdowns
+    fracs = np.stack([np.stack([traffic * (1.0 - f), traffic * f], -1)
+                      for f in far_fracs])
+    slow = latency_engine.hierarchy_slowdown_grid(
+        fracs, ratios, hits, backend=backend)[..., 0]
+    viol = latency_engine.pdm_violation_grid(slow - 1.0, [pdm],
+                                             backend=backend)[..., 0]
+    for fi, f in enumerate(far_fracs):
+        out.append(TierPricing(float(f), hierarchy.cache_hit_rate,
+                               float(slow[fi].mean()),
+                               float(slow[fi].max()), float(viol[fi])))
+    return out
 
 
 @dataclasses.dataclass
@@ -279,9 +335,10 @@ def policy_decisions(vms, policy: str,
         else:
             raise ValueError(policy)
         if fully:
-            mispred += 1.0 if slows[i] > pdm else 0.0
+            mispred += 1.0 if qos.exceeds_pdm(slows[i], pdm) else 0.0
         elif pool_gb > vm.untouched * vm.mem_gb + 1e-9:
-            mispred += spill_harm_prob if slows[i] > pdm else 0.0
+            mispred += spill_harm_prob if qos.exceeds_pdm(slows[i], pdm) \
+                else 0.0
         decisions.append(VMDecision(local_gb, pool_gb, fully, t_mig))
     mispred /= max(len(vms), 1)
     if as_arrays:
@@ -541,7 +598,9 @@ def savings_analysis(vms, cfg: ClusterConfig, policy: str,
                      cache: dict | None = None,
                      max_events_per_shard: int | None = None,
                      decisions: "policy_engine.PolicyDecisions | None"
-                     = None) -> PolicyResult:
+                     = None,
+                     tier_hierarchy=None,
+                     far_fracs=(0.0, 0.25, 0.5)) -> PolicyResult:
     """Minimum uniform (server_gb, pool_gb) that schedules the trace.
 
     With ``use_engine=True`` (default) the feasibility searches run on the
@@ -594,6 +653,17 @@ def savings_analysis(vms, cfg: ClusterConfig, policy: str,
     big_pool = hi_server * cfg.n_servers
     n_pts = 7
 
+    def _finish(res: PolicyResult) -> PolicyResult:
+        # tier_hierarchy: price the pool split's QoS on a 3-tier
+        # (local/CXL/far) hierarchy over the far_fracs grid — one
+        # latency_engine pass; DRAM totals/savings are unchanged
+        if tier_hierarchy is not None:
+            dec_arrays = dec_in if hasattr(dec_in, "local_gb") \
+                else policy_engine.decisions_from_list(dec_in)
+            res.tier_pricing = tiered_pricing(
+                dec_arrays, tier_hierarchy, far_fracs, pdm)
+        return res
+
     def _compile(vms_, dec_):
         # past the shard budget, stream instead of materializing one
         # monolithic padded event tensor (2 events per VM + 1 per QoS
@@ -620,8 +690,8 @@ def savings_analysis(vms, cfg: ClusterConfig, policy: str,
             lambda g: replay_reject_rate(vms, dec_local, cfg, g, 0.0)
             <= tol, 0.0, hi_server)
         if policy == "local":
-            return PolicyResult(policy, base_gb, 0.0, base_gb,
-                                cfg.n_servers, cfg.n_groups, mispred, 0, r0)
+            return _finish(PolicyResult(policy, base_gb, 0.0, base_gb,
+                                cfg.n_servers, cfg.n_groups, mispred, 0, r0))
         min_server = _search_min(
             lambda g: replay_reject_rate(vms, decisions, cfg, g, big_pool)
             <= tol, 0.0, hi_server)
@@ -635,8 +705,8 @@ def savings_analysis(vms, cfg: ClusterConfig, policy: str,
                 best = (total, float(sgb), float(pgb))
         _, server_gb, pool_gb = best
         rr = replay_reject_rate(vms, decisions, cfg, server_gb, pool_gb)
-        return PolicyResult(policy, server_gb, pool_gb, base_gb,
-                            cfg.n_servers, cfg.n_groups, mispred, mitig, rr)
+        return _finish(PolicyResult(policy, server_gb, pool_gb, base_gb,
+                            cfg.n_servers, cfg.n_groups, mispred, mitig, rr))
 
     eng = _compile(vms, dec_in)
     # cores-bound reject floor: memory tolerance is measured on top of it
@@ -651,8 +721,8 @@ def savings_analysis(vms, cfg: ClusterConfig, policy: str,
         if cache is not None:
             cache["local_engine"] = eng
             cache[("base_gb", tol)] = base_gb
-        return PolicyResult(policy, base_gb, 0.0, base_gb, cfg.n_servers,
-                            cfg.n_groups, mispred, 0, r0)
+        return _finish(PolicyResult(policy, base_gb, 0.0, base_gb, cfg.n_servers,
+                            cfg.n_groups, mispred, 0, r0))
     min_server = replay_engine.search_min_batched(
         lambda g: eng.reject_rates(g, big_pool, cap) <= tol,
         0.0, hi_server)
@@ -680,9 +750,9 @@ def savings_analysis(vms, cfg: ClusterConfig, policy: str,
     totals = cfg.n_servers * server_grid + cfg.n_groups * pool_grid
     rates = eng.reject_rates(server_grid, pool_grid)
     b = int(np.argmin(totals))
-    return PolicyResult(policy, float(server_grid[b]), float(pool_grid[b]),
+    return _finish(PolicyResult(policy, float(server_grid[b]), float(pool_grid[b]),
                         base_gb, cfg.n_servers, cfg.n_groups, mispred,
-                        mitig, float(rates[b]))
+                        mitig, float(rates[b])))
 
 
 def savings_analysis_batched(vms_list, cfg: ClusterConfig, policy: str,

@@ -16,6 +16,7 @@ small pools — 1/3 lower latency than switch-only designs.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 NUMA_LOCAL_NS = 78.0
 CXL_PORT_NS = 25.0
@@ -60,6 +61,111 @@ def latency_increase_pct(pool_sockets: int) -> float:
 
 
 # --------------------------------------------------------------- TPU tier --
+@dataclasses.dataclass(frozen=True)
+class MemoryTier:
+    """One level of a memory hierarchy: latency, bandwidth, capacity."""
+    name: str
+    latency_us: float
+    gbps: float = 13.0
+    capacity_gb: float = math.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class TierHierarchy:
+    """Parameterized tier hierarchy (Aquifer-style generalization).
+
+    ``tiers[0]`` is the local tier; every further tier is a pool level
+    (CXL pool, far CXL+RDMA, ...) ordered near to far.  The slowdown
+    model generalizes :meth:`TierModel.slowdown_factor`: a workload
+    sending traffic fraction ``f_t`` to tier ``t`` sees
+
+        slowdown = 1 + sum_t f_t * (r_eff_t - 1)
+
+    with ``r_eff_t = h + (1 - h) * latency_t / latency_local`` — ``h``
+    is the hit rate of a DRAM cache fronting the pool tiers (pooled-
+    memory prefetching; ``h = 0`` recovers the raw latency ratio).  For
+    two tiers and ``h = 0`` this is bit-identical to
+    ``TierModel.slowdown_factor`` (the parity contract the grid engine
+    tests against).
+    """
+    tiers: tuple[MemoryTier, ...]
+    cache_hit_rate: float = 0.0
+
+    def __post_init__(self):
+        if len(self.tiers) < 2:
+            raise ValueError("TierHierarchy needs a local + >=1 pool tier")
+
+    @classmethod
+    def from_tier_model(cls, tm: "TierModel | None" = None,
+                        cache_hit_rate: float = 0.0) -> "TierHierarchy":
+        tm = tm if tm is not None else TierModel()
+        return cls((MemoryTier("local", tm.hbm_latency_us, tm.hbm_gbps),
+                    MemoryTier("cxl_pool", tm.pool_latency_us,
+                               tm.pool_gbps)),
+                   cache_hit_rate)
+
+    @classmethod
+    def three_tier(cls, far_latency_us: float = 5.0,
+                   far_gbps: float = 6.0,
+                   cxl_capacity_gb: float = math.inf,
+                   far_capacity_gb: float = math.inf,
+                   cache_hit_rate: float = 0.0) -> "TierHierarchy":
+        """local / CXL pool / far (CXL+RDMA) — Aquifer-style far tier."""
+        tm = TierModel()
+        return cls((MemoryTier("local", tm.hbm_latency_us, tm.hbm_gbps),
+                    MemoryTier("cxl_pool", tm.pool_latency_us,
+                               tm.pool_gbps, cxl_capacity_gb),
+                    MemoryTier("far_pool", far_latency_us, far_gbps,
+                               far_capacity_gb)),
+                   cache_hit_rate)
+
+    @property
+    def n_pool_tiers(self) -> int:
+        return len(self.tiers) - 1
+
+    def latency_ratio(self, i: int) -> float:
+        return self.tiers[i].latency_us / self.tiers[0].latency_us
+
+    def effective_ratio(self, i: int) -> float:
+        """Latency ratio of tier ``i`` behind the DRAM cache front."""
+        if i == 0:
+            return 1.0
+        h = self.cache_hit_rate
+        return h + (1.0 - h) * self.latency_ratio(i)
+
+    def slowdown_factor(self, pool_traffic_fracs) -> float:
+        """``pool_traffic_fracs[t]`` = traffic fraction to tier ``t+1``.
+
+        Accepts a scalar for 2-tier hierarchies (the TierModel-
+        compatible signature).  Terms accumulate in tier order — the
+        exact fold the grid engine replicates elementwise.
+        """
+        if not hasattr(pool_traffic_fracs, "__len__"):
+            pool_traffic_fracs = (pool_traffic_fracs,)
+        if len(pool_traffic_fracs) != self.n_pool_tiers:
+            raise ValueError(
+                f"expected {self.n_pool_tiers} pool-traffic fractions, "
+                f"got {len(pool_traffic_fracs)}")
+        s = 1.0
+        for i, f in enumerate(pool_traffic_fracs, start=1):
+            s += f * (self.effective_ratio(i) - 1.0)
+        return s
+
+    def spill_fractions(self, demand_gb: float):
+        """Waterfall fill near-to-far: GB landing on each tier plus any
+        unplaceable remainder (local fills first — the zNUMA bias)."""
+        fills, rem = [], float(demand_gb)
+        for t in self.tiers:
+            take = min(rem, t.capacity_gb)
+            fills.append(take)
+            rem -= take
+        return fills, rem
+
+    def transfer_s(self, nbytes: float, i: int) -> float:
+        t = self.tiers[i]
+        return t.latency_us * 1e-6 + nbytes / (t.gbps * 1e9)
+
+
 @dataclasses.dataclass(frozen=True)
 class TierModel:
     """Pond-JAX tier cost model (DESIGN.md §2): chip HBM vs host pool."""

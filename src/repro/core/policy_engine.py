@@ -69,7 +69,7 @@ import math
 
 import numpy as np
 
-from repro.core import traces
+from repro.core import qos, traces
 
 #: quantiles of the customer history used as UM-model features
 #: (``traces.metadata_features``)
@@ -369,7 +369,8 @@ def policy_decisions_compiled(vms, policy: str, control_plane=None,
         raise ValueError(policy)
 
     spill = pool > table.untouched * mem + 1e-9
-    mispred = _sequential_mispred(fully, spill, slows > pdm,
+    mispred = _sequential_mispred(fully, spill,
+                                  qos.exceeds_pdm(slows, pdm),
                                   spill_harm_prob, n)
     return PolicyDecisions(local, pool, fully, t_mig, mispred, n_mitig)
 
@@ -521,7 +522,7 @@ def grid_decisions(vms_list, settings, li_model, um_models: dict,
         spilled = fully | spill
         mitigate = (pool > 0) & spilled & (p >= s.li_threshold)
         t_mig = np.where(mitigate, arrival + _MONITOR_DELAY, np.nan)
-        harm = slows > s.pdm
+        harm = qos.exceeds_pdm(slows, s.pdm)
         row = []
         lo = 0
         for k, hi in enumerate([*splits, len(mem)]):

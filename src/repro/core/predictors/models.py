@@ -18,6 +18,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.qos import exceeds_pdm
 from repro.core.predictors.forest import RandomForest, fit_forest
 from repro.core.predictors.gbm import QuantileGBM, fit_gbm
 
@@ -37,7 +38,7 @@ class LatencySensitivityModel:
     def fit(self, pmu_features: np.ndarray, slowdowns: np.ndarray,
             seed: int = 0):
         """slowdowns: relative (0.03 = 3%).  Label 1 = sensitive."""
-        y = (slowdowns > self.pdm).astype(np.float32)
+        y = exceeds_pdm(slowdowns, self.pdm).astype(np.float32)
         self.forest = fit_forest(pmu_features, y, seed=seed)
         return self
 
@@ -57,7 +58,7 @@ class LatencySensitivityModel:
 
     def curve(self, pmu_features, slowdowns, thresholds=None):
         """Figure 17: (LI, FP) as the threshold sweeps."""
-        sens = slowdowns > self.pdm
+        sens = exceeds_pdm(slowdowns, self.pdm)
         p = self.p_sensitive(pmu_features)
         pts = []
         ths = thresholds if thresholds is not None \
@@ -81,7 +82,7 @@ class LatencySensitivityModel:
 def heuristic_curve(counter: np.ndarray, slowdowns: np.ndarray,
                     pdm: float = 0.05):
     """Single-counter threshold baselines (Fig 17: Memory/DRAM bound)."""
-    sens = slowdowns > pdm
+    sens = exceeds_pdm(slowdowns, pdm)
     pts = []
     for t in np.quantile(counter, np.linspace(0, 1, 101)):
         li = counter < t

@@ -18,6 +18,21 @@ import numpy as np
 from repro.core.latency_model import migration_seconds
 
 
+def exceeds_pdm(slowdown, pdm: float):
+    """Canonical PDM-violation predicate: slowdown AT the margin counts.
+
+    The paper's tail-latency predicate is inclusive (a VM whose
+    slowdown reaches the performance degradation margin has exhausted
+    it), matching the monitor's ``p >= threshold`` mitigation trigger
+    below.  The seed code used a strict ``>`` in the sensitivity
+    labels / misprediction accounting, silently excusing boundary
+    workloads — every harm/label site now routes through this
+    predicate (see tests/test_latency_engine.py regression).
+    Works elementwise on arrays.
+    """
+    return slowdown >= pdm
+
+
 @dataclasses.dataclass
 class Mitigation:
     vm_id: int

@@ -96,11 +96,19 @@ class ZNumaAllocator:
         self.pool_allocs = 0
 
     def alloc(self) -> int:
-        """Returns a global block id; local ids < num_local."""
-        self.allocs += 1
+        """Returns a global block id; local ids < num_local.
+
+        Only SUCCESSFUL allocations count toward ``allocs``: the seed
+        code incremented before checking the free lists, so a failed
+        (MemoryError) allocation deflated ``spill_fraction`` — the
+        quantity Fig 16 sweeps (regression pinned in
+        tests/test_latency_engine.py).
+        """
         if self.free_local:
+            self.allocs += 1
             return self.free_local.pop()
         if self.free_pool:
+            self.allocs += 1
             self.pool_allocs += 1
             return self.free_pool.pop()
         raise MemoryError("zNUMA: both tiers exhausted")

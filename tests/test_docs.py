@@ -86,6 +86,35 @@ def test_readme_covers_policy_engine():
         assert topic in text, f"README misses {topic!r}"
 
 
+def test_latency_engine_doc_exists_and_covers_architecture():
+    text = _read("docs", "latency_engine.md")
+    for topic in ("latency_engine", "slowdown_band_grid", "spill_grid",
+                  "li_curve_grid", "um_curve_grid", "combine_grid",
+                  "pdm_violation_grid", "hierarchy_slowdown_grid",
+                  "TierHierarchy", "tiered_pricing", "bit-exact",
+                  "lax.scan", "backend",
+                  # the pinned seed-bug fixes
+                  "exceeds_pdm", "interp_tradeoff", "spill_fraction",
+                  # perf tracking
+                  "latency_bench", "--what latency", "latency_*",
+                  "tests/golden"):
+        assert topic.lower() in text.lower(), \
+            f"docs/latency_engine.md misses {topic!r}"
+    # the oracle modules stay named (they remain the parity reference)
+    for oracle in ("latency_model", "znuma", "qos", "eqn1"):
+        assert oracle in text, \
+            f"docs/latency_engine.md misses oracle {oracle!r}"
+
+
+def test_readme_covers_latency_engine():
+    text = _read("README.md")
+    for topic in ("latency_engine", "TierHierarchy",
+                  "docs/latency_engine.md", "--what latency",
+                  "latency_*", "benchmarks/latency_bench.py",
+                  "tests/golden"):
+        assert topic in text, f"README misses {topic!r}"
+
+
 def test_traces_doc_covers_schema_and_ingestion():
     text = _read("docs", "traces.md")
     for topic in ("arrival", "lifetime", "cores", "mem_gb",  # schema

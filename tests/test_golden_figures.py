@@ -1,0 +1,119 @@
+"""Golden-figure regression tests for the grid-engine benchmark quick
+runs (Figs 4, 7, 16, 18, 20).
+
+Each figure's quick run reduces to a compact numeric summary compared
+against a JSON snapshot in ``tests/golden/``.  Regenerate after an
+intentional behavior change with::
+
+    REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_golden_figures.py
+
+Tolerances (documented per figure below):
+
+* fig7  — EXACT: pure analytic latency model, no data dependence.
+* fig4  — EXACT: seeded trace sampling + integer band counts; the
+  band fractions are single float64 divisions.
+* fig16 — EXACT: seeded synthetic event streams + integer spill
+  counters; slowdowns are a fixed float64 fold.
+* fig18/fig20 — rel 1e-6: GBM/forest fits accumulate float32 sums
+  whose order libc/BLAS may legally perturb; the curve points and
+  operating points are stable well past 1e-6.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+REGEN = bool(os.environ.get("REGEN_GOLDEN"))
+
+pytest.importorskip("benchmarks.common")
+
+
+def _check(name: str, summary: dict, rel: float):
+    path = os.path.join(GOLDEN_DIR, f"{name}.json")
+    if REGEN or not os.path.isfile(path):
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(summary, f, indent=1, sort_keys=True)
+        if REGEN:
+            pytest.skip(f"regenerated {path}")
+        pytest.fail(f"golden snapshot {path} was missing; generated it — "
+                    "inspect and commit")
+    golden = json.load(open(path))
+    assert set(summary) == set(golden), (
+        f"{name}: summary keys changed {sorted(summary)} vs "
+        f"{sorted(golden)}")
+    for key, want in golden.items():
+        got = summary[key]
+        if rel == 0.0:
+            assert got == want, f"{name}[{key}]: {got!r} != {want!r}"
+        else:
+            np.testing.assert_allclose(
+                np.asarray(got, float), np.asarray(want, float),
+                rtol=rel, atol=rel,
+                err_msg=f"{name}[{key}] drifted past rtol={rel}")
+
+
+def _claims_ok(res: dict) -> bool:
+    return all(c["ok"] for c in res.get("claims", []))
+
+
+def test_fig7_latency_golden():
+    from benchmarks import fig7_latency
+    res = fig7_latency.run(quick=True)
+    assert _claims_ok(res)
+    assert res["perf"]["bit_exact"]
+    _check("fig7", {
+        "rows": [list(r) for r in res["rows"]],
+        "tiers": [[name, effs] for name, effs in res["tiers"]],
+    }, rel=0.0)
+
+
+def test_fig4_sensitivity_golden():
+    from benchmarks import fig4_sensitivity
+    res = fig4_sensitivity.run(quick=True)
+    assert _claims_ok(res)
+    assert res["perf"]["bit_exact"]
+    _check("fig4", {
+        "bands_182": [res[182]["lt1"], res[182]["lt5"], res[182]["gt25"]],
+        "bands_222": [res[222]["lt1"], res[222]["lt5"], res[222]["gt25"]],
+        "std_182": res[182]["std"],
+        "std_222": res[222]["std"],
+    }, rel=0.0)
+
+
+def test_fig16_spill_golden():
+    from benchmarks import fig16_spill
+    res = fig16_spill.run(quick=True)
+    assert _claims_ok(res)
+    assert res["perf"]["bit_exact"]
+    _check("fig16", {"rows": [list(r) for r in res["rows"]]}, rel=0.0)
+
+
+def test_fig18_um_model_golden():
+    from benchmarks import fig18_um_model
+    res = fig18_um_model.run(quick=True)
+    assert _claims_ok(res)
+    assert res["perf"]["bit_exact"]
+    _check("fig18", {
+        "gbm": [list(r) for r in res["gbm"]],
+        "static": [list(r) for r in res["static"]],
+    }, rel=1e-6)
+
+
+def test_fig20_combined_golden():
+    from benchmarks import fig20_combined
+    res = fig20_combined.run(quick=True)
+    assert _claims_ok(res)
+    assert res["perf"]["bit_exact"]
+    _check("fig20", {
+        "pt_182": [res[182]["pool_frac"], res[182]["li"],
+                   res[182]["um"], res[182]["mispred"]],
+        "pt_222": [res[222]["pool_frac"], res[222]["li"],
+                   res[222]["um"], res[222]["mispred"]],
+        "fold_mean": res["fold_pool_frac"]["mean"],
+        "fold_std": res["fold_pool_frac"]["std"],
+    }, rel=1e-6)

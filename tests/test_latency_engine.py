@@ -1,0 +1,392 @@
+"""Parity suite for the latency/QoS grid engine (core/latency_engine).
+
+Every grid entry point is checked BITWISE against the scalar seed code
+it replaced — across >=3 seeds, both backends, and grid shapes
+including the degenerate (one row, one config) and padded-bucket
+boundary cases — plus pinned regressions for the three seed bugs fixed
+alongside the engine (zNUMA failed-alloc accounting, the exclusive-``>``
+PDM boundary, ``np.interp`` on unsorted tradeoff curves).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import eqn1, qos, sweep_core
+from repro.core import latency_engine as le
+from repro.core import latency_model as lm
+from repro.core.znuma import ZNumaAllocator
+
+BACKENDS = ["numpy"] + (["jax"] if sweep_core.jax_importable() else [])
+SEEDS = (0, 1, 2)
+
+
+def _spill_tuple(g, idx=()):
+    return tuple(int(np.asarray(a)[idx]) for a in
+                 (g.allocs, g.pool_allocs, g.failed, g.local_in_use,
+                  g.pool_in_use))
+
+
+# ------------------------------------------------------- Fig 7/8 grids --
+def test_latency_ns_grids_match_scalar():
+    sockets = np.arange(1, 81)
+    pond = le.pond_latency_ns_grid(sockets)
+    sw = le.switch_only_latency_ns_grid(sockets)
+    add = le.added_latency_ns_grid(sockets)
+    pct = le.latency_increase_pct_grid(sockets)
+    for i, s in enumerate(sockets):
+        assert pond[i] == lm.pond_latency_ns(int(s))
+        assert sw[i] == lm.switch_only_latency_ns(int(s))
+        assert add[i] == lm.added_latency_ns(int(s))
+        assert pct[i] == lm.latency_increase_pct(int(s))
+
+
+# ------------------------------------------------------ slowdown bands --
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("shape", [(40,), (1,), (1, 40), (3, 2, 25)])
+def test_slowdown_band_grid_parity(backend, seed, shape):
+    slow = np.random.default_rng(seed).lognormal(-3, 1.2, size=shape)
+    bands = le.slowdown_band_grid(slow, backend=backend)
+    flat = slow.reshape(-1, shape[-1])
+    ref = np.array([[(s < .01).mean(), (s < .05).mean(),
+                     (s > .25).mean()] for s in flat])
+    assert bands.shape == shape[:-1] + (3,)
+    assert bands.reshape(-1, 3).tolist() == ref.tolist()
+
+
+# -------------------------------------------------- hierarchy slowdowns --
+def _random_hierarchies(rng, depth: int, c: int):
+    out = []
+    for _ in range(c):
+        lats = np.sort(rng.uniform(0.2, 6.0, size=depth + 1))
+        tiers = tuple(lm.MemoryTier(f"t{i}", float(l))
+                      for i, l in enumerate(lats))
+        out.append(lm.TierHierarchy(
+            tiers, cache_hit_rate=float(rng.uniform(0, 0.9))))
+    return out
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("depth,c", [(1, 1), (1, 4), (2, 3)])
+def test_hierarchy_slowdown_grid_parity(backend, seed, depth, c):
+    rng = np.random.default_rng(seed)
+    hs = _random_hierarchies(rng, depth, c)
+    fracs = rng.uniform(0, 0.5, size=(7, depth))
+    ratios, hits = le.hierarchy_params(hs)
+    grid = le.hierarchy_slowdown_grid(fracs, ratios, hits,
+                                      backend=backend)
+    assert grid.shape == (7, c)
+    for i in range(7):
+        for j, h in enumerate(hs):
+            assert grid[i, j] == h.slowdown_factor(fracs[i])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_hierarchy_grid_matches_tier_model(backend):
+    """2-tier, no cache: bit-identical to the seed TierModel."""
+    tm = lm.TierModel()
+    h = lm.TierHierarchy.from_tier_model(tm)
+    fracs = np.linspace(0, 1, 11)[:, None]
+    ratios, hits = le.hierarchy_params([h])
+    grid = le.hierarchy_slowdown_grid(fracs, ratios, hits,
+                                      backend=backend)[:, 0]
+    for i, f in enumerate(fracs[:, 0]):
+        assert grid[i] == tm.slowdown_factor(float(f))
+        assert grid[i] == h.slowdown_factor(float(f))
+
+
+def test_hierarchy_params_rejects_mixed_depths():
+    with pytest.raises(ValueError):
+        le.hierarchy_params([lm.TierHierarchy.from_tier_model(),
+                             lm.TierHierarchy.three_tier()])
+
+
+# ------------------------------------------------------- PDM violations --
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_pdm_violation_grid_parity(backend, seed):
+    rng = np.random.default_rng(seed)
+    s = rng.lognormal(-3, 1.0, size=(4, 30))
+    pdms = np.array([0.01, 0.05, 0.25])
+    grid = le.pdm_violation_grid(s, pdms, backend=backend)
+    for i in range(4):
+        for j, pdm in enumerate(pdms):
+            assert grid[i, j] == qos.exceeds_pdm(s[i], pdm).mean()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_pdm_boundary_is_inclusive(backend):
+    """Regression: a slowdown exactly AT the margin counts (the seed
+    code's strict ``>`` silently excused boundary workloads)."""
+    s = np.array([0.04, 0.05, 0.06])
+    grid = le.pdm_violation_grid(s, [0.05], backend=backend)
+    assert grid[0] == pytest.approx(2.0 / 3.0)
+    assert bool(qos.exceeds_pdm(0.05, 0.05))
+    assert not qos.exceeds_pdm(0.049999, 0.05)
+
+
+# --------------------------------------------------------- spill grids --
+def _random_events(rng, n_keys: int, n_events: int):
+    held = set()
+    ev = []
+    for _ in range(n_events):
+        if held and rng.random() < 0.4:
+            k = int(rng.choice(sorted(held)))
+            held.discard(k)
+            ev.append(("free", k))
+        else:
+            k = int(rng.integers(n_keys))
+            if k not in held:
+                held.add(k)
+                ev.append(("alloc", k))
+    return ev
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("c", [1, 2, 3, 5, 17])
+def test_spill_grid_parity(backend, seed, c):
+    """Config counts straddle the sweep-core bucket widths (2, 4, 16,
+    32) so padded lanes replicate-and-slice correctly; configs include
+    exhaustion (0 local / 0 pool) so failures exercise both tiers."""
+    rng = np.random.default_rng(seed)
+    kinds, keys = le.compile_block_events(_random_events(rng, 24, 120))
+    base = [(0, 4), (4, 0), (3, 5), (0, 0), (8, 64)]
+    nl = np.array([base[i % len(base)][0] + i for i in range(c)])
+    np_ = np.array([base[i % len(base)][1] for i in range(c)])
+    grid = le.spill_grid(kinds, keys, nl, np_, backend=backend)
+    assert grid.allocs.shape == (c,)
+    for i in range(c):
+        ref = le.scalar_spill_replay(kinds, keys, nl[i], np_[i])
+        assert _spill_tuple(grid, (i,)) == _spill_tuple(ref)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_spill_grid_batched_with_padding(backend):
+    """(K, E) ragged streams padded with PAD events stay per-stream
+    bit-exact (PAD is a no-op on every lane)."""
+    streams = [_random_events(np.random.default_rng(s), 16, 60 + 10 * s)
+               for s in range(3)]
+    compiled = [le.compile_block_events(ev) for ev in streams]
+    e = max(len(k) for k, _ in compiled)
+    pad = lambda a, v: np.concatenate(
+        [a, np.full(e - len(a), v, np.int32)])
+    kinds = np.stack([pad(k, le.PAD) for k, _ in compiled])
+    keys = np.stack([pad(b, 0) for _, b in compiled])
+    nl, np_ = np.array([2, 6, 0]), np.array([4, 2, 8])
+    grid = le.spill_grid(kinds, keys, nl, np_, backend=backend)
+    for s, (k, b) in enumerate(compiled):
+        for i in range(3):
+            ref = le.scalar_spill_replay(k, b, nl[i], np_[i])
+            assert _spill_tuple(grid, (s, i)) == _spill_tuple(ref)
+
+
+def test_spill_grid_backends_agree():
+    if "jax" not in BACKENDS:
+        pytest.skip("jax not importable")
+    rng = np.random.default_rng(7)
+    kinds, keys = le.compile_block_events(_random_events(rng, 12, 80))
+    nl, np_ = np.array([1, 3, 9]), np.array([2, 2, 2])
+    a = le.spill_grid(kinds, keys, nl, np_, backend="numpy")
+    b = le.spill_grid(kinds, keys, nl, np_, backend="jax")
+    for i in range(3):
+        assert _spill_tuple(a, (i,)) == _spill_tuple(b, (i,))
+
+
+def test_spill_fraction_guards_zero_allocs():
+    g = le.spill_grid(np.array([], np.int32), np.array([], np.int32),
+                      [4], [4], backend="numpy")
+    assert g.spill_fraction[0] == 0.0
+
+
+def test_znuma_failed_allocs_not_counted():
+    """Regression: ``ZNumaAllocator.allocs`` counts SUCCESSFUL
+    allocations only — the seed incremented before the free-list check,
+    deflating ``spill_fraction`` whenever allocations failed."""
+    a = ZNumaAllocator(num_local=1, num_pool=1)
+    a.alloc()
+    a.alloc()
+    with pytest.raises(MemoryError):
+        a.alloc()
+    assert a.allocs == 2
+    assert a.pool_allocs == 1
+    assert a.spill_fraction == 0.5
+
+
+# ----------------------------------------------------- LI/UM/combine --
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("n", [1, 137])
+def test_li_curve_grid_parity(backend, seed, n):
+    rng = np.random.default_rng(seed)
+    p = np.round(rng.random(n), 2)       # exercises threshold ties
+    sens = rng.random(n) < 0.3
+    ths, li, fp = le.li_curve_grid(p, sens, backend=backend)
+    for i, t in enumerate(ths):
+        li_ref = p < t                   # LatencySensitivityModel.curve
+        assert li[i] == li_ref.mean()
+        assert fp[i] == (li_ref & sens).mean()
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("t", [1, 5])
+def test_um_curve_grid_parity(seed, t):
+    rng = np.random.default_rng(seed)
+    preds = rng.random((t, 61))
+    actual = rng.random(61)
+    um, op = le.um_curve_grid(preds, actual)
+    for i in range(t):
+        assert um[i] == preds[i].mean()
+        assert op[i] == (actual < preds[i]).mean()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_combine_grid_parity(backend, seed):
+    rng = np.random.default_rng(seed)
+    li_curve = [(float(u), float(f)) for u, f in
+                zip(np.sort(rng.random(21)), np.sort(rng.random(21) / 8))]
+    um_curve = [(float(u), float(f)) for u, f in
+                zip(np.sort(rng.random(9)), np.sort(rng.random(9) / 10))]
+    budgets = [0.0, 0.01, 0.02, 0.1, 1.0]
+    pts = le.combine_grid(li_curve, um_curve, budgets, backend=backend)
+    for b, pt in zip(budgets, pts):
+        assert pt == eqn1.combine(li_curve, um_curve, float(b))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_combine_grid_tie_break(backend):
+    """Equal-value candidates: the scalar nested loop keeps the FIRST
+    strict max (li-major order) — the flattened argmax must agree."""
+    li_curve = [(0.5, 0.0), (0.5, 0.0)]
+    um_curve = [(0.2, 0.0), (0.2, 0.0)]
+    pt = le.combine_grid(li_curve, um_curve, [0.05], backend=backend)[0]
+    assert pt == eqn1.combine(li_curve, um_curve, 0.05)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_combine_grid_empty_budget(backend):
+    """No feasible candidate -> the zero operating point."""
+    li_curve = [(0.4, 0.5)]              # fp way over budget
+    um_curve = [(0.3, 0.5)]
+    pt = le.combine_grid(li_curve, um_curve, [0.001],
+                         backend=backend)[0]
+    assert pt == eqn1.combine(li_curve, um_curve, 0.001)
+    assert pt.pool_dram_frac == 0
+
+
+# ---------------------------------------------------- QoS mitigations --
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_qos_mitigation_grid_parity(backend, seed):
+    rng = np.random.default_rng(seed)
+    n = 60
+    p = np.round(rng.random(n), 2)
+    spilled = rng.random(n) < 0.6
+    pool_gb = np.where(rng.random(n) < 0.8, rng.uniform(1, 8, n), 0.0)
+    migrated = rng.random(n) < 0.1
+    ths = np.array([0.0, 0.35, 0.5, 1.0])
+    mit, n_mit = le.qos_mitigation_grid(p, spilled, pool_gb, ths,
+                                        migrated=migrated,
+                                        backend=backend)
+    for c, t in enumerate(ths):
+        mgr = qos.MitigationManager()
+        mgr.migrated = {i for i in range(n) if migrated[i]}
+        probs = {}
+
+        def p_sens(pmu):
+            return np.array([probs[int(pmu[0, 0])]])
+
+        mon = qos.QoSMonitor(0.05, p_sens, float(t), mgr)
+        for i in range(n):
+            probs[i] = p[i]
+            got = mon.check(i, np.array([float(i)]), bool(spilled[i]),
+                            float(pool_gb[i]), now=0.0)
+            assert mit[c, i] == (got is not None)
+        assert int(n_mit[c]) == len(mgr.log)
+        assert int(n_mit[c]) == int(mit[c].sum())
+
+
+# -------------------------------------------------- tradeoff interp fix --
+def test_interp_tradeoff_unsorted_curve():
+    """Regression: the seed Fig 18/20 paths fed tradeoff curves straight
+    to ``np.interp``, which silently returns garbage when the curve is
+    not monotone in ``xp``."""
+    xp, fp = [0.3, 0.1, 0.2], [3.0, 1.0, 2.0]
+    assert le.interp_tradeoff(0.15, xp, fp) == 1.5
+    # sorted inputs: bitwise np.interp
+    xs = np.linspace(0, 1, 9)
+    assert np.array_equal(le.interp_tradeoff(xs, [0.0, 1.0], [0.0, 2.0]),
+                          np.interp(xs, [0.0, 1.0], [0.0, 2.0]))
+
+
+# ----------------------------------------------- 3-tier model + pricing --
+def test_tier_hierarchy_waterfall_spill():
+    h = lm.TierHierarchy.three_tier(cxl_capacity_gb=10.0,
+                                    far_capacity_gb=5.0)
+    h = lm.TierHierarchy((lm.MemoryTier("local", 0.1, capacity_gb=20.0),)
+                         + h.tiers[1:], cache_hit_rate=0.0)
+    fills, rem = h.spill_fractions(35.0)
+    assert [float(f) for f in fills] == [20.0, 10.0, 5.0]
+    assert rem == 0.0
+    fills, rem = h.spill_fractions(40.0)
+    assert rem == 5.0
+
+
+def test_tier_hierarchy_requires_two_tiers():
+    with pytest.raises(ValueError):
+        lm.TierHierarchy((lm.MemoryTier("only", 0.1),))
+
+
+def test_tiered_pricing_matches_hierarchy_model():
+    from repro.core import cluster_sim, policy_engine
+    dec = policy_engine.PolicyDecisions(
+        local_gb=np.array([6.0, 4.0, 8.0, 0.0]),
+        pool_gb=np.array([2.0, 4.0, 0.0, 0.0]),
+        fully_pooled=np.zeros(4, bool),
+        t_migrate=np.full(4, np.nan))
+    h = lm.TierHierarchy.three_tier(cache_hit_rate=0.25)
+    rows = cluster_sim.tiered_pricing(dec, h, far_fracs=(0.0, 0.5),
+                                      pdm=0.05)
+    assert [r.far_frac for r in rows] == [0.0, 0.5]
+    traffic = np.array([0.25, 0.5, 0.0, 0.0])
+    for row, f in zip(rows, (0.0, 0.5)):
+        slows = np.array([h.slowdown_factor([t * (1 - f), t * f])
+                          for t in traffic])
+        assert row.mean_slowdown == slows.mean()
+        assert row.max_slowdown == slows.max()
+        assert row.violation_frac == \
+            qos.exceeds_pdm(slows - 1.0, 0.05).mean()
+    assert rows[0].mean_slowdown <= rows[1].mean_slowdown
+
+
+def test_tiered_pricing_rejects_two_tier_hierarchy():
+    from repro.core import cluster_sim, policy_engine
+    dec = policy_engine.PolicyDecisions(
+        local_gb=np.array([1.0]), pool_gb=np.array([1.0]),
+        fully_pooled=np.zeros(1, bool), t_migrate=np.full(1, np.nan))
+    with pytest.raises(ValueError):
+        cluster_sim.tiered_pricing(dec, lm.TierHierarchy.from_tier_model())
+
+
+def test_savings_analysis_attaches_tier_pricing():
+    from benchmarks import common
+    from repro.core import cluster_sim
+    vms = list(common.population().sample_vms(120, 86400, seed=5,
+                                              start_id=10 ** 6))
+    cfg = cluster_sim.ClusterConfig(n_servers=4, pool_sockets=8,
+                                    gb_per_core=4.75)
+    res = cluster_sim.savings_analysis(
+        vms, cfg, "static", static_pool_frac=0.15,
+        tier_hierarchy=lm.TierHierarchy.three_tier(cache_hit_rate=0.3),
+        far_fracs=(0.0, 0.5))
+    assert res.tier_pricing is not None
+    assert [p.far_frac for p in res.tier_pricing] == [0.0, 0.5]
+    assert res.tier_pricing[0].mean_slowdown <= \
+        res.tier_pricing[1].mean_slowdown
+    # default: no hierarchy -> no pricing attached
+    res2 = cluster_sim.savings_analysis(vms, cfg, "static",
+                                        static_pool_frac=0.15)
+    assert res2.tier_pricing is None

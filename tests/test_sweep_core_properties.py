@@ -1,0 +1,227 @@
+"""Property-based tests for the sweep-core packing/padding rules.
+
+Uses hypothesis when installed, else the deterministic stub
+(tests/_hypothesis_stub.py) — each property runs as a seeded example
+sweep either way.  These pin the invariants every compiled engine
+leans on: dtype selection never packs an overflow-able trace to int16
+(including the MIGRATE pool-deficit bound), padding helpers are
+monotone and idempotent, padded lanes replicate real candidates, and
+the packed carry round-trips bitwise through ``device_put``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.core import sweep_core as sc
+
+
+# ------------------------------------------------------------- padding --
+@settings(max_examples=25)
+@given(st.integers(0, 5000), st.integers(1, 128),
+       st.integers(1, 256))
+def test_pad_up_properties(n, granularity, minimum):
+    out = sc.pad_up(n, granularity, minimum)
+    assert out >= n
+    assert out >= minimum
+    assert out % granularity == 0 or out == minimum
+    # idempotent: padding an already padded size changes nothing
+    if out % granularity == 0:
+        assert sc.pad_up(out, granularity, minimum) == out
+    # monotone in n
+    assert sc.pad_up(n + 1, granularity, minimum) >= out
+
+
+@settings(max_examples=25)
+@given(st.integers(1, 300))
+def test_bucket_width_properties(k):
+    w = sc.bucket_width(k)
+    assert w in sc.BUCKETS
+    if k <= sc.BUCKETS[-1]:
+        assert w >= k               # a chunk always fits its bucket
+    else:
+        assert w == sc.BUCKETS[-1]  # chunking caps the width
+    # monotone + idempotent
+    assert sc.bucket_width(k + 1) >= w
+    assert sc.bucket_width(w) == w
+
+
+def test_candidate_chunks_cover_range():
+    for n in (1, 2, 95, 96, 97, 200):
+        chunks = list(sc.candidate_chunks(n))
+        assert chunks[0][0] == 0 and chunks[-1][1] == n
+        for (lo, hi, w), nxt in zip(chunks, chunks[1:]):
+            assert nxt[0] == hi
+        assert all(w == sc.bucket_width(hi - lo)
+                   for lo, hi, w in chunks)
+
+
+# --------------------------------------------------------- state dtype --
+@settings(max_examples=40)
+@given(st.integers(1, 200), st.integers(1, 64),
+       st.lists(st.integers(0, 40000), min_size=1, max_size=8),
+       st.integers(0, 40000), st.integers(0, 2000),
+       st.integers(0, 2000), st.integers(0, 40000))
+def test_pick_state_dtype_never_overflows_int16(
+        cores, n_servers, sgb, pgb_max, pay_mem, pay_pool, mig_pool):
+    """Whenever int16 is picked, every sweep intermediate provably fits:
+    capacity + payload, the packed slot values, the best-fit sentinel,
+    and the MIGRATE pool-deficit bound (used-pool can go negative by at
+    most ``mig_pool_sum``)."""
+    sgb_i = np.asarray(sgb, np.int64)
+    pgb_i = np.minimum(sgb_i, pgb_max)
+    dt = sc.pick_state_dtype(cores, n_servers, sgb_i, pgb_i,
+                             pay_mem, pay_pool, mig_pool_sum=mig_pool)
+    assert dt in ("int16", "int32")
+    if dt == "int16":
+        info = np.iinfo(np.int16)
+        assert sgb_i.max() + pay_mem <= info.max
+        assert pgb_i.max() + pay_pool <= info.max
+        # the migrate deficit can drive used-pool to -mig_pool_sum and
+        # admission adds one more payload on top
+        assert mig_pool + pay_pool <= info.max
+        assert -(mig_pool + pay_pool) >= info.min
+        assert cores < sc.I16_BIG
+        assert n_servers * 2 + 1 < sc.I16_BIG
+
+
+def test_pick_state_dtype_mig_pool_deficit_blocks_int16():
+    """Regression: a trace whose compiled MIGRATE events can drive the
+    used-pool carry below int16 range must fall back to int32 even when
+    the static capacities alone would fit."""
+    sgb_i = np.array([100, 200])
+    pgb_i = np.array([50, 80])
+    assert sc.pick_state_dtype(96, 16, sgb_i, pgb_i, 64, 32) == "int16"
+    assert sc.pick_state_dtype(96, 16, sgb_i, pgb_i, 64, 32,
+                               mig_pool_sum=sc.I16_SAFE) == "int32"
+    # negative capacities (infinite-probe sentinels) always force int32
+    assert sc.pick_state_dtype(96, 16, np.array([-1]), np.array([0]),
+                               0, 0) == "int32"
+
+
+@settings(max_examples=25)
+@given(st.floats(-3e9, 3e9), st.floats(-3e9, 3e9))
+def test_quantize_capacities_floor_and_clip(server_gb, pool_gb):
+    sgb_i, pgb_i = sc.quantize_capacities(server_gb, pool_gb)
+    assert -sc.I32_BIG <= sgb_i <= sc.I32_BIG
+    assert -sc.I32_BIG <= pgb_i <= sc.I32_BIG
+    if abs(server_gb) < sc.I32_BIG:
+        assert sgb_i == np.floor(server_gb)
+    if abs(pool_gb) < sc.I32_BIG:
+        assert pgb_i == np.floor(pool_gb)
+
+
+# ------------------------------------------------------ lane capacities --
+@settings(max_examples=20)
+@given(st.integers(2, 40), st.integers(0, 500))
+def test_lane_capacities_pad_replicates_last(n, base):
+    sgb_i = np.arange(base, base + n)
+    pgb_i = np.arange(n)
+    for lo, hi, width in sc.candidate_chunks(n):
+        sgb, pgb = sc.lane_capacities(sgb_i, pgb_i, lo, hi, width,
+                                      np.int32)
+        assert sgb.shape == (width,)
+        assert np.array_equal(sgb[:hi - lo], sgb_i[lo:hi])
+        assert np.array_equal(pgb[:hi - lo], pgb_i[lo:hi])
+        assert (sgb[hi - lo:] == sgb_i[hi - 1]).all()
+        assert (pgb[hi - lo:] == pgb_i[hi - 1]).all()
+
+
+def test_lane_capacities_2d_matches_1d():
+    sgb_i = np.arange(12).reshape(3, 4)
+    pgb_i = (np.arange(12) * 2).reshape(3, 4)
+    sgb, pgb = sc.lane_capacities(sgb_i, pgb_i, 0, 4, 16, np.int16)
+    for k in range(3):
+        s1, p1 = sc.lane_capacities(sgb_i[k], pgb_i[k], 0, 4, 16,
+                                    np.int16)
+        assert np.array_equal(sgb[k], s1)
+        assert np.array_equal(pgb[k], p1)
+
+
+# ------------------------------------------------------- carry packing --
+@settings(max_examples=15)
+@given(st.integers(1, 16), st.integers(1, 20), st.integers(1, 96),
+       st.sampled_from(["int16", "int32"]))
+def test_init_state_batched_equals_unbatched(width, n_servers, cores,
+                                             state_dtype):
+    np_dt = sc.state_np_dtype(state_dtype)
+    s_pad = sc.pad_up(n_servers, 8)
+    g_pad = max(1, n_servers // 4)
+    args = (width, n_servers, cores, s_pad, g_pad, 3 * sc.SLOT_PAD,
+            np_dt)
+    single = sc.init_state(*args)
+    batched = sc.init_state(*args, k=3)
+    for a, b in zip(single, batched):
+        assert b.shape == (3,) + a.shape
+        for k in range(3):
+            assert np.array_equal(b[k], a)
+    fc0 = single[0]
+    # padded server columns pinned to the negative sentinel
+    sent = sc.state_sentinel(state_dtype)
+    assert (fc0[:, :n_servers] == np_dt(cores)).all()
+    assert (fc0[:, n_servers:] == -sent).all()
+    assert all(a.dtype == np_dt for a in single[:4])
+    assert single[4].dtype == np.int32
+    assert (single[3] == -1).all()      # all slots empty
+
+
+@pytest.mark.skipif(not sc.jax_importable(), reason="jax not importable")
+def test_carry_device_put_round_trip_bitwise():
+    state = sc.init_state(4, 6, 40, 8, 2, sc.SLOT_PAD, np.int16, k=2)
+    for host in state:
+        dev = sc.device_put(host)
+        back = np.asarray(dev)
+        assert back.dtype == host.dtype
+        assert np.array_equal(back, host)
+
+
+# -------------------------------------------------------- slot assigner --
+def _random_arrive_depart(rng, n_vms):
+    """Random well-formed stream: every VM arrives once, may depart."""
+    ev = []
+    live = []
+    for v in range(n_vms):
+        ev.append((sc.ARRIVE, v))
+        live.append(v)
+        while live and rng.random() < 0.4:
+            ev.append((sc.DEPART, live.pop(int(rng.integers(len(live))))))
+    rng.shuffle(live)
+    for v in live[: len(live) // 2]:
+        ev.append((sc.DEPART, v))
+    return np.array([k for k, _ in ev]), np.array([v for _, v in ev])
+
+
+@settings(max_examples=15)
+@given(st.integers(0, 10 ** 6), st.integers(1, 60))
+def test_assign_slots_peak_concurrency(seed, n_vms):
+    rng = np.random.default_rng(seed)
+    ev_kind, ev_vm = _random_arrive_depart(rng, n_vms)
+    ev_slot, n_slots = sc.assign_slots(ev_kind, ev_vm, n_vms)
+    assert (ev_slot >= 0).all() and (ev_slot < n_slots).all()
+    # slots are sized by PEAK concurrency, not trace length, and no
+    # two live VMs ever share one
+    live_slots: dict[int, int] = {}
+    peak = 0
+    for e in range(len(ev_kind)):
+        v, s = int(ev_vm[e]), int(ev_slot[e])
+        if ev_kind[e] == sc.ARRIVE:
+            assert s not in live_slots.values()
+            live_slots[v] = s
+            peak = max(peak, len(live_slots))
+        elif ev_kind[e] == sc.DEPART:
+            assert live_slots.pop(v) == s
+    assert n_slots == peak
+
+
+def test_assign_slots_reuses_freed_slots():
+    ev_kind = np.array([sc.ARRIVE, sc.DEPART, sc.ARRIVE, sc.DEPART,
+                        sc.ARRIVE])
+    ev_vm = np.array([0, 0, 1, 1, 2])
+    ev_slot, n_slots = sc.assign_slots(ev_kind, ev_vm, 3)
+    assert n_slots == 1                  # one slot serves all three VMs
+    assert (ev_slot == 0).all()
