@@ -204,12 +204,38 @@ def latency_table(path: str = "experiments/BENCH_replay.json") -> str:
     return "\n".join(lines)
 
 
+def topology_table(path: str = "experiments/BENCH_replay.json") -> str:
+    """Multi-pod topology-grid timings (written by ``run.py
+    --perf-smoke`` since the fleet engine / ``fig_topology.py``)."""
+    lines = ["| lanes | events | compiled s | oracle s | speedup | "
+             "bit-exact | claims |",
+             "|---|---|---|---|---|---|---|"]
+    if not os.path.isfile(path):
+        lines.append("| (run `python -m benchmarks.run --perf-smoke`) "
+                     "| — | — | — | — | — | — |")
+        return "\n".join(lines)
+    r = json.load(open(path))
+    if r.get("topology_lanes") is None:
+        lines.append("| (re-run `python -m benchmarks.run --perf-smoke` "
+                     "to record the topology benchmark) | — | — | — | — "
+                     "| — | — |")
+        return "\n".join(lines)
+    lines.append(
+        f"| {r['topology_lanes']} | {r.get('topology_events', '—')} | "
+        f"{r.get('topology_compiled_s', '—')} | "
+        f"{r.get('topology_oracle_s', '—')} | "
+        f"{r.get('topology_speedup_vs_oracle', '—')}x | "
+        f"{'yes' if r.get('topology_bit_exact') else 'NO'} | "
+        f"{'PASS' if r.get('topology_claims_pass') else 'FAIL'} |")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--outdir", default="experiments/dryrun")
     ap.add_argument("--what", default="all",
                     choices=["all", "dryrun", "roofline", "collectives",
-                             "replay", "policy", "latency"])
+                             "replay", "policy", "latency", "topology"])
     args = ap.parse_args()
     if args.what in ("all", "dryrun"):
         print("### Dry-run matrix\n")
@@ -236,6 +262,11 @@ def main():
         print("### Latency/QoS grid engine (vectorized figure passes "
               "vs scalar loops)\n")
         print(latency_table())
+        print()
+    if args.what in ("all", "topology"):
+        print("### Multi-pod topology grid (compiled fleet scan vs "
+              "scalar oracle loop)\n")
+        print(topology_table())
 
 
 if __name__ == "__main__":

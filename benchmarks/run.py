@@ -30,6 +30,7 @@ MODULES = [
     "benchmarks.fig20_combined",
     "benchmarks.fig21_e2e",
     "benchmarks.fig_availability",
+    "benchmarks.fig_topology",
     "benchmarks.kernel_bench",
     "benchmarks.latency_bench",
     "benchmarks.roofline",
@@ -67,9 +68,15 @@ def perf_smoke():
     looping the streaming engine per seed at the same shard budget,
     and the end-to-end chunked-dump replay (ingest VMs/s,
     candidate-events/s, peak shard bytes).
+
+    Since the multi-pod fleet engine it also records the ``topology_*``
+    keys from ``benchmarks/fig_topology.py``: the compiled topology
+    grid (one pod scan pricing every (savings, pool-budget, topology)
+    lane) timed against the scalar ``replay_multi_pool`` oracle loop —
+    gated at >=5x — plus its bit-exactness verdict.
     """
     from benchmarks import (azure_e2e, fig3_poolsize, fig17_sensitivity,
-                            latency_bench)
+                            fig_topology, latency_bench)
     t0 = time.time()
     res = fig3_poolsize.run(quick=True)
     wall = time.time() - t0          # fig3-only: comparable across PRs
@@ -86,6 +93,7 @@ def perf_smoke():
     print(f"  latency grids: {lat['grid_cells']} cells in "
           f"{lat['wall_s']}s (min {lat['min_speedup']}x vs scalar "
           f"figure loops, bit_exact={lat['bit_exact']})")
+    topo = fig_topology.run(quick=True)
     batched = res.get("batched", {})
     narrow = batched.get("narrow2", {})
     streaming = res.get("streaming", {})
@@ -152,6 +160,16 @@ def perf_smoke():
         "latency_bit_exact": lat.get("bit_exact"),
         "latency_claims_pass": bool(
             lat.get("bit_exact") and lat.get("min_speedup", 0.0) >= 5.0),
+        "topology_lanes": topo.get("n_lanes"),
+        "topology_events": topo.get("n_events"),
+        "topology_compiled_s": topo.get("compiled_s"),
+        "topology_oracle_s": topo.get("oracle_s"),
+        "topology_speedup_vs_oracle": topo.get("speedup_vs_oracle"),
+        "topology_bit_exact": any(
+            c["claim"].startswith("fleet sweep bit-exact") and c["ok"]
+            for c in topo.get("claims", [])),
+        "topology_claims_pass": all(
+            c["ok"] for c in topo.get("claims", [])),
         "claims_pass": all(c["ok"] for c in res.get("claims", [])),
     }
     os.makedirs("experiments", exist_ok=True)
@@ -166,7 +184,9 @@ def perf_smoke():
           f"{bench['stream_batch_speedup_vs_stream_loop']}x vs stream "
           f"loop, policy {bench['policy_vms_per_sec']} VMs/s "
           f"({bench['policy_speedup_vs_scalar']}x), latency grids "
-          f"{bench['latency_min_speedup_vs_scalar']}x min "
+          f"{bench['latency_min_speedup_vs_scalar']}x min, topology "
+          f"grid {bench['topology_lanes']} lanes "
+          f"{bench['topology_speedup_vs_oracle']}x vs oracle "
           f"-> experiments/BENCH_replay.json")
     return bench
 

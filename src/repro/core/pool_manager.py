@@ -23,9 +23,20 @@ from repro.core.slices import SlicePool
 @dataclasses.dataclass
 class PMStats:
     assigns: int = 0
-    releases: int = 0
+    releases: int = 0            # voluntary + forced (EMC-failure) drains
     blocked_starts: int = 0      # VM starts that found the buffer short
     peak_assigned_gb: float = 0.0
+    revoked_gb: float = 0.0      # GB force-released by EMC failures
+
+    def outstanding(self) -> int:
+        """Release operations still owed: ``assigns - releases``.
+
+        ``fail_emc`` counts one forced release per affected host (the
+        same unit ``release_capacity``/``fail_host`` use), so failures
+        keep the drain ledger moving — it used to leak: failed grants
+        vanished from ``grants`` with no matching release recorded
+        (regression pinned in ``tests/test_failures.py``)."""
+        return self.assigns - self.releases
 
 
 class PoolManager:
@@ -105,13 +116,24 @@ class PoolManager:
 
     # ---------------------------------------------------------- failures --
     def fail_emc(self, emc_idx: int) -> list[int]:
-        """EMC failure: blast radius = hosts with slices on THAT EMC only."""
+        """EMC failure: blast radius = hosts with slices on THAT EMC only.
+
+        Reconciles ``PMStats``: every affected host's wiped grant counts
+        as one FORCED release (the unit ``release_capacity`` uses) and
+        the wiped capacity lands in ``revoked_gb`` — previously the
+        grants just vanished, leaving ``assigns - releases`` leaking one
+        release per affected host per failure.
+        """
         affected = sorted({h for (h, ei), ids in self.grants.items()
                            if ei == emc_idx and ids})
+        revoked = 0
         for (h, ei) in list(self.grants):
             if ei == emc_idx:
+                revoked += len(self.grants[(h, ei)])
                 del self.grants[(h, ei)]
         self.emcs[emc_idx].owner[:] = -1
+        self.stats.releases += len(affected)
+        self.stats.revoked_gb += revoked * self.slice_gb
         return affected
 
     def fail_host(self, host: int, now: float = 0.0) -> None:
@@ -126,3 +148,71 @@ class PoolManager:
         grants live on the EMCs and the datapath never stopped serving
         them while the PM was down (Pond §4.2)."""
         self.alive = True
+
+
+class FleetPoolManager:
+    """One Pool Manager per pod over a ``core/topology.py`` incidence.
+
+    The control-plane twin of the fleet replay engines: each pod is an
+    independent :class:`PoolManager` (its own EMCs, buffer, stats, and
+    failure domain), and a host draws capacity from the pods its
+    topology row lists — the WHOLE demand from the FIRST reachable pod
+    that can grant it, mirroring the engines' admission rule.  Pods a
+    host cannot reach never see its grants, so a pod failure's blast
+    radius is bounded by that pod's members (asserted in
+    ``tests/test_failures.py``: failing one pod must not touch sibling
+    pods' grants).
+    """
+
+    def __init__(self, topology, pod_gb, num_emcs: int = 1,
+                 slice_gb: float = 1.0, buffer_gb: float = 16.0,
+                 seed: int = 0):
+        caps = np.atleast_1d(np.asarray(pod_gb, float))
+        if len(caps) == 1:
+            caps = np.repeat(caps, topology.n_pods)
+        if len(caps) != topology.n_pods:
+            raise ValueError(
+                f"{len(caps)} pod capacities for {topology.n_pods} pods")
+        self.topology = topology
+        self.pods = [PoolManager(int(caps[q]), num_emcs=num_emcs,
+                                 slice_gb=slice_gb, buffer_gb=buffer_gb,
+                                 seed=seed + 1000 * q)
+                     for q in range(topology.n_pods)]
+
+    # ------------------------------------------------------------- flows --
+    def add_capacity(self, host: int, gb: float,
+                     now: float = 0.0) -> Optional[int]:
+        """Online ``gb`` to ``host`` from its first reachable pod with
+        room.  Returns the granting pod index, or None when every
+        reachable pod is short (the caller's all-local fallback)."""
+        for q in self.topology.pods_of(host):
+            if self.pods[q].add_capacity(host, gb, now):
+                return q
+        return None
+
+    def release_capacity(self, host: int, now: float = 0.0) -> None:
+        """Drain every reachable pod's grants for ``host``."""
+        for q in self.topology.pods_of(host):
+            if self.pods[q].host_pool_gb(host) > 0:
+                self.pods[q].release_capacity(host, now)
+
+    def host_pool_gb(self, host: int) -> float:
+        return sum(self.pods[q].host_pool_gb(host)
+                   for q in self.topology.pods_of(host))
+
+    def pod_free_gb(self, now: float = 0.0) -> np.ndarray:
+        return np.array([pm.total_free_gb(now) for pm in self.pods])
+
+    def assigned_gb(self) -> float:
+        return sum(pm.assigned_gb() for pm in self.pods)
+
+    # ---------------------------------------------------------- failures --
+    def fail_pod(self, pod: int) -> list[int]:
+        """Whole-pod failure: every EMC of ``pod`` fails; sibling pods'
+        grants and stats are untouched (per-pod blast radius).  Returns
+        the affected hosts (members of ``pod`` holding slices on it)."""
+        pm = self.pods[pod]
+        affected: set[int] = set()
+        for ei in range(len(pm.emcs)):
+            affected.update(pm.fail_emc(ei))
+        return sorted(affected)

@@ -117,6 +117,7 @@ import time
 import numpy as np
 
 from repro.core import sweep_core
+from repro.core import topology as topology_mod
 
 # shared event/packing constants, re-exported for engine callers
 ARRIVE, DEPART, MIGRATE = (sweep_core.ARRIVE, sweep_core.DEPART,
@@ -1023,6 +1024,306 @@ class CompiledReplay:
         _STATS.wall_s += time.perf_counter() - t0
         return rates
 
+    # ------------------------------------------------------------- fleet --
+    def _fleet_events_np(self):
+        """Slot-mapped numpy event arrays for the fleet sweep (cached):
+        one shard dict shaped like a streaming shard, spanning the whole
+        trace, float payloads (the numpy fleet backend carries float64
+        state, so non-integral decisions replay exactly too)."""
+        if getattr(self, "_fleet_ev_np", None) is None:
+            ev_slot, next_slot = sweep_core.assign_slots(
+                self._ev_kind, self._ev_vm, self.n_vms)
+            vmx = np.asarray(self._ev_vm)
+            self._fleet_ev_np = {
+                "kind": np.asarray(self._ev_kind, np.int32),
+                "slot": np.asarray(ev_slot, np.int32),
+                "c": np.asarray(self._cores)[vmx],
+                "l": np.asarray(self._local)[vmx],
+                "p": np.asarray(self._pool)[vmx],
+                "m": np.asarray(self._mem)[vmx],
+                "n_slots": int(next_slot),
+            }
+        return self._fleet_ev_np
+
+    def reject_rates_fleet(self, server_gb, pod_gb, topology,
+                           backend: str = "auto",
+                           state_dtype: str | None = None) -> np.ndarray:
+        """Reject fraction per ``(server_gb, pod capacities, topology)``
+        fleet candidate — the multi-pod analog of :meth:`reject_rates`.
+
+        ``topology`` is one ``core/topology.py`` Topology (shared) or a
+        sequence of per-lane topologies (all at this engine's
+        ``n_servers``); ``pod_gb`` broadcasts per
+        :func:`_fleet_candidates` (scalar, shared per-pod array, or
+        per-lane entries).  One event scan prices the whole grid; both
+        backends are bit-exact against the scalar oracle
+        ``cluster_sim.replay_multi_pool`` (the jax path on integral-GB
+        traces, the numpy path unconditionally).
+
+        Usage (price a topology frontier at equal hardware)::
+
+            caps = [topology.split_pool(960.0, t.n_pods) for t in topos]
+            rates = eng.reject_rates_fleet(320.0, caps, topos)
+        """
+        t0 = time.perf_counter()
+        sgb, caps, topos = _fleet_candidates(server_gb, pod_gb, topology)
+        if topos[0].n_servers != self.n_servers:
+            raise ValueError(
+                f"topology covers {topos[0].n_servers} servers; engine "
+                f"has {self.n_servers}")
+        n0 = len(sgb)
+        denom = max(self.n_vms, 1)
+        if not self.n_events:
+            return np.zeros(n0)
+        if backend == "auto":
+            backend = ("jax" if self._exact
+                       and sweep_core.get_pod_sweep() else "numpy")
+        if backend == "jax":
+            rates = self._fleet_rates_jax(sgb, caps, topos, state_dtype)
+        else:
+            ev = self._fleet_events_np()
+            state = _np_fleet_state(n0, self.n_servers,
+                                    self.cores_per_server, sgb, caps,
+                                    ev["n_slots"])
+            inc, _ = _fleet_incidence(topos, self.n_servers,
+                                      self.n_servers)
+            _np_fleet_sweep(ev, inc, *state)
+            rates = state[-1] / denom
+        _STATS.sweeps += 1
+        _STATS.events += self.n_events
+        _STATS.candidate_events += self.n_events * n0
+        _STATS.wall_s += time.perf_counter() - t0
+        return rates
+
+    def _fleet_rates_jax(self, sgb, caps, topos,
+                         state_dtype: str | None = None) -> np.ndarray:
+        """XLA pod sweep over the fleet grid, in candidate chunks."""
+        evs, _group_of, n_slots, s_pad, _g_pad = self._jax_events()
+        n0 = len(sgb)
+        rejects = np.empty(n0, np.int64)
+        inc, p_max = _fleet_incidence(topos, self.n_servers, s_pad)
+        sgb_i, _ = sweep_core.quantize_capacities(sgb, np.zeros(n0))
+        caps_i = np.clip(np.floor(caps), -sweep_core.I32_BIG,
+                         sweep_core.I32_BIG)
+        dt_name = state_dtype or sweep_core.pick_pod_state_dtype(
+            self.cores_per_server, self.n_servers, sgb_i, caps_i,
+            self._pay_mem_max, self._pay_pool_max, self._mig_pool_sum,
+            p_max)
+        np_dt = sweep_core.state_np_dtype(dt_name)
+        p_pad = sweep_core.pad_up(p_max, sweep_core.LANE_PAD)
+        pgb_i = np.zeros((n0, p_pad))
+        pgb_i[:, :caps_i.shape[1]] = caps_i
+        sweep = sweep_core.get_pod_sweep(dt_name)
+        for lo, hi, width in sweep_core.candidate_chunks(n0):
+            sgb_w, pgb_w, inc_w = sweep_core.pod_lane_arrays(
+                sgb_i, pgb_i, inc, lo, hi, width, np_dt)
+            fc0, um0, up0, slots0, pods0, _ = sweep_core.init_pod_state(
+                width, self.n_servers, self.cores_per_server, s_pad,
+                p_pad, n_slots, np_dt)
+            out = sweep(evs,
+                        sweep_core.device_put(inc_w),
+                        sweep_core.device_put(fc0),
+                        sweep_core.device_put(um0),
+                        sweep_core.device_put(up0),
+                        sweep_core.device_put(slots0),
+                        sweep_core.device_put(pods0),
+                        sweep_core.device_put(sgb_w),
+                        sweep_core.device_put(pgb_w))
+            rejects[lo:hi] = np.asarray(out)[:hi - lo]
+        return rejects / max(self.n_vms, 1)
+
+
+# ----------------------------------------------------------- fleet sweeps --
+def _fleet_candidates(server_gb, pod_gb, topology):
+    """Normalize a fleet candidate grid to per-lane arrays.
+
+    A fleet candidate is a ``(server_gb, per-pod pool_gb, topology)``
+    triple; all three broadcast to one lane axis:
+
+    * ``server_gb`` — scalar or ``(n_cand,)``.
+    * ``topology`` — one ``core/topology.py`` Topology (shared) or a
+      sequence of ``n_cand`` (the topology-frontier axis).
+    * ``pod_gb`` — a scalar (every pod of every lane), a 1-D array of
+      SHARED per-pod capacities (length must equal every lane
+      topology's pod count), or a sequence/2-D array of ``n_cand``
+      per-lane entries (each a scalar or a per-pod array).
+
+    Returns ``(sgb (n_cand,), pod_caps (n_cand, P_max), topos)``;
+    capacity columns past a lane's pod count are 0 and inert (no
+    incidence row points at them).
+    """
+    topos = list(topology) if isinstance(topology, (list, tuple)) \
+        else [topology]
+    sgb = np.atleast_1d(np.asarray(server_gb, float))
+    if isinstance(pod_gb, np.ndarray) and pod_gb.ndim == 2:
+        pod_gb = list(pod_gb)
+    rows = len(pod_gb) if isinstance(pod_gb, (list, tuple)) else 1
+    n0 = max(len(sgb), len(topos), rows)
+    if len(sgb) == 1:
+        sgb = np.repeat(sgb, n0)
+    if len(topos) == 1:
+        topos = topos * n0
+    if isinstance(pod_gb, np.ndarray) and pod_gb.ndim == 1:
+        for t in topos:
+            if t.n_pods != len(pod_gb):
+                raise ValueError(
+                    "1-D pod_gb gives SHARED per-pod capacities; lane "
+                    f"topology {t.describe()} has {t.n_pods} pods for "
+                    f"{len(pod_gb)} capacities (pass a per-lane "
+                    "sequence instead)")
+        pod_gb = [pod_gb] * n0
+    elif not isinstance(pod_gb, (list, tuple)):
+        pod_gb = float(pod_gb)
+    elif rows == 1 and n0 > 1:
+        pod_gb = list(pod_gb) * n0
+    if len(sgb) != n0 or len(topos) != n0 or (
+            isinstance(pod_gb, list) and len(pod_gb) != n0):
+        raise ValueError(
+            "fleet candidates must broadcast to one lane count; got "
+            f"{len(sgb)} server sizes, {len(topos)} topologies, "
+            f"{rows} pod-capacity rows")
+    n_srv = topos[0].n_servers
+    for t in topos:
+        if t.n_servers != n_srv:
+            raise ValueError(
+                "all lane topologies must share n_servers; got "
+                f"{t.n_servers} vs {n_srv}")
+    caps = topology_mod.pod_caps_matrix(pod_gb, topos)
+    return sgb.astype(float), caps, topos
+
+
+def _fleet_incidence(topos, n_servers: int, s_pad: int):
+    """Stack per-lane incidence rows to one ``(n_cand, s_pad, F_max)``
+    int32 tensor, ``-1`` filled (padded servers and narrower lanes
+    reach no pod).  Returns ``(inc, p_max)``."""
+    f_max = max((t.inc.shape[1] for t in topos), default=1)
+    p_max = max((t.n_pods for t in topos), default=1)
+    inc = np.full((len(topos), s_pad, f_max), -1, np.int32)
+    for i, t in enumerate(topos):
+        inc[i, :n_servers, :t.inc.shape[1]] = t.inc
+    return inc, p_max
+
+
+def _np_fleet_sweep(shard, inc, free, pool_free, placed, pod_of,
+                    migrated, rejects):
+    """Numpy fleet shard sweep over carried state (float64,
+    oracle-ordered ops) — the multi-pod analog of
+    :func:`_np_stream_sweep`.
+
+    ``inc`` is the ``(C, S, F)`` per-lane incidence (``-1`` padded),
+    ``free`` the ``(C, S, 2)`` free cores / free local GB, ``pool_free``
+    the ``(C, P)`` per-pod free pool, ``placed``/``pod_of``/``migrated``
+    the ``(C, n_slots)`` placement, granting-pod and migrated state —
+    all mutated in place so consecutive shards continue one replay.
+    Tracking FREE capacities keeps every float add/subtract in the
+    scalar ``cluster_sim.replay_multi_pool`` order, so non-integral
+    decisions stay bit-exact too.
+    """
+    kind, slot = shard["kind"], shard["slot"]
+    cs, ls, ps, ms = shard["c"], shard["l"], shard["p"], shard["m"]
+    cidx = np.arange(free.shape[0])
+    valid = inc >= 0
+    gidx = np.maximum(inc, 0)
+    first_pod = inc[:, :, 0]                          # (C, S)
+    for e in range(len(kind)):
+        k = kind[e]
+        if k >= PAD:                 # PAD and FAIL/RECOVER: no-ops here
+            continue
+        sl = slot[e]
+        if k == DEPART:
+            s = placed[:, sl]
+            rows = cidx[s >= 0]
+            if rows.size:
+                sv = s[rows]
+                mg = migrated[rows, sl]
+                free[rows, sv, 0] += cs[e]
+                free[rows, sv, 1] += np.where(mg, ms[e], ls[e])
+                q = pod_of[rows, sl]
+                back = ~mg & (q >= 0)
+                if back.any():
+                    pool_free[rows[back], q[back]] += ps[e]
+                migrated[rows, sl] = False
+            placed[:, sl] = -1
+            pod_of[:, sl] = -1
+            continue
+        if k == MIGRATE:
+            p = ps[e]
+            s = placed[:, sl]
+            rows = cidx[s >= 0]
+            if rows.size:
+                sv = s[rows]
+                room = free[rows, sv, 1] >= p
+                rows, sv = rows[room], sv[room]
+                if rows.size:
+                    free[rows, sv, 1] -= p
+                    # pool returns to the granting pod; fallback VMs
+                    # (no grant) pay their server's first listed pod,
+                    # or skip the pool update on a pod-less server
+                    q = pod_of[rows, sl]
+                    tgt = np.where(q >= 0, q, first_pod[rows, sv])
+                    back = tgt >= 0
+                    if back.any():
+                        pool_free[rows[back], tgt[back]] += p
+                    migrated[rows, sl] = True
+            continue
+        # ARRIVE: best fit by cores among servers whose free local
+        # memory fits and SOME reachable pod fits the whole pool demand
+        c, l, p, m = cs[e], ls[e], ps[e], ms[e]
+        okcm = (free[:, :, 0] >= c) & (free[:, :, 1] >= l)
+        if p > 0.0:
+            pf = pool_free[cidx[:, None, None], gidx]
+            fits = valid & (pf >= p)
+            ok = okcm & fits.any(-1)
+        else:
+            fits = None
+            ok = okcm
+        score = np.where(ok, free[:, :, 0], _INF)
+        s = score.argmin(1)
+        feas = ~np.isinf(score[cidx, s])
+        rows = cidx[feas]
+        if rows.size:
+            sv = s[rows]
+            free[rows, sv, 0] -= c
+            free[rows, sv, 1] -= l
+            if p > 0.0:
+                f = fits[rows, sv].argmax(-1)   # first listed fitting pod
+                q = inc[rows, sv, f]
+                pool_free[rows, q] -= p
+                pod_of[rows, sl] = q
+            placed[rows, sl] = sv
+        bad = cidx[~feas]
+        if bad.size:
+            # pool short -> control-plane fallback: start the VM all-local
+            sub = free[bad]
+            ok2 = (sub[:, :, 0] >= c) & (sub[:, :, 1] >= m)
+            score2 = np.where(ok2, sub[:, :, 0], _INF)
+            s2 = score2.argmin(1)
+            inf2 = np.isinf(score2[np.arange(len(bad)), s2])
+            rows2 = bad[~inf2]
+            if rows2.size:
+                sv2 = s2[~inf2]
+                free[rows2, sv2, 0] -= c
+                free[rows2, sv2, 1] -= m
+                placed[rows2, sl] = sv2
+                migrated[rows2, sl] = True       # departs as all-local
+            rejects[bad[inf2]] += 1
+
+
+def _np_fleet_state(n_cand: int, n_servers: int, cores_per_server,
+                    sgb: np.ndarray, pod_caps: np.ndarray,
+                    n_slots: int) -> tuple:
+    """All-free numpy fleet carry: ``(free, pool_free, placed, pod_of,
+    migrated, rejects)`` for :func:`_np_fleet_sweep`."""
+    free = np.empty((n_cand, n_servers, 2))
+    free[:, :, 0] = cores_per_server
+    free[:, :, 1] = sgb[:, None]
+    pool_free = pod_caps.astype(float).copy()
+    placed = np.full((n_cand, n_slots), -1, np.int64)
+    pod_of = np.full((n_cand, n_slots), -1, np.int64)
+    migrated = np.zeros((n_cand, n_slots), bool)
+    rejects = np.zeros(n_cand, np.int64)
+    return free, pool_free, placed, pod_of, migrated, rejects
+
 
 # ------------------------------------------------------------- streaming ---
 def _np_stream_sweep(shard, gcols, free, placed, migrated, rejects):
@@ -1700,6 +2001,108 @@ class CompiledReplayStream:
             io.done()
         return rejects, cand_events
 
+    # ------------------------------------------------------------- fleet --
+    def reject_rates_fleet(self, server_gb, pod_gb, topology,
+                           reject_cap: int | None = None,
+                           backend: str = "auto",
+                           state_dtype: str | None = None) -> np.ndarray:
+        """Fleet reject rates, streamed shard by shard.
+
+        Same candidate contract as
+        :meth:`CompiledReplay.reject_rates_fleet`; the pod carry (now
+        including the per-pod used-pool matrix and the granting-pod
+        slot array) threads between shards exactly like the single-pool
+        streaming sweep, device-resident on the jax backend.  With
+        ``reject_cap`` set the stream stops early once EVERY lane
+        exceeds the cap (exact counts so far — the usual
+        feasibility-test lower-bound contract).
+        """
+        t0 = time.perf_counter()
+        sgb, caps, topos = _fleet_candidates(server_gb, pod_gb, topology)
+        if topos[0].n_servers != self.n_servers:
+            raise ValueError(
+                f"topology covers {topos[0].n_servers} servers; stream "
+                f"has {self.n_servers}")
+        n0 = len(sgb)
+        denom = max(self.n_vms, 1)
+        if not self.n_events:
+            return np.zeros(n0)
+        if backend == "auto":
+            backend = ("jax" if self._exact
+                       and sweep_core.get_pod_sweep() else "numpy")
+        if backend == "jax":
+            rejects, cand_events = self._fleet_sweep_jax(
+                sgb, caps, topos, reject_cap, state_dtype)
+        else:
+            rejects, cand_events = self._fleet_sweep_numpy(
+                sgb, caps, topos, reject_cap)
+        _STATS.sweeps += 1
+        _STATS.events += self.n_events
+        _STATS.candidate_events += cand_events
+        _STATS.wall_s += time.perf_counter() - t0
+        return rejects / denom
+
+    def _fleet_sweep_jax(self, sgb, caps, topos, reject_cap,
+                         state_dtype):
+        n0 = len(sgb)
+        rejects = np.empty(n0, np.int64)
+        inc, p_max = _fleet_incidence(topos, self.n_servers, self._s_pad)
+        sgb_i, _ = sweep_core.quantize_capacities(sgb, np.zeros(n0))
+        caps_i = np.clip(np.floor(caps), -sweep_core.I32_BIG,
+                         sweep_core.I32_BIG)
+        dt_name = state_dtype or sweep_core.pick_pod_state_dtype(
+            self.cores_per_server, self.n_servers, sgb_i, caps_i,
+            self._pay_mem_max, self._pay_pool_max, self._mig_pool_sum,
+            p_max)
+        np_dt = sweep_core.state_np_dtype(dt_name)
+        p_pad = sweep_core.pad_up(p_max, sweep_core.LANE_PAD)
+        pgb_i = np.zeros((n0, p_pad))
+        pgb_i[:, :caps_i.shape[1]] = caps_i
+        sweep = sweep_core.get_pod_sweep(dt_name, with_carry=True)
+        cand_events = 0
+        for lo, hi, width in sweep_core.candidate_chunks(n0):
+            kc = hi - lo
+            sgb_w, pgb_w, inc_w = sweep_core.pod_lane_arrays(
+                sgb_i, pgb_i, inc, lo, hi, width, np_dt)
+            carry = tuple(sweep_core.device_put(a)
+                          for a in sweep_core.init_pod_state(
+                              width, self.n_servers,
+                              self.cores_per_server, self._s_pad,
+                              p_pad, self._n_slots, np_dt))
+            inc_j = sweep_core.device_put(inc_w)
+            sgb_j = sweep_core.device_put(sgb_w)
+            pgb_j = sweep_core.device_put(pgb_w)
+            for si in range(self.n_shards):
+                shard = self._shards[si]
+
+                def _i32(a):
+                    return sweep_core.device_put(
+                        a if a.dtype == np.int32 else a.astype(np.int32))
+                evs = (_i32(shard["kind"]), _i32(shard["slot"]),
+                       _i32(shard["c"]), _i32(shard["l"]),
+                       _i32(shard["p"]), _i32(shard["m"]))
+                carry = sweep(evs, inc_j, *carry, sgb_j, pgb_j)
+                cand_events += self.shard_pad_events * width
+                if reject_cap is not None:
+                    if (np.asarray(carry[5])[:kc] > reject_cap).all():
+                        break
+            rejects[lo:hi] = np.asarray(carry[5])[:kc]
+        return rejects, cand_events
+
+    def _fleet_sweep_numpy(self, sgb, caps, topos, reject_cap):
+        n0 = len(sgb)
+        inc, _ = _fleet_incidence(topos, self.n_servers, self.n_servers)
+        state = _np_fleet_state(n0, self.n_servers, self.cores_per_server,
+                                sgb, caps, self._n_slots)
+        cand_events = 0
+        for si in range(self.n_shards):
+            shard = self._shards[si]
+            _np_fleet_sweep(shard, inc, *state)
+            cand_events += len(shard["kind"]) * n0
+            if reject_cap is not None and (state[-1] > reject_cap).all():
+                break
+        return state[-1], cand_events
+
 
 # ----------------------------------------------------------- trace batch ---
 def _validate_cluster_shape(engines, what: str):
@@ -1863,6 +2266,85 @@ class CompiledReplayBatch:
                         sweep_core.device_put(slots0),
                         sweep_core.device_put(sgb),
                         sweep_core.device_put(pgb))
+            rejects[:, lo:hi] = np.asarray(out)[:, :kc]
+        rates = rejects / np.maximum(self.n_vms, 1)[:, None]
+        _STATS.sweeps += 1
+        _STATS.events += int(self.n_events.max(initial=0))
+        _STATS.candidate_events += int(self.n_events.sum()) * n0
+        _STATS.wall_s += time.perf_counter() - t0
+        return rates
+
+    # ------------------------------------------------------------- fleet --
+    def reject_rates_fleet(self, server_gb, pod_gb, topology,
+                           backend: str = "auto",
+                           state_dtype: str | None = None) -> np.ndarray:
+        """Fleet reject rates per (trace, candidate): ``(K, n_cand)``.
+
+        The candidate grid — ``(server_gb, pod capacities, topology)``
+        lanes per :func:`_fleet_candidates` — is SHARED across traces
+        (one topology frontier, K traces), matching the batched pod
+        sweep's shared incidence tensor.  Row ``k`` equals
+        ``engines[k].reject_rates_fleet(...)`` bit-for-bit.
+        """
+        t0 = time.perf_counter()
+        sgb, caps, topos = _fleet_candidates(server_gb, pod_gb, topology)
+        if topos[0].n_servers != self.n_servers:
+            raise ValueError(
+                f"topology covers {topos[0].n_servers} servers; batch "
+                f"has {self.n_servers}")
+        n0 = len(sgb)
+        if backend == "auto" and self._exact and \
+                sweep_core.get_pod_sweep(batched=True):
+            backend = "jax"
+        if backend != "jax":
+            # trim the dense capacity rows back to each lane's pod count
+            per_lane = [caps[i, :t.n_pods] for i, t in enumerate(topos)]
+            return np.stack([
+                eng.reject_rates_fleet(sgb, per_lane, topos,
+                                       backend=backend)
+                for eng in self.engines])
+        evs, _group_of, n_slots, s_pad, _g_pad = self._jax_batch_events()
+        rejects = np.empty((self.k, n0), np.int64)
+        inc, p_max = _fleet_incidence(topos, self.n_servers, s_pad)
+        sgb_i, _ = sweep_core.quantize_capacities(sgb, np.zeros(n0))
+        caps_i = np.clip(np.floor(caps), -sweep_core.I32_BIG,
+                         sweep_core.I32_BIG)
+        if state_dtype is not None:
+            dt_name = state_dtype
+        elif all(sweep_core.pick_pod_state_dtype(
+                self.cores_per_server, self.n_servers, sgb_i, caps_i,
+                e._pay_mem_max, e._pay_pool_max, e._mig_pool_sum,
+                p_max) == "int16" for e in self.engines):
+            dt_name = "int16"
+        else:
+            dt_name = "int32"
+        np_dt = sweep_core.state_np_dtype(dt_name)
+        p_pad = sweep_core.pad_up(p_max, sweep_core.LANE_PAD)
+        pgb_i = np.zeros((n0, p_pad))
+        pgb_i[:, :caps_i.shape[1]] = caps_i
+        sweep = sweep_core.get_pod_sweep(dt_name, batched=True)
+        for lo, hi, width in sweep_core.candidate_chunks(n0):
+            kc = hi - lo
+            sgb_w, pgb_w, inc_w = sweep_core.pod_lane_arrays(
+                sgb_i, pgb_i, inc, lo, hi, width, np_dt)
+            # shared init state (broadcast by the vmap), shared
+            # incidence; capacities gain the per-trace leading axis
+            fc0, um0, up0, slots0, pods0, _ = sweep_core.init_pod_state(
+                width, self.n_servers, self.cores_per_server, s_pad,
+                p_pad, n_slots, np_dt)
+            out = sweep(evs,
+                        sweep_core.device_put(inc_w),
+                        sweep_core.device_put(fc0),
+                        sweep_core.device_put(um0),
+                        sweep_core.device_put(up0),
+                        sweep_core.device_put(slots0),
+                        sweep_core.device_put(pods0),
+                        sweep_core.device_put(
+                            np.broadcast_to(sgb_w, (self.k,) + sgb_w.shape
+                                            ).copy()),
+                        sweep_core.device_put(
+                            np.broadcast_to(pgb_w, (self.k,) + pgb_w.shape
+                                            ).copy()))
             rejects[:, lo:hi] = np.asarray(out)[:, :kc]
         rates = rejects / np.maximum(self.n_vms, 1)[:, None]
         _STATS.sweeps += 1
@@ -2192,6 +2674,93 @@ class CompiledReplayStreamBatch:
             rejects[:, lo:hi] = np.asarray(carry[4])[:, :kc]
         if io is not None:
             io.done()
+        rates = rejects / np.maximum(self.n_vms, 1)[:, None]
+        _STATS.sweeps += 1
+        _STATS.events += int(self.n_events.max(initial=0))
+        _STATS.candidate_events += cand_events
+        _STATS.wall_s += time.perf_counter() - t0
+        return rates
+
+    # ------------------------------------------------------------- fleet --
+    def reject_rates_fleet(self, server_gb, pod_gb, topology,
+                           reject_cap: int | None = None,
+                           backend: str = "auto",
+                           state_dtype: str | None = None) -> np.ndarray:
+        """Fleet reject rates per (trace, candidate): ``(K, n_cand)``,
+        one vmapped pod scan per stacked shard.
+
+        The fleet candidate grid is SHARED across traces (like
+        :meth:`CompiledReplayBatch.reject_rates_fleet`); the per-trace
+        pod carry threads shard-to-shard.  Row ``k`` equals
+        ``streams[k].reject_rates_fleet(...)`` bit-for-bit; with
+        ``reject_cap`` the stream stops once every (trace, candidate)
+        lane exceeds the cap.
+        """
+        t0 = time.perf_counter()
+        sgb, caps, topos = _fleet_candidates(server_gb, pod_gb, topology)
+        if topos[0].n_servers != self.n_servers:
+            raise ValueError(
+                f"topology covers {topos[0].n_servers} servers; batch "
+                f"has {self.n_servers}")
+        n0 = len(sgb)
+        if not self.n_shards:
+            return np.zeros((self.k, n0))
+        if backend == "auto":
+            backend = ("jax" if self._exact
+                       and sweep_core.get_pod_sweep() else "numpy")
+        if backend != "jax":
+            per_lane = [caps[i, :t.n_pods] for i, t in enumerate(topos)]
+            return np.stack([
+                s.reject_rates_fleet(sgb, per_lane, topos,
+                                     reject_cap=reject_cap,
+                                     backend=backend)
+                for s in self.engines])
+        rejects = np.empty((self.k, n0), np.int64)
+        inc, p_max = _fleet_incidence(topos, self.n_servers, self._s_pad)
+        sgb_i, _ = sweep_core.quantize_capacities(sgb, np.zeros(n0))
+        caps_i = np.clip(np.floor(caps), -sweep_core.I32_BIG,
+                         sweep_core.I32_BIG)
+        if state_dtype is not None:
+            dt_name = state_dtype
+        elif all(sweep_core.pick_pod_state_dtype(
+                self.cores_per_server, self.n_servers, sgb_i, caps_i,
+                s._pay_mem_max, s._pay_pool_max, s._mig_pool_sum,
+                p_max) == "int16" for s in self.engines):
+            dt_name = "int16"
+        else:
+            dt_name = "int32"
+        np_dt = sweep_core.state_np_dtype(dt_name)
+        p_pad = sweep_core.pad_up(p_max, sweep_core.LANE_PAD)
+        pgb_i = np.zeros((n0, p_pad))
+        pgb_i[:, :caps_i.shape[1]] = caps_i
+        sweep = sweep_core.get_pod_sweep(dt_name, with_carry=True,
+                                         batched=True)
+        cand_events = 0
+        for lo, hi, width in sweep_core.candidate_chunks(n0):
+            kc = hi - lo
+            sgb_w, pgb_w, inc_w = sweep_core.pod_lane_arrays(
+                sgb_i, pgb_i, inc, lo, hi, width, np_dt)
+            # PER-TRACE carry (leading K axis), donated shard-to-shard;
+            # the incidence tensor stays shared across traces
+            carry = tuple(sweep_core.device_put(a)
+                          for a in sweep_core.init_pod_state(
+                              width, self.n_servers,
+                              self.cores_per_server, self._s_pad,
+                              p_pad, self._n_slots, np_dt, k=self.k))
+            inc_j = sweep_core.device_put(inc_w)
+            sgb_j = sweep_core.device_put(
+                np.broadcast_to(sgb_w, (self.k,) + sgb_w.shape).copy())
+            pgb_j = sweep_core.device_put(
+                np.broadcast_to(pgb_w, (self.k,) + pgb_w.shape).copy())
+            for si in range(self.n_shards):
+                evs = self._stacked_shard(si)
+                carry = sweep(evs, inc_j, *carry, sgb_j, pgb_j)
+                cand_events += self.k * self.shard_pad_events * width
+                if reject_cap is not None:
+                    rej_now = np.asarray(carry[5])[:, :kc]
+                    if (rej_now > reject_cap).all():
+                        break
+            rejects[:, lo:hi] = np.asarray(carry[5])[:, :kc]
         rates = rejects / np.maximum(self.n_vms, 1)[:, None]
         _STATS.sweeps += 1
         _STATS.events += int(self.n_events.max(initial=0))

@@ -478,6 +478,244 @@ def init_fail_state(n_slots: int, g_pad: int,
     return tuple(np.broadcast_to(a, (k,) + a.shape).copy() for a in out)
 
 
+# --------------------------------------------------------------- pod sweep --
+_POD_SWEEPS: dict = {}   # (state_dtype, with_carry, batched) -> jitted
+
+
+def build_pod_sweep(state_dtype: str = "int32",
+                    with_carry: bool = False):
+    """Build the (unjitted) multi-pod fleet event sweep.
+
+    The pod generalization of :func:`build_sweep`: the per-group
+    used-pool row becomes a per-POD vector ``up (C, P)`` and the single
+    ``group_of`` map becomes a PER-LANE incidence tensor
+    ``inc (C, S, F)`` — row ``(ci, s)`` lists the pods server ``s`` can
+    reach in lane ``ci``'s topology, in preference order, ``-1``
+    padded (see ``core/topology.py``).  Candidate lanes therefore
+    carry ``(server_gb, per-pod pool_gb, topology)`` triples: one scan
+    prices a whole topology grid.
+
+    Semantics (the contract ``cluster_sim.replay_multi_pool``
+    replicates in float64, bit-exact on integral-GB traces):
+
+    * ARRIVE admits a server when cores + local memory fit AND
+      (``pool_gb == 0`` or SOME reachable pod has room for the WHOLE
+      pool demand); best fit by cores, first min.  The granting pod is
+      the FIRST listed pod with room on the chosen server; ``-1``
+      (no grant) for pool-free VMs.  No pooled-admissible server ->
+      the all-local fallback, else reject (§4.3 unchanged).
+    * DEPART returns the local share to the server and the pool share
+      to the RECORDED granting pod (nothing for migrated/fallback
+      VMs, as the single-pool kernel).
+    * MIGRATE keeps the oracle quirk verbatim — placed VM + local room
+      triggers the move with no migrated-set check — returning pool to
+      the recorded granting pod; a fallback-placed VM (no grant) pays
+      the pool back to its server's FIRST listed pod, or skips the
+      pool update entirely on a pod-less server (the local move still
+      happens).  The per-pod used-pool can thus go NEGATIVE, bounded
+      by the same ``mig_pool_sum`` deficit as the single-pool kernel.
+
+    A second ``(n_slots, C)`` slot array carries the granting pod per
+    placement (``-1`` none), extending the int16 packing rules by one
+    bound: pod ids must stay below the int16 sentinel
+    (:func:`pick_pod_state_dtype`).
+    """
+    import jax.numpy as jnp
+    from jax import lax
+    dt = jnp.int16 if state_dtype == "int16" else jnp.int32
+    big = jnp.asarray(I16_BIG if state_dtype == "int16" else I32_BIG, dt)
+    zero = jnp.asarray(0, dt)
+
+    def body(carry, ev):
+        fc, um, up, slots, pods, rejects, sgb, pgb, inc = carry
+        kind, sl, c, l, p, m = ev
+        pi = p                                       # int32 (shortcuts)
+        c, l, p, m = (c.astype(dt), l.astype(dt), p.astype(dt),
+                      m.astype(dt))
+        is_arr, is_dep, is_mig = kind == ARRIVE, kind == DEPART, \
+            kind == MIGRATE
+        val = slots[sl]                              # (C,) packed s*2+mig
+        has = val >= 0
+        s_cur = jnp.where(has, val >> 1, 0)
+        mg_cur = has & ((val & 1) == 1)
+        podv = pods[sl].astype(jnp.int32)            # (C,) granting pod
+        n_c, n_s = fc.shape
+        n_f = inc.shape[2]
+        cols = jnp.arange(n_s, dtype=jnp.int32)
+        pcols = jnp.arange(up.shape[1], dtype=jnp.int32)
+        # per-(lane, server, fanout) pod fit: gather each listed pod's
+        # used pool + capacity; -1 padding entries never fit
+        inc_flat = inc.reshape(n_c, n_s * n_f)
+        valid = inc_flat >= 0
+        idx = jnp.maximum(inc_flat, 0)
+        upr = jnp.take_along_axis(up, idx, axis=1)
+        pgr = jnp.take_along_axis(pgb, idx, axis=1)
+        fits = (valid & (upr + p <= pgr)).reshape(n_c, n_s, n_f)
+        pool_ok = (pi == 0) | fits.any(-1)           # (C, S)
+        ok = (fc >= c) & (um + l <= sgb[:, None]) & pool_ok
+        score = jnp.where(ok, fc, big)
+        s1 = jnp.argmin(score, 1).astype(jnp.int32)
+        feas1 = jnp.take_along_axis(score, s1[:, None], 1)[:, 0] < big
+        # pool short -> control-plane fallback: start the VM all-local
+        ok2 = (fc >= c) & (um + m <= sgb[:, None])
+        score2 = jnp.where(ok2, fc, big)
+        s2 = jnp.argmin(score2, 1).astype(jnp.int32)
+        feas2 = jnp.take_along_axis(score2, s2[:, None], 1)[:, 0] < big
+        sel = jnp.where(feas1, s1, s2)
+        place = feas1 | feas2
+        s_aff = jnp.where(is_arr, sel, s_cur)
+        act_arr = is_arr & place
+        act_dep = is_dep & has
+        um_s = jnp.take_along_axis(um, s_aff[:, None], 1)[:, 0]
+        act_mig = is_mig & has & (um_s + p <= sgb)   # QoS: pool -> local
+        oh = cols[None, :] == s_aff[:, None]
+        dfc = jnp.where(act_dep, c, zero) - jnp.where(act_arr, c, zero)
+        dum = (jnp.where(act_arr, jnp.where(feas1, l, m), zero)
+               - jnp.where(act_dep, jnp.where(mg_cur, m, l), zero)
+               + jnp.where(act_mig, p, zero))
+        fc = fc + oh * dfc[:, None]
+        um = um + oh * dum[:, None]
+        # granting pod: first listed pod with room on the chosen server
+        # (argmax of bool = first True; masked off unless a pooled
+        # admission actually happened)
+        f_sel = jnp.argmax(fits, axis=-1).astype(jnp.int32)   # (C, S)
+        pod_srv = jnp.take_along_axis(
+            inc, f_sel[:, :, None], axis=2)[:, :, 0]          # (C, S)
+        pod_arr = jnp.take_along_axis(pod_srv, sel[:, None], 1)[:, 0]
+        arr_tgt = jnp.where(act_arr & feas1 & (pi > 0), pod_arr, -1)
+        dep_tgt = jnp.where(act_dep & ~mg_cur, podv, -1)
+        first_pod = jnp.take_along_axis(
+            inc[:, :, 0], s_aff[:, None], 1)[:, 0]            # (C,)
+        mig_tgt = jnp.where(act_mig,
+                            jnp.where(podv >= 0, podv, first_pod), -1)
+        up = (up
+              + jnp.where(pcols[None, :] == arr_tgt[:, None], p, zero)
+              - jnp.where(pcols[None, :] == dep_tgt[:, None], p, zero)
+              - jnp.where(pcols[None, :] == mig_tgt[:, None], p, zero))
+        aval = jnp.where(place, sel * 2 + jnp.where(feas1, 0, 1), -1)
+        new_val = jnp.where(is_arr, aval,
+                            jnp.where(is_dep, -1,
+                                      jnp.where(act_mig, val | 1, val)))
+        slots = lax.dynamic_update_index_in_dim(
+            slots, new_val.astype(slots.dtype), sl, 0)
+        new_pod = jnp.where(is_arr, arr_tgt,
+                            jnp.where(is_dep, -1, podv))
+        pods = lax.dynamic_update_index_in_dim(
+            pods, new_pod.astype(pods.dtype), sl, 0)
+        rejects = rejects + (is_arr & ~feas1 & ~feas2)
+        return (fc, um, up, slots, pods, rejects, sgb, pgb, inc), None
+
+    def sweep_carry(evs, inc, fc0, um0, up0, slots0, pods0, rej0,
+                    sgb, pgb):
+        init = (fc0, um0, up0, slots0, pods0, rej0, sgb, pgb, inc)
+        out, _ = lax.scan(body, init, evs)
+        return out[0], out[1], out[2], out[3], out[4], out[5]
+
+    def sweep(evs, inc, fc0, um0, up0, slots0, pods0, sgb, pgb):
+        init = (fc0, um0, up0, slots0, pods0,
+                jnp.zeros(sgb.shape[0], jnp.int32), sgb, pgb, inc)
+        out, _ = lax.scan(body, init, evs)
+        return out[5]
+
+    return sweep_carry if with_carry else sweep
+
+
+#: packed-carry positions in the ``with_carry`` pod-sweep signature
+#: ``(evs, inc, fc0, um0, up0, slots0, pods0, rej0, sgb, pgb)``
+_POD_CARRY_ARGNUMS = (2, 3, 4, 5, 6, 7)
+
+
+def get_pod_sweep(state_dtype: str = "int32", *,
+                  with_carry: bool = False, batched: bool = False):
+    """Jitted pod sweep from the keyed cache (None without jax).
+
+    Same four variants as :func:`get_sweep` — monolithic, carry
+    (donated state), vmapped batch with shared init, vmapped batch
+    with per-trace carry — keyed by ``(state_dtype, with_carry,
+    batched)``.  The incidence tensor is shared across traces in the
+    batched variants (one topology grid, K traces); candidate
+    capacities stay per trace.
+    """
+    if not jax_importable():
+        return None
+    key = (state_dtype, with_carry, batched)
+    fn = _POD_SWEEPS.get(key)
+    if fn is None:
+        import jax
+        base = build_pod_sweep(state_dtype, with_carry)
+        if batched and with_carry:
+            base = jax.vmap(base, in_axes=((0, 0, 0, 0, 0, 0), None,
+                                           0, 0, 0, 0, 0, 0, 0, 0))
+        elif batched:
+            base = jax.vmap(base, in_axes=((0, 0, 0, 0, 0, 0), None,
+                                           None, None, None, None,
+                                           None, 0, 0))
+        fn = jax.jit(base, donate_argnums=_POD_CARRY_ARGNUMS
+                     if with_carry else ())
+        _POD_SWEEPS[key] = fn
+    return fn
+
+
+def pod_jit_cache_keys() -> list:
+    """Pod-sweep keys compiled so far (introspection for tests)."""
+    return sorted(_POD_SWEEPS)
+
+
+def pick_pod_state_dtype(cores_per_server: float, n_servers: int,
+                         sgb_i: np.ndarray, pod_caps_i: np.ndarray,
+                         pay_mem_max: float, pay_pool_max: float,
+                         mig_pool_sum: float, n_pods: int) -> str:
+    """int16/int32 packing rule for the pod sweep.
+
+    The single-pool rules (:func:`pick_state_dtype`) applied with the
+    per-pod capacity maxima standing in for the pool column — the
+    fallback-migrate deficit bound holds per pod since every deficit
+    subtraction lands on exactly one pod — plus one pod-axis bound:
+    the granting-pod slot array stores pod ids, so ``n_pods`` must
+    stay below the int16 sentinel.
+    """
+    if n_pods >= I16_BIG:
+        return "int32"
+    return pick_state_dtype(cores_per_server, n_servers, sgb_i,
+                            np.asarray(pod_caps_i).ravel(),
+                            pay_mem_max, pay_pool_max, mig_pool_sum)
+
+
+def pod_lane_arrays(sgb_i: np.ndarray, pgb_i: np.ndarray,
+                    inc: np.ndarray, lo: int, hi: int, width: int,
+                    np_dt) -> tuple:
+    """One candidate chunk's (server_gb, per-pod pool_gb, incidence)
+    lane arrays, padded to ``width`` lanes by replicating the chunk's
+    last candidate (same no-new-control-flow rule as
+    :func:`lane_capacities`).  ``pgb_i`` is ``(n, P)``, ``inc`` is
+    ``(n, s_pad, F)`` int32."""
+    sgb = np.full(width, sgb_i[hi - 1], np_dt)
+    sgb[:hi - lo] = sgb_i[lo:hi]
+    pgb = np.repeat(pgb_i[hi - 1:hi], width, 0).astype(np_dt)
+    pgb[:hi - lo] = pgb_i[lo:hi]
+    incw = np.repeat(inc[hi - 1:hi], width, 0)
+    incw[:hi - lo] = inc[lo:hi]
+    return sgb, pgb, np.ascontiguousarray(incw, np.int32)
+
+
+def init_pod_state(width: int, n_servers: int, cores_per_server: float,
+                   s_pad: int, p_pad: int, n_slots: int, np_dt,
+                   k: int | None = None) -> tuple:
+    """Packed all-free initial pod-sweep state: the plain
+    :func:`init_state` arrays with the used-pool row widened to the
+    padded pod axis plus the granting-pod slot array (``-1`` = no
+    grant).  With ``k`` set, every array gains a leading trace axis."""
+    fc0, um0, _, slots0, rej0 = init_state(
+        width, n_servers, cores_per_server, s_pad, 1, n_slots, np_dt)
+    up0 = np.zeros((width, p_pad), np_dt)
+    pods0 = np.full((n_slots, width), -1, np_dt)
+    out = (fc0, um0, up0, slots0, pods0, rej0)
+    if k is None:
+        return out
+    return tuple(np.broadcast_to(a, (k,) + a.shape).copy()
+                 for a in out)
+
+
 # --------------------------------------------------------- invariant guard --
 class SweepInvariantError(RuntimeError):
     """A sweep invariant failed under ``POND_DEBUG_INVARIANTS=1``.

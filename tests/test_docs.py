@@ -115,6 +115,35 @@ def test_readme_covers_latency_engine():
         assert topic in text, f"README misses {topic!r}"
 
 
+def test_topology_doc_exists_and_covers_architecture():
+    text = _read("docs", "topology.md")
+    for topic in ("incidence", "partitioned", "overlapping", "sparse",
+                  "split_pool", "reject_rates_fleet",
+                  "replay_multi_pool", "bit-exact",
+                  "build_pod_sweep", "pick_pod_state_dtype",
+                  "granting pod", "MIGRATE", "orphan",
+                  "FleetPoolManager", "fail_emc",
+                  # the differential suite + perf tracking
+                  "test_topology_engine", "fig_topology",
+                  "topology_*", "--what topology", "golden"):
+        assert topic.lower() in text.lower(), \
+            f"docs/topology.md misses {topic!r}"
+    # the degenerate anchors stay documented (they define the contract)
+    for anchor in ("single_pool", "n_groups", "zero-member",
+                   "all-orphan"):
+        assert anchor in text, f"docs/topology.md misses {anchor!r}"
+
+
+def test_readme_covers_topology_engine():
+    text = _read("README.md")
+    for topic in ("topology.py", "reject_rates_fleet",
+                  "replay_multi_pool", "docs/topology.md",
+                  "--what topology", "topology_*",
+                  "benchmarks/fig_topology.py", "FleetPoolManager",
+                  "tests/test_topology_engine.py"):
+        assert topic in text, f"README misses {topic!r}"
+
+
 def test_traces_doc_covers_schema_and_ingestion():
     text = _read("docs", "traces.md")
     for topic in ("arrival", "lifetime", "cores", "mem_gb",  # schema

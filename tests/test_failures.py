@@ -7,10 +7,13 @@ against the scalar oracle ``cluster_sim.replay_with_failures`` — both
 mitigation policies, both state dtypes, fixture trace plus seeded
 traces.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
-from repro.core import cluster_sim, replay_engine, sweep_core, traces
+from repro.core import (cluster_sim, replay_engine, sweep_core, topology,
+                        traces)
 from repro.runtime.fault import FailureSchedule
 
 CFG = cluster_sim.ClusterConfig(n_servers=8, pool_sockets=8,
@@ -146,6 +149,83 @@ def test_availability_requires_schedule():
         eng.availability(_SERVER, _POOL)
     with pytest.raises(ValueError, match="mitigation"):
         sweep_core.build_fail_sweep(mitigation="nope")
+
+
+# ----------------------------------------------- pool-manager blast radius --
+def test_fail_emc_reconciles_pm_stats():
+    """Regression: ``fail_emc`` used to wipe grants WITHOUT recording
+    releases — ``assigns - releases`` leaked one release per affected
+    host per failure and the revoked capacity vanished untracked."""
+    from repro.core.pool_manager import PoolManager
+    pm = PoolManager(64, num_emcs=2, slice_gb=1.0)
+    for host in (0, 1, 2):
+        assert pm.add_capacity(host, 8.0)
+    assert pm.stats.assigns == 3
+    assert pm.stats.outstanding() == 3
+    # all three grants landed on EMC 0 (fill order); failing it must
+    # count one FORCED release per affected host + tally the GB
+    affected = pm.fail_emc(0)
+    assert affected == [0, 1, 2]
+    assert pm.stats.releases == 3
+    assert pm.stats.outstanding() == 0          # ledger balances
+    assert pm.stats.revoked_gb == 24.0
+    assert pm.assigned_gb() == 0.0
+    # the failed EMC's slices are reclaimable; voluntary releases keep
+    # the ledger balanced alongside the forced ones
+    assert pm.add_capacity(5, 4.0)
+    pm.release_capacity(5)
+    assert pm.stats.outstanding() == 0
+    assert pm.stats.revoked_gb == 24.0          # voluntary != revoked
+    # failing an EMC holding no grants affects nobody and moves nothing
+    before = dataclasses.replace(pm.stats)
+    assert pm.fail_emc(1) == []
+    assert pm.stats == before
+
+
+def test_fleet_pool_manager_pod_failure_is_isolated():
+    """Whole-pod failure touches only that pod's members: sibling
+    pods keep their grants, stats and free capacity untouched."""
+    from repro.core.pool_manager import FleetPoolManager
+    t = topology.partitioned(8, 4)              # pods {0..3}, {4..7}
+    fpm = FleetPoolManager(t, 64.0)
+    assert fpm.add_capacity(0, 8.0) == 0
+    assert fpm.add_capacity(1, 4.0) == 0
+    assert fpm.add_capacity(4, 8.0) == 1
+    assert fpm.assigned_gb() == 20.0
+    assert fpm.fail_pod(0) == [0, 1]
+    assert fpm.pods[0].assigned_gb() == 0.0
+    assert fpm.pods[0].stats.revoked_gb == 12.0
+    assert fpm.pods[0].stats.outstanding() == 0
+    # the sibling pod never saw the failure
+    assert fpm.pods[1].assigned_gb() == 8.0
+    assert fpm.pods[1].stats.revoked_gb == 0.0
+    assert fpm.pods[1].stats.releases == 0
+    assert fpm.host_pool_gb(4) == 8.0
+    assert fpm.host_pool_gb(0) == 0.0
+
+
+def test_fleet_pool_manager_first_reachable_pod_overflow():
+    """Grants come from the FIRST reachable pod with room (the fleet
+    engines' admission rule); a full first pod overflows to the next,
+    and a host reaching no pod gets None (the all-local fallback)."""
+    from repro.core.pool_manager import FleetPoolManager
+    t = topology.overlapping(8, 4, 2)           # 2 pods, fanout 2
+    fpm = FleetPoolManager(t, 16.0)
+    assert fpm.add_capacity(0, 16.0) == 0       # fills pod 0
+    assert fpm.add_capacity(1, 8.0) == 1        # overflow to pod 1
+    assert fpm.add_capacity(2, 16.0) is None    # both pods short
+    assert fpm.pod_free_gb().tolist() == [0.0, 8.0]
+    fpm.release_capacity(0)
+    # releases drain asynchronously (10-100 ms/GB offline path): the
+    # capacity is back once the clock passes the drain window
+    assert fpm.add_capacity(2, 16.0, now=0.0) is None
+    assert fpm.add_capacity(2, 16.0, now=1e9) == 0
+    # an orphan host (no reachable pod) can never draw pool
+    orphans = topology.Topology("sparse", 4, 1, 1,
+                                np.full((4, 1), -1, np.int32))
+    fpm0 = FleetPoolManager(orphans, 64.0)
+    assert fpm0.add_capacity(0, 1.0) is None
+    assert fpm0.assigned_gb() == 0.0
 
 
 def test_out_of_range_domain_rejected():

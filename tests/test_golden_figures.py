@@ -104,6 +104,22 @@ def test_fig18_um_model_golden():
     }, rel=1e-6)
 
 
+def test_fig_topology_golden():
+    """EXACT: seeded trace + integer fleet-sweep reject counters over
+    the quick (savings x pool-budget x topology) grid — the bit-exact
+    contract makes every count an integer, so rel=0.0."""
+    from benchmarks import fig_topology
+    res = fig_topology.run(quick=True)
+    assert _claims_ok(res)
+    _check("fig_topology", {
+        "topologies": res["topologies"],
+        "dram_fracs": res["dram_fracs"],
+        "pool_totals_gb": res["pool_totals_gb"],
+        "n_vms": res["n_vms"],
+        "reject_counts": [l["reject_count"] for l in res["lanes"]],
+    }, rel=0.0)
+
+
 def test_fig20_combined_golden():
     from benchmarks import fig20_combined
     res = fig20_combined.run(quick=True)

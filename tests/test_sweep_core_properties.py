@@ -180,6 +180,172 @@ def test_carry_device_put_round_trip_bitwise():
         assert np.array_equal(back, host)
 
 
+# ------------------------------------------------------------- pod axis --
+@settings(max_examples=25)
+@given(st.integers(1, 40), st.integers(1, 12), st.integers(1, 6),
+       st.integers(0, 10 ** 6))
+def test_topology_builders_always_validate(n_servers, n_pods, fanout,
+                                           seed):
+    """Every builder emits a valid incidence: entries in
+    ``[-1, n_pods)``, no duplicate pod per row, ``-1`` padding only as
+    a row suffix, width <= fanout — the invariants the compiled pod
+    sweep's first-pod-with-room gather leans on."""
+    from repro.core import topology as topo
+    built = [topo.partitioned(n_servers, max(1, n_servers // n_pods)),
+             topo.single_pool(n_servers),
+             topo.overlapping(n_servers, max(1, n_servers // n_pods),
+                              fanout),
+             topo.sparse(n_servers, n_pods, fanout, seed=seed),
+             topo.sparse(n_servers, n_pods, fanout, seed=seed,
+                         allow_orphans=True)]
+    for t in built:
+        topo.validate_incidence(t.inc, t.n_pods, t.fanout)  # no raise
+        assert t.inc.shape == (t.n_servers, t.fanout)
+        for s in range(t.n_servers):
+            pods = t.pods_of(s)
+            assert len(pods) <= t.fanout
+            assert len(set(pods)) == len(pods)
+            assert all(0 <= q < t.n_pods for q in pods)
+            # suffix padding: reachable pods are a contiguous prefix
+            assert (t.inc[s, :len(pods)] >= 0).all()
+            assert (t.inc[s, len(pods):] == -1).all()
+    # ... and interior -1 padding is rejected
+    bad = np.array([[0, -1, 1]], np.int32)
+    with pytest.raises(ValueError, match="interior"):
+        topo.validate_incidence(bad, 2, 3)
+
+
+@settings(max_examples=25)
+@given(st.floats(0, 5000), st.integers(1, 12))
+def test_split_pool_integral_and_equal_total(total, n_pods):
+    from repro.core import topology as topo
+    caps = topo.split_pool(total, n_pods)
+    assert caps.shape == (n_pods,)
+    assert (caps == np.floor(caps)).all()       # integral GBs
+    assert caps.sum() == np.floor(total)        # nothing lost
+    assert caps.max() - caps.min() <= 1         # near-even split
+
+
+@settings(max_examples=25)
+@given(st.integers(1, 200), st.integers(1, 64),
+       st.lists(st.integers(0, 40000), min_size=1, max_size=8),
+       st.integers(0, 40000), st.integers(1, 16383))
+def test_pick_pod_state_dtype_adds_only_the_pod_bound(
+        cores, n_servers, sgb, cap_max, n_pods):
+    """The pod rule is the single-pool rule over the ravelled per-pod
+    caps plus ONE extra bound: pod ids live in the granting-pod slot
+    array, so ``n_pods`` must stay below the int16 sentinel
+    (``n_pods`` sampled below ``I16_BIG`` here; the bound itself is
+    asserted explicitly at the end)."""
+    sgb_i = np.asarray(sgb, np.int64)
+    caps_i = np.minimum(sgb_i, cap_max)[None, :]  # (1, P) lane matrix
+    base = sc.pick_state_dtype(cores, n_servers, sgb_i, caps_i.ravel(),
+                               64, 32)
+    assert sc.pick_pod_state_dtype(cores, n_servers, sgb_i, caps_i,
+                                   64, 32, 0.0, n_pods) == base
+    assert sc.pick_pod_state_dtype(cores, n_servers, sgb_i, caps_i,
+                                   64, 32, 0.0,
+                                   sc.I16_BIG) == "int32"
+
+
+@settings(max_examples=15)
+@given(st.integers(1, 16), st.integers(1, 20), st.integers(1, 96),
+       st.sampled_from(["int16", "int32"]))
+def test_init_pod_state_batched_equals_unbatched(width, n_servers,
+                                                cores, state_dtype):
+    np_dt = sc.state_np_dtype(state_dtype)
+    s_pad = sc.pad_up(n_servers, 8)
+    p_pad = sc.pad_up(3, sc.LANE_PAD)
+    args = (width, n_servers, cores, s_pad, p_pad, 2 * sc.SLOT_PAD,
+            np_dt)
+    single = sc.init_pod_state(*args)
+    batched = sc.init_pod_state(*args, k=3)
+    for a, b in zip(single, batched):
+        assert b.shape == (3,) + a.shape
+        for k in range(3):
+            assert np.array_equal(b[k], a)
+    fc0, um0, up0, slots0, pods0, rej0 = single
+    assert up0.shape == (width, p_pad) and (up0 == 0).all()
+    assert pods0.shape == (2 * sc.SLOT_PAD, width)
+    assert (pods0 == -1).all()          # no grants recorded yet
+    assert (slots0 == -1).all()         # all slots empty
+    assert up0.dtype == pods0.dtype == np_dt
+    assert rej0.dtype == np.int32
+
+
+@settings(max_examples=8)
+@given(st.integers(0, 10 ** 6))
+def test_fleet_carry_pool_never_negative(seed):
+    """Stepping the numpy fleet sweep one event at a time: per-pod
+    FREE pool stays >= 0 after every event (admission only grants
+    what fits), and without MIGRATE events it never exceeds the pod's
+    capacity either; with grafted migrations the excess is bounded by
+    the trace's total migrate-event pool (the quirk's deficit bound).
+    Free cores/local memory stay >= 0 throughout."""
+    import dataclasses as dc
+
+    from repro.core import cluster_sim, replay_engine, topology, traces
+    cfg = cluster_sim.ClusterConfig(n_servers=4, pool_sockets=4,
+                                    gb_per_core=4.0)
+    vms = traces.Population(seed=0).sample_vms(
+        40, 86400, seed=seed, start_id=10 ** 6)
+    dec, _ = cluster_sim.policy_decisions(vms, "static",
+                                          static_pool_frac=0.25)
+    topos = [topology.overlapping(4, 2, 2),
+             topology.sparse(4, 3, 2, seed=seed % 7,
+                             allow_orphans=True)]
+    caps = topology.pod_caps_matrix(
+        [topology.split_pool(32.0, t.n_pods) for t in topos], topos)
+    sgb = np.array([64.0, 64.0])
+    for migrate in (False, True):
+        if migrate:
+            dec = [dc.replace(d,
+                              t_migrate=vm.arrival + 0.5 * vm.lifetime)
+                   if d.pool_gb > 0 and i % 2 == 0 else d
+                   for i, (vm, d) in enumerate(zip(vms, dec))]
+        eng = replay_engine.CompiledReplay(vms, dec, cfg)
+        ev = eng._fleet_events_np()
+        mig_sum = float(eng._mig_pool_sum) if migrate else 0.0
+        state = replay_engine._np_fleet_state(
+            2, 4, cfg.cores_per_server, sgb, caps, ev["n_slots"])
+        inc, _ = replay_engine._fleet_incidence(topos, 4, 4)
+        free, pool_free = state[0], state[1]
+        for e in range(len(ev["kind"])):
+            one = {k: (v[e:e + 1] if isinstance(v, np.ndarray) else v)
+                   for k, v in ev.items()}
+            replay_engine._np_fleet_sweep(one, inc, *state)
+            assert (pool_free >= 0).all(), (seed, migrate, e)
+            assert (pool_free <= caps + mig_sum).all(), \
+                (seed, migrate, e)
+            assert (free >= 0).all(), (seed, migrate, e)
+
+
+@settings(max_examples=15)
+@given(st.integers(2, 40), st.integers(0, 500), st.integers(1, 4),
+       st.integers(1, 3))
+def test_pod_lane_arrays_pad_replicates_last(n, base, p, f):
+    """Padded lanes replicate the chunk's last candidate — capacities
+    AND incidence — so padding adds no new control flow to the scan."""
+    sgb_i = np.arange(base, base + n)
+    pgb_i = np.arange(n * p).reshape(n, p)
+    rng = np.random.default_rng(base)
+    inc = rng.integers(-1, p, size=(n, 6, f)).astype(np.int32)
+    for lo, hi, width in sc.candidate_chunks(n):
+        sgb, pgb, incw = sc.pod_lane_arrays(sgb_i, pgb_i, inc, lo, hi,
+                                            width, np.int32)
+        assert sgb.shape == (width,)
+        assert pgb.shape == (width, p)
+        assert incw.shape == (width, 6, f)
+        assert incw.dtype == np.int32
+        assert np.array_equal(sgb[:hi - lo], sgb_i[lo:hi])
+        assert np.array_equal(pgb[:hi - lo], pgb_i[lo:hi])
+        assert np.array_equal(incw[:hi - lo], inc[lo:hi])
+        for j in range(hi - lo, width):
+            assert sgb[j] == sgb_i[hi - 1]
+            assert np.array_equal(pgb[j], pgb_i[hi - 1])
+            assert np.array_equal(incw[j], inc[hi - 1])
+
+
 # -------------------------------------------------------- slot assigner --
 def _random_arrive_depart(rng, n_vms):
     """Random well-formed stream: every VM arrives once, may depart."""
