@@ -42,7 +42,7 @@ import time
 import numpy as np
 
 from benchmarks import common
-from repro.core import cluster_sim, replay_engine, traces
+from repro.core import cluster_sim, obs, replay_engine, traces
 
 BENCH_K = 8          # seed count for the recorded stream-batch speedup
 DUMP_VMS = 40_000    # stand-in dump size (quick path)
@@ -80,19 +80,28 @@ def e2e_dump_bench(path: str, cfg, budget: int = BUDGET,
     resumable probe sweep before the timed ones — with
     ``kill_after_shards`` set it raises ``SweepInterrupted`` after
     snapshotting, and a ``--resume`` rerun finishes bit-exact.
+
+    When a recorder is live (``POND_TRACE=1``) the four stages are
+    traced as ``e2e.ingest`` / ``e2e.decisions`` / ``e2e.compile`` /
+    ``e2e.sweep`` spans, consolidated with the engine counters into
+    one metrics blob by :func:`run`.
     """
     hardened = max_bad_rows > 0 or io_retries > 0
     report = (traces.IngestReport(max_bad_rows=max_bad_rows)
               if hardened else None)
+    rec = obs.get_recorder()
     t0 = time.perf_counter()
-    vms = [v for chunk in traces.iter_trace_chunks(
-        path, chunk_vms=chunk_vms, io_retries=io_retries, report=report)
-           for v in chunk]
+    with rec.span("e2e.ingest"):
+        vms = [v for chunk in traces.iter_trace_chunks(
+            path, chunk_vms=chunk_vms, io_retries=io_retries,
+            report=report)
+               for v in chunk]
     t_ingest = time.perf_counter() - t0
     t1 = time.perf_counter()
-    dec, _ = cluster_sim.policy_decisions(vms, "static",
-                                          static_pool_frac=0.30,
-                                          as_arrays=True)
+    with rec.span("e2e.decisions"):
+        dec, _ = cluster_sim.policy_decisions(vms, "static",
+                                              static_pool_frac=0.30,
+                                              as_arrays=True)
     t_dec = time.perf_counter() - t1
     # second chunked pass feeds the stream; the decide callback slices
     # the precomputed SoA at the running row offset (no VMDecision
@@ -107,11 +116,12 @@ def e2e_dump_bench(path: str, cfg, budget: int = BUDGET,
     t2 = time.perf_counter()
     replay_report = (traces.IngestReport(max_bad_rows=max_bad_rows)
                      if hardened else None)
-    stream = replay_engine.CompiledReplayStream(
-        traces.iter_trace_chunks(path, chunk_vms=chunk_vms,
-                                 io_retries=io_retries,
-                                 report=replay_report),
-        None, cfg, max_events_per_shard=budget, decide=decide)
+    with rec.span("e2e.compile"):
+        stream = replay_engine.CompiledReplayStream(
+            traces.iter_trace_chunks(path, chunk_vms=chunk_vms,
+                                     io_retries=io_retries,
+                                     report=replay_report),
+            None, cfg, max_events_per_shard=budget, decide=decide)
     t_compile = time.perf_counter() - t2
     hi = cfg.cores_per_server * 6.0
     probe_s = np.linspace(hi * 0.4, hi, n_cand)
@@ -128,7 +138,8 @@ def e2e_dump_bench(path: str, cfg, budget: int = BUDGET,
                      "rates": np.asarray(rates).round(6).tolist()}
     stream.reject_rates(probe_s, probe_p)            # warm the compile
     t3 = time.perf_counter()
-    stream.reject_rates(probe_s, probe_p)
+    with rec.span("e2e.sweep"):
+        stream.reject_rates(probe_s, probe_p)
     t_sweep = time.perf_counter() - t3
     wall = time.perf_counter() - t0
     if report is not None and replay_report is not None:
@@ -263,6 +274,12 @@ def run(quick: bool = True, trace_file: str | None = None,
           f"bit_exact={sb['bit_exact']})")
 
     res = {"trace": label, "e2e": e2e, "stream_batch": sb}
+    rec = obs.get_recorder()
+    if rec.enabled:
+        # one consolidated metrics blob (stage spans + engine counters)
+        # instead of ad-hoc prints
+        res["obs"] = rec.metrics()
+        res["manifest"] = obs.run_manifest()
     common.claim(res, "chunked e2e replay stays within the shard budget",
                  e2e["peak_shard_bytes"]
                  <= 6 * 4 * e2e["max_events_per_shard"],
@@ -299,6 +316,9 @@ def main(argv=None):
                     metavar="SHARDS",
                     help="chaos hook: kill the checkpointed sweep after "
                          "N shard sweeps (exercises --resume)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(implies tracing; view on ui.perfetto.dev)")
     args = ap.parse_args(argv)
     ckpt = None
     if args.checkpoint is not None:
@@ -307,9 +327,15 @@ def main(argv=None):
             resume=args.resume, kill_after_shards=args.kill_after)
     elif args.resume or args.kill_after is not None:
         ap.error("--resume/--kill-after need --checkpoint PATH")
+    if args.trace_out is not None and not obs.enabled():
+        obs.set_recorder(obs.Recorder())
     run(quick=not args.full, trace_file=args.trace_file,
         max_bad_rows=args.max_bad_rows, io_retries=args.io_retries,
         checkpoint=ckpt)
+    if args.trace_out is not None:
+        obs.get_recorder().to_chrome_trace(args.trace_out,
+                                           manifest=obs.run_manifest())
+        print(f"  chrome trace -> {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -8,12 +8,46 @@ trajectory from ``experiments/BENCH_replay.json`` (written by
 ``python -m benchmarks.run --perf-smoke``); the ``policy`` table
 renders the compiled policy engine's decision throughput and grid-sweep
 numbers from the same artifact.
+
+Observability additions (``core/obs.py``):
+
+  PYTHONPATH=src python -m benchmarks.report --what obs
+  PYTHONPATH=src python -m benchmarks.report --what replay --history
+  PYTHONPATH=src python -m benchmarks.report --check-regression
+
+``--what obs`` renders the engine counter table (jit-cache hits vs
+misses, padding waste, span timings) recorded by a ``POND_TRACE=1``
+perf-smoke run; ``--history`` prints a metric's trajectory over the
+last N runs from ``experiments/BENCH_history.jsonl``;
+``--check-regression`` compares the latest history entry against the
+median of the prior runs and WARNS on >25% slowdowns (never fails —
+wired into CI as a warn-only step).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import statistics
+
+HISTORY_PATH = "experiments/BENCH_history.jsonl"
+
+#: perf metrics tracked by --history / --check-regression, grouped by
+#: table: (bench key, direction) — "lower" means lower is better
+#: (wall seconds), "higher" means higher is better (throughput,
+#: speedups).  Regressions are flagged relative to the direction.
+PERF_METRICS = {
+    "replay": [("wall_s", "lower"), ("events_per_sec", "higher"),
+               ("batched_events_per_sec", "higher"),
+               ("streaming_events_per_sec", "higher"),
+               ("stream_batch_events_per_sec", "higher")],
+    "policy": [("policy_compiled_s", "lower"),
+               ("policy_vms_per_sec", "higher")],
+    "latency": [("latency_wall_s", "lower"),
+                ("latency_min_speedup_vs_scalar", "higher")],
+    "topology": [("topology_compiled_s", "lower"),
+                 ("topology_speedup_vs_oracle", "higher")],
+}
 
 
 def _load(outdir, mesh):
@@ -230,13 +264,147 @@ def topology_table(path: str = "experiments/BENCH_replay.json") -> str:
     return "\n".join(lines)
 
 
+def obs_table(path: str = "experiments/BENCH_replay.json") -> str:
+    """Engine counter table from a ``POND_TRACE=1`` perf-smoke run:
+    jit-cache hits/misses per kernel family, padding-waste ratios,
+    span aggregates, device-transfer bytes."""
+    lines = ["| counter | value |", "|---|---|"]
+    if not os.path.isfile(path):
+        lines.append("| (run `POND_TRACE=1 python -m benchmarks.run "
+                     "--perf-smoke`) | — |")
+        return "\n".join(lines)
+    r = json.load(open(path))
+    ob = r.get("obs")
+    if not ob:
+        lines.append("| (re-run with `POND_TRACE=1` to record the "
+                     "engine counters) | — |")
+        return "\n".join(lines)
+    man = r.get("manifest", {})
+    head = (f"run {man.get('timestamp', '?')} · sha "
+            f"{str(man.get('git_sha', '?'))[:12]} · "
+            f"{man.get('backend', '?')}/{man.get('device_kind', '?')}")
+    for k in sorted(ob):
+        lines.append(f"| `{k}` | {ob[k]} |")
+    return head + "\n\n" + "\n".join(lines)
+
+
+def load_history(path: str = HISTORY_PATH) -> list:
+    """BENCH_history.jsonl entries, oldest first; torn/garbled lines
+    (a killed run mid-append) are skipped, not fatal."""
+    entries = []
+    if not os.path.isfile(path):
+        return entries
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                entries.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue
+    return entries
+
+
+def history_table(what: str, last: int = 10,
+                  path: str = HISTORY_PATH) -> str:
+    """Trajectory of one table's perf metrics over the last N
+    perf-smoke runs (newest last) — regressions visible without
+    re-running anything."""
+    metrics = PERF_METRICS.get(what)
+    if metrics is None:
+        return f"(no history metrics defined for --what {what})"
+    keys = [k for k, _ in metrics]
+    lines = ["| timestamp | sha | backend | " + " | ".join(keys) + " |",
+             "|---" * (3 + len(keys)) + "|"]
+    entries = load_history(path)
+    if not entries:
+        lines.append("| (no history yet — run `python -m benchmarks.run "
+                     "--perf-smoke`) |" + " — |" * (2 + len(keys)))
+        return "\n".join(lines)
+    for e in entries[-last:]:
+        man, bench = e.get("manifest", {}), e.get("bench", {})
+        row = [str(man.get("timestamp", "?")),
+               str(man.get("git_sha", "?"))[:9],
+               str(man.get("backend", "?"))]
+        row += [str(bench.get(k, "—")) for k in keys]
+        lines.append("| " + " | ".join(row) + " |")
+    return "\n".join(lines)
+
+
+def check_regression(path: str = HISTORY_PATH,
+                     threshold: float = 0.25) -> list:
+    """Compare the latest history entry against the median of the
+    prior runs; returns WARN strings for metrics that regressed by
+    more than ``threshold``.  Warn-only by design: the caller (CI)
+    never fails on these — timings on shared runners are noisy, and
+    the first history entry has nothing to compare against.
+    """
+    entries = load_history(path)
+    if len(entries) < 2:
+        print(f"check-regression: {len(entries)} history "
+              f"{'entry' if len(entries) == 1 else 'entries'} in "
+              f"{path} — need >= 2 to compare, skipping")
+        return []
+    latest = entries[-1].get("bench", {})
+    prior = [e.get("bench", {}) for e in entries[:-1]]
+    warns = []
+    for metrics in PERF_METRICS.values():
+        for key, direction in metrics:
+            cur = latest.get(key)
+            hist = [b.get(key) for b in prior
+                    if isinstance(b.get(key), (int, float))]
+            if not isinstance(cur, (int, float)) or not hist:
+                continue
+            med = statistics.median(hist)
+            if med <= 0 or cur <= 0:
+                continue
+            ratio = cur / med if direction == "lower" else med / cur
+            if ratio > 1.0 + threshold:
+                warns.append(
+                    f"WARN {key}: {cur:g} vs history median {med:g} "
+                    f"over {len(hist)} runs "
+                    f"({(ratio - 1) * 100:.0f}% regression)")
+    for w in warns:
+        print(w)
+    if not warns:
+        print(f"check-regression: latest run within {threshold:.0%} of "
+              f"the history median on all "
+              f"{sum(len(m) for m in PERF_METRICS.values())} tracked "
+              f"metrics ({len(entries)} runs)")
+    return warns
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--outdir", default="experiments/dryrun")
     ap.add_argument("--what", default="all",
                     choices=["all", "dryrun", "roofline", "collectives",
-                             "replay", "policy", "latency", "topology"])
+                             "replay", "policy", "latency", "topology",
+                             "obs"])
+    ap.add_argument("--history", action="store_true",
+                    help="print the --what table's perf-metric "
+                         "trajectory from experiments/"
+                         "BENCH_history.jsonl instead of the table")
+    ap.add_argument("--last", type=int, default=10,
+                    help="history entries to show (default 10)")
+    ap.add_argument("--check-regression", action="store_true",
+                    help="compare the latest BENCH_history.jsonl entry "
+                         "against the history median; WARN on >25%% "
+                         "slowdowns (always exits 0)")
     args = ap.parse_args()
+    if args.check_regression:
+        check_regression()
+        return
+    if args.history:
+        whats = (list(PERF_METRICS) if args.what == "all"
+                 else [args.what])
+        for w in whats:
+            print(f"### {w} perf trajectory (last {args.last} "
+                  f"perf-smoke runs)\n")
+            print(history_table(w, last=args.last))
+            print()
+        return
     if args.what in ("all", "dryrun"):
         print("### Dry-run matrix\n")
         print(dryrun_table(args.outdir))
@@ -267,6 +435,11 @@ def main():
         print("### Multi-pod topology grid (compiled fleet scan vs "
               "scalar oracle loop)\n")
         print(topology_table())
+        print()
+    if args.what in ("all", "obs"):
+        print("### Engine observability counters (POND_TRACE=1 "
+              "perf-smoke)\n")
+        print(obs_table())
 
 
 if __name__ == "__main__":

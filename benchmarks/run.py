@@ -6,7 +6,14 @@
 ``--perf-smoke`` times only the fig3 quick path on the batched replay
 engine and emits ``experiments/BENCH_replay.json`` (wall seconds,
 candidate-events/sec, measured speedup vs the scalar oracle) so future
-PRs can track the replay-throughput trajectory.
+PRs can track the replay-throughput trajectory.  Every run is stamped
+with its provenance (git sha, jax backend, device kind, timestamp) and
+appended to ``experiments/BENCH_history.jsonl``; with ``POND_TRACE=1``
+the engine counters (jit-cache hits/misses, padding waste, shard
+spans) are merged in and a Chrome trace lands at
+``experiments/trace_perf_smoke.json`` (view on ui.perfetto.dev).
+``benchmarks/report.py --check-regression`` compares the latest
+history entry against the median of the prior runs.
 """
 from __future__ import annotations
 
@@ -35,6 +42,32 @@ MODULES = [
     "benchmarks.latency_bench",
     "benchmarks.roofline",
 ]
+
+
+def _fail_family_probe():
+    """Tiny availability sweep so the ``jit.fail.*`` cache family shows
+    up in the perf-smoke counters (``fig_availability`` itself is not
+    part of the smoke path)."""
+    from benchmarks import common
+    from repro.core import cluster_sim, replay_engine
+    from repro.runtime.fault import FailureSchedule
+    horizon = 86400.0
+    cfg = cluster_sim.ClusterConfig(n_servers=8, pool_sockets=8,
+                                    gb_per_core=4.0)
+    vms = common.population().sample_vms(400, horizon, seed=3,
+                                         start_id=9 * 10 ** 6)
+    dec, _ = cluster_sim.policy_decisions(vms, "static",
+                                          static_pool_frac=0.25)
+    sched = FailureSchedule.generate(horizon, cfg.n_groups, 6 * 3600.0,
+                                     1800.0, seed=0)
+    eng = replay_engine.CompiledReplay(vms, dec, cfg,
+                                       failure_schedule=sched)
+    full_gb = cfg.gb_per_core * cfg.cores_per_server
+    t0 = time.time()
+    r = eng.availability([full_gb, full_gb * 0.8], [64.0, 64.0])
+    return {"n_vms": len(vms), "n_failures": int(sched.n_failures),
+            "wall_s": round(time.time() - t0, 3),
+            "reject_rates": [round(float(x), 6) for x in r.reject_rate]}
 
 
 def perf_smoke():
@@ -77,6 +110,8 @@ def perf_smoke():
     """
     from benchmarks import (azure_e2e, fig3_poolsize, fig17_sensitivity,
                             fig_topology, latency_bench)
+    from repro.core import obs
+    rec = obs.get_recorder()
     t0 = time.time()
     res = fig3_poolsize.run(quick=True)
     wall = time.time() - t0          # fig3-only: comparable across PRs
@@ -94,6 +129,9 @@ def perf_smoke():
           f"{lat['wall_s']}s (min {lat['min_speedup']}x vs scalar "
           f"figure loops, bit_exact={lat['bit_exact']})")
     topo = fig_topology.run(quick=True)
+    fail = _fail_family_probe()
+    print(f"  fail-family probe: {fail['n_vms']} VMs, "
+          f"{fail['n_failures']} failures in {fail['wall_s']}s")
     batched = res.get("batched", {})
     narrow = batched.get("narrow2", {})
     streaming = res.get("streaming", {})
@@ -170,11 +208,35 @@ def perf_smoke():
             for c in topo.get("claims", [])),
         "topology_claims_pass": all(
             c["ok"] for c in topo.get("claims", [])),
+        "fail_probe_n_vms": fail.get("n_vms"),
+        "fail_probe_n_failures": fail.get("n_failures"),
+        "fail_probe_wall_s": fail.get("wall_s"),
         "claims_pass": all(c["ok"] for c in res.get("claims", [])),
     }
+    # provenance stamp: a BENCH_replay.json without backend/sha/
+    # timestamp is uninterpretable a week later
+    manifest = obs.run_manifest()
+    bench["git_sha"] = manifest["git_sha"]
+    bench["backend"] = manifest["backend"]
+    bench["device_kind"] = manifest["device_kind"]
+    bench["timestamp"] = manifest["timestamp"]
+    bench["manifest"] = manifest
+    if rec.enabled:
+        bench["obs"] = rec.metrics()
     os.makedirs("experiments", exist_ok=True)
     with open("experiments/BENCH_replay.json", "w") as f:
         json.dump(bench, f, indent=1)
+    # append, never overwrite: the perf trajectory across PRs
+    with open("experiments/BENCH_history.jsonl", "a") as f:
+        f.write(json.dumps({"manifest": manifest, "bench": {
+            k: v for k, v in bench.items()
+            if k not in ("manifest", "obs")},
+            "obs": rec.metrics() if rec.enabled else {}}) + "\n")
+    if rec.enabled:
+        trace_path = rec.to_chrome_trace(
+            "experiments/trace_perf_smoke.json", manifest=manifest)
+        print(f"  chrome trace -> {trace_path} "
+              f"(drop on ui.perfetto.dev)")
     print(f"perf-smoke: {wall:.1f}s wall, "
           f"{bench['events_per_sec']} candidate-events/s, batched K="
           f"{bench['batched_k']} {bench['batched_speedup_vs_seed_loop']}x"
@@ -187,7 +249,9 @@ def perf_smoke():
           f"{bench['latency_min_speedup_vs_scalar']}x min, topology "
           f"grid {bench['topology_lanes']} lanes "
           f"{bench['topology_speedup_vs_oracle']}x vs oracle "
-          f"-> experiments/BENCH_replay.json")
+          f"-> experiments/BENCH_replay.json "
+          f"(history: experiments/BENCH_history.jsonl, "
+          f"sha {manifest['git_sha'][:12]}, {manifest['backend']})")
     return bench
 
 

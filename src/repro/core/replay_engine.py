@@ -116,7 +116,7 @@ import time
 
 import numpy as np
 
-from repro.core import sweep_core
+from repro.core import obs, sweep_core
 from repro.core import topology as topology_mod
 
 # shared event/packing constants, re-exported for engine callers
@@ -414,6 +414,10 @@ class CompiledReplay:
             out[:n_ev] = vals
             return sweep_core.device_put(out)
 
+        rec = obs.get_recorder()
+        if rec.enabled:
+            rec.count("pad.events_used", n_ev)
+            rec.count("pad.events_padded", e_pad - n_ev)
         vmx = np.asarray(self._ev_vm)
         evs = (pad(self._ev_kind, PAD), pad(ev_slot, 0),
                pad(np.asarray(self._cores, np.int32)[vmx], 0),
@@ -460,6 +464,7 @@ class CompiledReplay:
         self._jax_ev_fail = (evs8, group_of, n_slots, s_pad, g_pad)
         return self._jax_ev_fail
 
+    @obs.traced("replay.availability")
     def availability(self, server_gb, pool_gb,
                      mitigation: str = "remigrate",
                      backend: str = "auto",
@@ -738,6 +743,7 @@ class CompiledReplay:
         return traj
 
     # ------------------------------------------------------------- sweep --
+    @obs.traced("replay.reject_rates")
     def reject_rates(self, server_gb, pool_gb,
                      reject_cap: int | None = None,
                      backend: str = "auto",
@@ -1045,11 +1051,13 @@ class CompiledReplay:
             }
         return self._fleet_ev_np
 
+    @obs.traced("replay.fleet")
     def reject_rates_fleet(self, server_gb, pod_gb, topology,
                            backend: str = "auto",
                            state_dtype: str | None = None) -> np.ndarray:
         """Reject fraction per ``(server_gb, pod capacities, topology)``
         fleet candidate — the multi-pod analog of :meth:`reject_rates`.
+        (Traced as ``replay.fleet`` when a recorder is live.)
 
         ``topology`` is one ``core/topology.py`` Topology (shared) or a
         sequence of per-lane topologies (all at this engine's
@@ -1484,8 +1492,9 @@ class _CheckpointIO:
     def load(self) -> dict | None:
         if not (self.spec.resume and os.path.exists(self.spec.path)):
             return None
-        with np.load(self.spec.path, allow_pickle=False) as z:
-            state = {key: z[key] for key in z.files}
+        with obs.get_recorder().span("checkpoint.load"):
+            with np.load(self.spec.path, allow_pickle=False) as z:
+                state = {key: z[key] for key in z.files}
         got = str(state.pop("fingerprint"))
         if got != self.fp:
             raise ValueError(
@@ -1495,9 +1504,10 @@ class _CheckpointIO:
         return state
 
     def save(self, state: dict) -> None:
-        tmp = self.spec.path + ".tmp.npz"
-        np.savez(tmp, fingerprint=self.fp, **state)
-        os.replace(tmp, self.spec.path)
+        with obs.get_recorder().span("checkpoint.save"):
+            tmp = self.spec.path + ".tmp.npz"
+            np.savez(tmp, fingerprint=self.fp, **state)
+            os.replace(tmp, self.spec.path)
 
     def tick(self, state_fn) -> None:
         """After each shard sweep: snapshot on cadence; then, if the
@@ -1767,6 +1777,12 @@ class CompiledReplayStream:
         #: per-sweep device footprint of one shard's event tensor
         #: (6 int32 streams) — THE quantity max_events_per_shard bounds
         self.peak_shard_bytes = 6 * 4 * self.shard_pad_events
+        rec = obs.get_recorder()
+        if rec.enabled and self.n_shards:
+            used = int(sum(len(s["kind"]) for s in self._shards))
+            rec.count("pad.events_used", used)
+            rec.count("pad.events_padded",
+                      self.n_shards * self.shard_pad_events - used)
         for s in self._shards:           # pad in place, once
             n = len(s["kind"])
             pad = self.shard_pad_events - n
@@ -1800,6 +1816,7 @@ class CompiledReplayStream:
     # class mirrors attribute-for-attribute)
     _pick_state_dtype = CompiledReplay._pick_state_dtype
 
+    @obs.traced("stream.reject_rates")
     def reject_rates(self, server_gb, pool_gb,
                      reject_cap: int | None = None,
                      backend: str = "auto",
@@ -1878,6 +1895,7 @@ class CompiledReplayStream:
 
     def _sweep_jax(self, server_gb, pool_gb, reject_cap, state_dtype,
                    ckpt=None):
+        rec = obs.get_recorder()
         n0 = len(server_gb)
         rejects = np.empty(n0, np.int64)
         sgb_i, pgb_i = sweep_core.quantize_capacities(server_gb, pool_gb)
@@ -1932,7 +1950,8 @@ class CompiledReplayStream:
                 evs = (_i32(shard["kind"]), _i32(shard["slot"]),
                        _i32(shard["c"]), _i32(shard["l"]),
                        _i32(shard["p"]), _i32(shard["m"]))
-                carry = sweep(evs, group_j, *carry, sgb_j, pgb_j)
+                with rec.span("stream.shard", shard=si, chunk=ci):
+                    carry = sweep(evs, group_j, *carry, sgb_j, pgb_j)
                 cand_events += self.shard_pad_events * width
                 if debug:
                     self._debug_check_carry(carry[0], carry[1],
@@ -1947,6 +1966,7 @@ class CompiledReplayStream:
                 if reject_cap is not None:
                     rej_now = np.asarray(carry[4])[:k]
                     if (rej_now > reject_cap).all():
+                        rec.count("stream.reject_cap_exits")
                         break                   # every candidate decided
             rejects[lo:hi] = np.asarray(carry[4])[:k]
         if io is not None:
@@ -1980,10 +2000,12 @@ class CompiledReplayStream:
             # representative server per group: every member mirrors the
             # group's free pool, so column 2 of the first member IS it
             firsts = np.unique(self.group_of, return_index=True)[1]
+        rec = obs.get_recorder()
         for si in range(start_shard, self.n_shards):
             shard = self._shards[si]
-            _np_stream_sweep(shard, self._gcols, free, placed, migrated,
-                             rejects)
+            with rec.span("stream.shard", shard=si, backend="numpy"):
+                _np_stream_sweep(shard, self._gcols, free, placed,
+                                 migrated, rejects)
             cand_events += len(shard["kind"]) * n0
             if debug:
                 self._debug_check_carry(
@@ -1996,12 +2018,14 @@ class CompiledReplayStream:
                     "migrated": migrated, "rejects": rejects,
                     "shards_done": io.shards_done})
             if reject_cap is not None and (rejects > reject_cap).all():
+                rec.count("stream.reject_cap_exits")
                 break
         if io is not None:
             io.done()
         return rejects, cand_events
 
     # ------------------------------------------------------------- fleet --
+    @obs.traced("stream.fleet")
     def reject_rates_fleet(self, server_gb, pod_gb, topology,
                            reject_cap: int | None = None,
                            backend: str = "auto",
@@ -2044,6 +2068,7 @@ class CompiledReplayStream:
 
     def _fleet_sweep_jax(self, sgb, caps, topos, reject_cap,
                          state_dtype):
+        rec = obs.get_recorder()
         n0 = len(sgb)
         rejects = np.empty(n0, np.int64)
         inc, p_max = _fleet_incidence(topos, self.n_servers, self._s_pad)
@@ -2081,10 +2106,12 @@ class CompiledReplayStream:
                 evs = (_i32(shard["kind"]), _i32(shard["slot"]),
                        _i32(shard["c"]), _i32(shard["l"]),
                        _i32(shard["p"]), _i32(shard["m"]))
-                carry = sweep(evs, inc_j, *carry, sgb_j, pgb_j)
+                with rec.span("stream.fleet.shard", shard=si):
+                    carry = sweep(evs, inc_j, *carry, sgb_j, pgb_j)
                 cand_events += self.shard_pad_events * width
                 if reject_cap is not None:
                     if (np.asarray(carry[5])[:kc] > reject_cap).all():
+                        rec.count("stream.reject_cap_exits")
                         break
             rejects[lo:hi] = np.asarray(carry[5])[:kc]
         return rejects, cand_events
@@ -2095,11 +2122,15 @@ class CompiledReplayStream:
         state = _np_fleet_state(n0, self.n_servers, self.cores_per_server,
                                 sgb, caps, self._n_slots)
         cand_events = 0
+        rec = obs.get_recorder()
         for si in range(self.n_shards):
             shard = self._shards[si]
-            _np_fleet_sweep(shard, inc, *state)
+            with rec.span("stream.fleet.shard", shard=si,
+                          backend="numpy"):
+                _np_fleet_sweep(shard, inc, *state)
             cand_events += len(shard["kind"]) * n0
             if reject_cap is not None and (state[-1] > reject_cap).all():
+                rec.count("stream.reject_cap_exits")
                 break
         return state[-1], cand_events
 
@@ -2208,6 +2239,7 @@ class CompiledReplayBatch:
                           pgb_i: np.ndarray) -> str:
         return _batch_pick_state_dtype(self.engines, sgb_i, pgb_i)
 
+    @obs.traced("batch.reject_rates")
     def reject_rates(self, server_gb, pool_gb,
                      reject_cap: int | None = None,
                      backend: str = "auto",
@@ -2275,6 +2307,7 @@ class CompiledReplayBatch:
         return rates
 
     # ------------------------------------------------------------- fleet --
+    @obs.traced("batch.fleet")
     def reject_rates_fleet(self, server_gb, pod_gb, topology,
                            backend: str = "auto",
                            state_dtype: str | None = None) -> np.ndarray:
@@ -2375,6 +2408,7 @@ class CompiledReplayBatch:
                                 s_pad, g_pad)
         return self._jax_batch_fail
 
+    @obs.traced("batch.availability")
     def availability(self, server_gb, pool_gb,
                      mitigation: str = "remigrate",
                      backend: str = "auto",
@@ -2555,6 +2589,7 @@ class CompiledReplayStreamBatch:
         return tuple(sweep_core.device_put(cols[key])
                      for key in ("kind", "slot", "c", "l", "p", "m"))
 
+    @obs.traced("stream_batch.reject_rates")
     def reject_rates(self, server_gb, pool_gb,
                      reject_cap: int | None = None,
                      backend: str = "auto",
@@ -2582,6 +2617,7 @@ class CompiledReplayStreamBatch:
         per-trace carry after every shard.
         """
         t0 = time.perf_counter()
+        rec = obs.get_recorder()
         server_gb, pool_gb = _broadcast_candidates(self.k, server_gb,
                                                    pool_gb)
         n0 = server_gb.shape[1]
@@ -2649,7 +2685,8 @@ class CompiledReplayStreamBatch:
             pgb_j = sweep_core.device_put(pgb)
             for si in range(shard_from, self.n_shards):
                 evs = self._stacked_shard(si)
-                carry = sweep(evs, group_j, *carry, sgb_j, pgb_j)
+                with rec.span("stream_batch.shard", shard=si, chunk=ci):
+                    carry = sweep(evs, group_j, *carry, sgb_j, pgb_j)
                 cand_events += self.k * self.shard_pad_events * width
                 if debug:
                     sweep_core.check_invariants(
@@ -2670,6 +2707,7 @@ class CompiledReplayStreamBatch:
                 if reject_cap is not None:
                     rej_now = np.asarray(carry[4])[:, :kc]
                     if (rej_now > reject_cap).all():
+                        rec.count("stream.reject_cap_exits")
                         break               # every lane decided
             rejects[:, lo:hi] = np.asarray(carry[4])[:, :kc]
         if io is not None:
@@ -2682,6 +2720,7 @@ class CompiledReplayStreamBatch:
         return rates
 
     # ------------------------------------------------------------- fleet --
+    @obs.traced("stream_batch.fleet")
     def reject_rates_fleet(self, server_gb, pod_gb, topology,
                            reject_cap: int | None = None,
                            backend: str = "auto",
@@ -2715,6 +2754,7 @@ class CompiledReplayStreamBatch:
                                      reject_cap=reject_cap,
                                      backend=backend)
                 for s in self.engines])
+        rec = obs.get_recorder()
         rejects = np.empty((self.k, n0), np.int64)
         inc, p_max = _fleet_incidence(topos, self.n_servers, self._s_pad)
         sgb_i, _ = sweep_core.quantize_capacities(sgb, np.zeros(n0))
@@ -2754,11 +2794,13 @@ class CompiledReplayStreamBatch:
                 np.broadcast_to(pgb_w, (self.k,) + pgb_w.shape).copy())
             for si in range(self.n_shards):
                 evs = self._stacked_shard(si)
-                carry = sweep(evs, inc_j, *carry, sgb_j, pgb_j)
+                with rec.span("stream_batch.fleet.shard", shard=si):
+                    carry = sweep(evs, inc_j, *carry, sgb_j, pgb_j)
                 cand_events += self.k * self.shard_pad_events * width
                 if reject_cap is not None:
                     rej_now = np.asarray(carry[5])[:, :kc]
                     if (rej_now > reject_cap).all():
+                        rec.count("stream.reject_cap_exits")
                         break
             rejects[:, lo:hi] = np.asarray(carry[5])[:, :kc]
         rates = rejects / np.maximum(self.n_vms, 1)[:, None]

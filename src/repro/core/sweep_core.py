@@ -66,6 +66,8 @@ import os
 
 import numpy as np
 
+from repro.core import obs
+
 ARRIVE, DEPART, MIGRATE = 0, 1, 2
 PAD = 3               # no-op event kind used to pad the XLA event stream
 FAIL, RECOVER = 4, 5  # failure-domain events (EMC/pod blast radius, §4.2);
@@ -89,6 +91,37 @@ I16_SAFE = 30000      # int16 headroom bound: capacity + payload must fit
 # --------------------------------------------------------------- jit cache --
 _JAX_OK = None        # tri-state: None unknown, then True/False
 _SWEEPS: dict = {}    # (state_dtype, with_carry, batched) -> jitted sweep
+
+
+def _jit_key_name(family: str, state_dtype: str, **flags) -> str:
+    """Counter-name stem for one jit-cache key, e.g.
+    ``jit.sweep.int32.carry1.batched0`` — the cache accessors append
+    ``.hit``/``.miss``; the keyed build/lower spans share the stem."""
+    bits = [f"{k}{int(v)}" if isinstance(v, bool) else str(v)
+            for k, v in flags.items()]
+    return ".".join(["jit", family, state_dtype] + bits)
+
+
+class _FirstCallTimer:
+    """Times the FIRST invocation of a freshly jitted sweep — XLA
+    tracing + lowering + compile all happen there — as a
+    ``jit.<family>.<key>.lower`` span, then delegates with one
+    attribute hop.
+    Installed only while a recorder is live (cache misses with tracing
+    disabled store the bare jitted fn, zero steady-state overhead)."""
+    __slots__ = ("fn", "name", "_first")
+
+    def __init__(self, fn, name):
+        self.fn = fn
+        self.name = name
+        self._first = True
+
+    def __call__(self, *args):
+        if self._first:
+            self._first = False
+            with obs.get_recorder().span(self.name):
+                return self.fn(*args)
+        return self.fn(*args)
 
 
 def jax_importable() -> bool:
@@ -235,18 +268,30 @@ def get_sweep(state_dtype: str = "int32", *, with_carry: bool = False,
         return None
     key = (state_dtype, with_carry, batched)
     fn = _SWEEPS.get(key)
+    rec = obs.get_recorder()
     if fn is None:
         import jax
-        base = build_sweep(state_dtype, with_carry)
-        if batched and with_carry:
-            base = jax.vmap(base, in_axes=((0, 0, 0, 0, 0, 0), None,
-                                           0, 0, 0, 0, 0, 0, 0))
-        elif batched:
-            base = jax.vmap(base, in_axes=((0, 0, 0, 0, 0, 0), None,
-                                           None, None, None, None, 0, 0))
-        fn = jax.jit(base, donate_argnums=_CARRY_ARGNUMS
-                     if with_carry else ())
+        stem = _jit_key_name("sweep", state_dtype, carry=with_carry,
+                             batched=batched)
+        if rec.enabled:
+            rec.count(stem + ".miss")
+        with rec.span(stem + ".build"):
+            base = build_sweep(state_dtype, with_carry)
+            if batched and with_carry:
+                base = jax.vmap(base, in_axes=((0, 0, 0, 0, 0, 0), None,
+                                               0, 0, 0, 0, 0, 0, 0))
+            elif batched:
+                base = jax.vmap(base,
+                                in_axes=((0, 0, 0, 0, 0, 0), None,
+                                         None, None, None, None, 0, 0))
+            fn = jax.jit(base, donate_argnums=_CARRY_ARGNUMS
+                         if with_carry else ())
+        if rec.enabled:
+            fn = _FirstCallTimer(fn, stem + ".lower")
         _SWEEPS[key] = fn
+    elif rec.enabled:
+        rec.count(_jit_key_name("sweep", state_dtype, carry=with_carry,
+                                batched=batched) + ".hit")
     return fn
 
 
@@ -452,15 +497,27 @@ def get_fail_sweep(state_dtype: str = "int32",
         return None
     key = (state_dtype, mitigation, batched, with_dist)
     fn = _FAIL_SWEEPS.get(key)
+    rec = obs.get_recorder()
     if fn is None:
         import jax
-        base = build_fail_sweep(state_dtype, mitigation, with_dist)
-        if batched:
-            base = jax.vmap(base, in_axes=((0,) * 8, None,
-                                           0, 0, 0, 0, 0, 0, 0, 0, 0,
-                                           0, 0))
-        fn = jax.jit(base)
+        stem = _jit_key_name("fail", state_dtype, mitigation=mitigation,
+                             batched=batched, dist=with_dist)
+        if rec.enabled:
+            rec.count(stem + ".miss")
+        with rec.span(stem + ".build"):
+            base = build_fail_sweep(state_dtype, mitigation, with_dist)
+            if batched:
+                base = jax.vmap(base, in_axes=((0,) * 8, None,
+                                               0, 0, 0, 0, 0, 0, 0, 0, 0,
+                                               0, 0))
+            fn = jax.jit(base)
+        if rec.enabled:
+            fn = _FirstCallTimer(fn, stem + ".lower")
         _FAIL_SWEEPS[key] = fn
+    elif rec.enabled:
+        rec.count(_jit_key_name("fail", state_dtype,
+                                mitigation=mitigation, batched=batched,
+                                dist=with_dist) + ".hit")
     return fn
 
 
@@ -640,19 +697,30 @@ def get_pod_sweep(state_dtype: str = "int32", *,
         return None
     key = (state_dtype, with_carry, batched)
     fn = _POD_SWEEPS.get(key)
+    rec = obs.get_recorder()
     if fn is None:
         import jax
-        base = build_pod_sweep(state_dtype, with_carry)
-        if batched and with_carry:
-            base = jax.vmap(base, in_axes=((0, 0, 0, 0, 0, 0), None,
-                                           0, 0, 0, 0, 0, 0, 0, 0))
-        elif batched:
-            base = jax.vmap(base, in_axes=((0, 0, 0, 0, 0, 0), None,
-                                           None, None, None, None,
-                                           None, 0, 0))
-        fn = jax.jit(base, donate_argnums=_POD_CARRY_ARGNUMS
-                     if with_carry else ())
+        stem = _jit_key_name("pod", state_dtype, carry=with_carry,
+                             batched=batched)
+        if rec.enabled:
+            rec.count(stem + ".miss")
+        with rec.span(stem + ".build"):
+            base = build_pod_sweep(state_dtype, with_carry)
+            if batched and with_carry:
+                base = jax.vmap(base, in_axes=((0, 0, 0, 0, 0, 0), None,
+                                               0, 0, 0, 0, 0, 0, 0, 0))
+            elif batched:
+                base = jax.vmap(base, in_axes=((0, 0, 0, 0, 0, 0), None,
+                                               None, None, None, None,
+                                               None, 0, 0))
+            fn = jax.jit(base, donate_argnums=_POD_CARRY_ARGNUMS
+                         if with_carry else ())
+        if rec.enabled:
+            fn = _FirstCallTimer(fn, stem + ".lower")
         _POD_SWEEPS[key] = fn
+    elif rec.enabled:
+        rec.count(_jit_key_name("pod", state_dtype, carry=with_carry,
+                                batched=batched) + ".hit")
     return fn
 
 
@@ -886,10 +954,20 @@ def bucket_width(k: int) -> int:
 
 def candidate_chunks(n: int):
     """Yield ``(lo, hi, width)`` candidate chunks of at most JAX_CHUNK,
-    each padded to its bucket width."""
+    each padded to its bucket width.
+
+    With tracing on, every chunk feeds the ``pad.cand_lanes_used`` /
+    ``pad.cand_lanes_padded`` counters — the padding-waste ratio of the
+    bucket scheme over the run's actual candidate batches.
+    """
+    rec = obs.get_recorder()
     for lo in range(0, n, JAX_CHUNK):
         hi = min(lo + JAX_CHUNK, n)
-        yield lo, hi, bucket_width(hi - lo)
+        width = bucket_width(hi - lo)
+        if rec.enabled:
+            rec.count("pad.cand_lanes_used", hi - lo)
+            rec.count("pad.cand_lanes_padded", width - (hi - lo))
+        yield lo, hi, width
 
 
 def lane_capacities(sgb_i: np.ndarray, pgb_i: np.ndarray, lo: int,
@@ -980,6 +1058,13 @@ def device_put(x):
     the donated carry args of the carry sweeps, keeps the packed state
     device-resident across shards and peak device memory bounded by
     one shard (batch) plus the carry.
+
+    With tracing on, the transfer volume feeds ``device_put.calls`` /
+    ``device_put.bytes`` (host-side nbytes of the placed array).
     """
     import jax
+    rec = obs.get_recorder()
+    if rec.enabled:
+        rec.count("device_put.calls")
+        rec.count("device_put.bytes", int(getattr(x, "nbytes", 0)))
     return jax.device_put(x)

@@ -30,6 +30,8 @@ import time
 
 import numpy as np
 
+from repro.core import obs
+
 N_PMU_FEATURES = 32
 
 # piecewise slowdown bands: (cum_prob, lo, hi)
@@ -726,6 +728,13 @@ def iter_trace_chunks(path: str, chunk_vms: int = 65536,
       internally.  ``benchmarks/azure_e2e.py`` surfaces the summary in
       its run report.
 
+    When a recorder is live (``POND_TRACE=1`` or
+    :func:`repro.core.obs.use_recorder`) each produced chunk is timed
+    as an ``ingest.chunk`` span with ``ingest.rows`` / ``ingest.vms``
+    counters, and the ledger's quarantine / IO-retry totals are folded
+    into ``ingest.quarantined`` / ``ingest.io_retries`` when the
+    stream closes.
+
     Usage (bounded-memory replay of an arbitrarily long trace)::
 
         report = traces.IngestReport(max_bad_rows=100)
@@ -739,6 +748,36 @@ def iter_trace_chunks(path: str, chunk_vms: int = 65536,
     """
     if report is None and (max_bad_rows > 0 or io_retries > 0):
         report = IngestReport(max_bad_rows=max_bad_rows)
+    inner = _iter_trace_chunks_impl(path, chunk_vms, max_vms, start_id,
+                                    seed, population, io_retries,
+                                    io_backoff_s, report)
+    rec = obs.get_recorder()
+    if not rec.enabled:
+        yield from inner
+        return
+    try:
+        while True:
+            with rec.span("ingest.chunk"):
+                try:
+                    vms = next(inner)
+                except StopIteration:
+                    break
+            rec.count("ingest.chunks")
+            rec.count("ingest.vms", len(vms))
+            yield vms
+    finally:
+        if report is not None:
+            rec.count("ingest.quarantined", report.n_quarantined)
+            rec.count("ingest.io_retries", report.io_retries)
+
+
+def _iter_trace_chunks_impl(path, chunk_vms, max_vms, start_id, seed,
+                            population, io_retries, io_backoff_s,
+                            report):
+    """Chunk pipeline behind :func:`iter_trace_chunks` (``report``
+    already resolved; the public wrapper adds the ingest spans and
+    counters so consumer time is never charged to ingestion)."""
+    rec = obs.get_recorder()
     pop = population or Population(n_customers=64, seed=seed)
     rng = np.random.default_rng(seed)
     cust_map: dict = {}
@@ -758,6 +797,8 @@ def iter_trace_chunks(path: str, chunk_vms: int = 65536,
         if n == 0:
             continue
         any_rows = True
+        if rec.enabled:
+            rec.count("ingest.rows", n_raw)
         if report is not None:
             arrival, lifetime, cores, mem, keep = \
                 _schema_arrays_quarantine(cols, path, row_offset,

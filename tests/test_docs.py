@@ -144,6 +144,30 @@ def test_readme_covers_topology_engine():
         assert topic in text, f"README misses {topic!r}"
 
 
+def test_observability_doc_exists_and_covers_architecture():
+    text = _read("docs", "observability.md")
+    for topic in ("Recorder", "POND_TRACE", "use_recorder", "span",
+                  "counter", "no-op",
+                  # counter catalogue anchors
+                  "jit.", "pad.", "device_put", "reject_cap",
+                  "checkpoint", "policy.", "ingest.",
+                  # exports + regression tracking
+                  "to_chrome_trace", "run_manifest", "perfetto",
+                  "BENCH_history.jsonl", "--what obs", "--history",
+                  "--check-regression", "median", "warn-only",
+                  "test_obs"):
+        assert topic.lower() in text.lower(), \
+            f"docs/observability.md misses {topic!r}"
+
+
+def test_readme_covers_observability():
+    text = _read("README.md")
+    for topic in ("obs.py", "POND_TRACE", "BENCH_history.jsonl",
+                  "docs/observability.md", "--what obs",
+                  "--check-regression", "--history", "perfetto"):
+        assert topic.lower() in text.lower(), f"README misses {topic!r}"
+
+
 def test_traces_doc_covers_schema_and_ingestion():
     text = _read("docs", "traces.md")
     for topic in ("arrival", "lifetime", "cores", "mem_gb",  # schema
