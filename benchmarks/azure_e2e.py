@@ -24,6 +24,16 @@ Measures the full scale-out path the ROADMAP names for
    records under the ``stream_batch_*`` keys in
    ``experiments/BENCH_replay.json``, rendered by
    ``report.py --what replay``).
+5. **Device-sharded streaming** — the same K-seed batch with its trace
+   axis split across every visible jax device
+   (``reject_rates(devices="all")``), timed against the single-device
+   run and asserted bit-exact; the upload/compute overlap ratio of the
+   double-buffered shard pipeline rides along.  ``run.py --perf-smoke``
+   records these under the ``device_*``/``overlap_ratio`` keys,
+   rendered by ``report.py --what device``.  CPU-only hosts need
+   ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set before
+   the first jax import) to expose a device pool; with one visible
+   device the stage records itself as skipped.
 
 Without ``--trace-file`` a synthetic stand-in dump in the exact
 ``fetch_azure_trace.py`` output schema (arrival-sorted CSV.gz) is
@@ -215,6 +225,68 @@ def stream_batch_bench(vms_list, cfg, budget: int = BUDGET,
     }
 
 
+def device_shard_bench(vms_list, cfg, budget: int = BUDGET,
+                       static_pool_frac: float = 0.30,
+                       n_cand: int = 2) -> dict:
+    """The K-seed stream batch sharded across every visible device vs
+    the same sweep on one device (trace-axis ``shard_map`` plan).
+
+    Bit-exactness is asserted; the recorded speedup is informational —
+    on a CPU host with ``--xla_force_host_platform_device_count`` the
+    "devices" are threads over the same cores, so wall-clock gains
+    track spare cores, not device count.  The sharded runs execute
+    under a scratch recorder so the double-buffer overlap ratio
+    (``stream.overlap_ratio``: fraction of shard-upload time hidden
+    behind device compute) is measured even when tracing is off.
+    """
+    from repro.core.sweep_core import resolve_devices
+    devs = resolve_devices("all")
+    if devs is None:
+        return {"n_devices": 1,
+                "skipped": "single visible device (CPU hosts: set "
+                           "XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8 before the first jax import)"}
+    streams = [replay_engine.CompiledReplayStream(
+        v, cluster_sim.policy_decisions(
+            v, "static", static_pool_frac=static_pool_frac)[0],
+        cfg, max_events_per_shard=budget) for v in vms_list]
+    batch = replay_engine.CompiledReplayStreamBatch(streams)
+    probe_s = np.linspace(150.0, 700.0, n_cand)
+    probe_p = np.linspace(0.0, 2000.0, n_cand)
+    kw = dict(skip_windows=False)      # time the full scan, not skips
+    r_one = batch.reject_rates(probe_s, probe_p, **kw)   # warm single
+    prev = obs.get_recorder()
+    scratch = obs.Recorder()
+    obs.set_recorder(scratch)
+    try:
+        r_dev = batch.reject_rates(probe_s, probe_p, devices=devs,
+                                   **kw)                 # warm sharded
+        t_one, t_dev = [], []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            batch.reject_rates(probe_s, probe_p, devices=devs, **kw)
+            t_dev.append(time.perf_counter() - t0)
+    finally:
+        obs.set_recorder(prev)
+    for _ in range(5):
+        t0 = time.perf_counter()
+        batch.reject_rates(probe_s, probe_p, **kw)
+        t_one.append(time.perf_counter() - t0)
+    mets = scratch.metrics()
+    n_ev = int(batch.n_events.sum())
+    return {
+        "n_devices": len(devs),
+        "k": batch.k,
+        "n_shards": int(batch.n_shards),
+        "single_ms": round(min(t_one) * 1e3, 2),
+        "device_ms": round(min(t_dev) * 1e3, 2),
+        "speedup_vs_single": round(min(t_one) / min(t_dev), 2),
+        "events_per_sec": round(n_ev * n_cand / min(t_dev), 1),
+        "overlap_ratio": mets.get("stream.overlap_ratio"),
+        "bit_exact": r_dev.tolist() == r_one.tolist(),
+    }
+
+
 def run(quick: bool = True, trace_file: str | None = None,
         max_bad_rows: int = 0, io_retries: int = 0,
         checkpoint=None) -> dict:
@@ -273,7 +345,18 @@ def run(quick: bool = True, trace_file: str | None = None,
           f"-event budget ({sb['events_per_sec']:.0f} cand-events/s, "
           f"bit_exact={sb['bit_exact']})")
 
-    res = {"trace": label, "e2e": e2e, "stream_batch": sb}
+    dev = device_shard_bench(vms_list, cfg)
+    if "skipped" in dev:
+        print(f"  device shard: skipped — {dev['skipped']}")
+    else:
+        print(f"  device shard: K={dev['k']} across {dev['n_devices']} "
+              f"devices {dev['device_ms']}ms vs single "
+              f"{dev['single_ms']}ms ({dev['speedup_vs_single']}x, "
+              f"overlap {dev['overlap_ratio']}, "
+              f"bit_exact={dev['bit_exact']})")
+
+    res = {"trace": label, "e2e": e2e, "stream_batch": sb,
+           "device_shard": dev}
     rec = obs.get_recorder()
     if rec.enabled:
         # one consolidated metrics blob (stage spans + engine counters)
@@ -290,6 +373,11 @@ def run(quick: bool = True, trace_file: str | None = None,
                  f"{sb['k']} seeds x {sb['n_shards']} shards")
     common.claim(res, "K-seed batched streaming >=2x vs stream loop",
                  sb["speedup"] >= 2.0, f"{sb['speedup']}x")
+    if "skipped" not in dev:
+        common.claim(res, "device-sharded stream batch bit-exact vs "
+                          "single device",
+                     dev["bit_exact"],
+                     f"K={dev['k']} on {dev['n_devices']} devices")
     return res
 
 

@@ -20,8 +20,16 @@ misses, padding waste, span timings) recorded by a ``POND_TRACE=1``
 perf-smoke run; ``--history`` prints a metric's trajectory over the
 last N runs from ``experiments/BENCH_history.jsonl``;
 ``--check-regression`` compares the latest history entry against the
-median of the prior runs and WARNS on >25% slowdowns (never fails —
-wired into CI as a warn-only step).
+median of the prior runs and WARNS on >25% slowdowns; by default it
+always exits 0 (CI wires it as a warn-only step — shared-runner
+timings are noisy), while ``--fail-on-regression`` makes warnings
+exit 1 for runs that want a hard gate (CI exposes this as a manual
+workflow-dispatch input).
+
+``--what device`` renders the multi-device sharding table
+(``device_*``/``overlap_ratio`` keys from a perf-smoke run with
+several visible jax devices — on CPU hosts export
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` first).
 """
 from __future__ import annotations
 
@@ -47,6 +55,9 @@ PERF_METRICS = {
                 ("latency_min_speedup_vs_scalar", "higher")],
     "topology": [("topology_compiled_s", "lower"),
                  ("topology_speedup_vs_oracle", "higher")],
+    "device": [("device_stream_batch_events_per_sec", "higher"),
+               ("device_speedup_vs_single", "higher"),
+               ("overlap_ratio", "higher")],
 }
 
 
@@ -264,6 +275,38 @@ def topology_table(path: str = "experiments/BENCH_replay.json") -> str:
     return "\n".join(lines)
 
 
+def device_table(path: str = "experiments/BENCH_replay.json") -> str:
+    """Multi-device sharded stream-batch numbers (written by ``run.py
+    --perf-smoke`` since the device-sharding layer; needs >= 2 visible
+    jax devices — forced on CPU hosts via ``XLA_FLAGS``)."""
+    lines = ["| devices | K seeds | sharded ms | single ms | speedup | "
+             "cand-events/s | overlap ratio | bit-exact |",
+             "|---|---|---|---|---|---|---|---|"]
+    if not os.path.isfile(path):
+        lines.append("| (run `python -m benchmarks.run --perf-smoke`) "
+                     "| — | — | — | — | — | — | — |")
+        return "\n".join(lines)
+    r = json.load(open(path))
+    if r.get("device_n_devices") is None:
+        lines.append("| (re-run `python -m benchmarks.run --perf-smoke` "
+                     "to record the device benchmark) | — | — | — | — | "
+                     "— | — | — |")
+        return "\n".join(lines)
+    if r.get("device_skipped"):
+        lines.append(f"| 1 — {r['device_skipped']} | — | — | — | — | — "
+                     "| — | — |")
+        return "\n".join(lines)
+    lines.append(
+        f"| {r['device_n_devices']} | {r.get('stream_batch_k', '—')} | "
+        f"{r.get('device_stream_batch_ms', '—')} | "
+        f"{r.get('device_single_ms', '—')} | "
+        f"{r.get('device_speedup_vs_single', '—')}x | "
+        f"{r.get('device_stream_batch_events_per_sec', '—')} | "
+        f"{r.get('overlap_ratio', '—')} | "
+        f"{'yes' if r.get('device_bit_exact') else 'NO'} |")
+    return "\n".join(lines)
+
+
 def obs_table(path: str = "experiments/BENCH_replay.json") -> str:
     """Engine counter table from a ``POND_TRACE=1`` perf-smoke run:
     jit-cache hits/misses per kernel family, padding-waste ratios,
@@ -381,7 +424,7 @@ def main():
     ap.add_argument("--what", default="all",
                     choices=["all", "dryrun", "roofline", "collectives",
                              "replay", "policy", "latency", "topology",
-                             "obs"])
+                             "device", "obs"])
     ap.add_argument("--history", action="store_true",
                     help="print the --what table's perf-metric "
                          "trajectory from experiments/"
@@ -391,11 +434,20 @@ def main():
     ap.add_argument("--check-regression", action="store_true",
                     help="compare the latest BENCH_history.jsonl entry "
                          "against the history median; WARN on >25%% "
-                         "slowdowns (always exits 0)")
+                         "slowdowns (exits 0 unless "
+                         "--fail-on-regression)")
+    ap.add_argument("--fail-on-regression", action="store_true",
+                    help="with --check-regression: exit 1 when any "
+                         "tracked metric regressed past the threshold "
+                         "(CI keeps the default warn-only)")
     args = ap.parse_args()
     if args.check_regression:
-        check_regression()
+        warns = check_regression()
+        if warns and args.fail_on_regression:
+            raise SystemExit(1)
         return
+    if args.fail_on_regression:
+        ap.error("--fail-on-regression needs --check-regression")
     if args.history:
         whats = (list(PERF_METRICS) if args.what == "all"
                  else [args.what])
@@ -435,6 +487,11 @@ def main():
         print("### Multi-pod topology grid (compiled fleet scan vs "
               "scalar oracle loop)\n")
         print(topology_table())
+        print()
+    if args.what in ("all", "device"):
+        print("### Multi-device sharded streaming (trace-axis "
+              "shard_map + double-buffered uploads)\n")
+        print(device_table())
         print()
     if args.what in ("all", "obs"):
         print("### Engine observability counters (POND_TRACE=1 "

@@ -14,6 +14,18 @@ spans) are merged in and a Chrome trace lands at
 ``experiments/trace_perf_smoke.json`` (view on ui.perfetto.dev).
 ``benchmarks/report.py --check-regression`` compares the latest
 history entry against the median of the prior runs.
+
+``--compilation-cache DIR`` opts into jax's persistent compilation
+cache for the smoke run: compiled executables land under DIR, so a
+second run with the same DIR skips XLA compilation entirely.  With
+``POND_TRACE=1`` the per-family ``jit.*.lower`` spans quantify the
+cold-vs-warm lowering cost (summed into the ``jit_lower_total_s``
+bench key).
+
+Multi-device keys (``device_*``, ``overlap_ratio``) record the
+trace-axis-sharded stream batch; CPU-only hosts must export
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before the run
+for the stage to engage (it records itself skipped otherwise).
 """
 from __future__ import annotations
 
@@ -70,7 +82,17 @@ def _fail_family_probe():
             "reject_rates": [round(float(x), 6) for x in r.reject_rate]}
 
 
-def perf_smoke():
+def _enable_compilation_cache(cache_dir: str) -> None:
+    """Opt into jax's persistent compilation cache (all entries, no
+    minimum compile time) — must run before anything jits."""
+    import jax
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+
+
+def perf_smoke(cache_dir: str | None = None):
     """Time the fig3 quick path; emit experiments/BENCH_replay.json.
 
     Alongside the single-trace engine numbers this records the
@@ -107,7 +129,18 @@ def perf_smoke():
     grid (one pod scan pricing every (savings, pool-budget, topology)
     lane) timed against the scalar ``replay_multi_pool`` oracle loop —
     gated at >=5x — plus its bit-exactness verdict.
+
+    Since the device-sharding layer it also records the ``device_*``
+    keys from ``azure_e2e.device_shard_bench``: the K-seed stream
+    batch with its trace axis ``shard_map``-partitioned across every
+    visible jax device vs the single-device sweep (ms, events/s,
+    speedup, bit-exactness) plus the double-buffer ``overlap_ratio``
+    (fraction of shard-upload time hidden behind compute).  Export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` first on
+    CPU-only hosts or the stage records itself skipped.
     """
+    if cache_dir is not None:
+        _enable_compilation_cache(cache_dir)
     from benchmarks import (azure_e2e, fig3_poolsize, fig17_sensitivity,
                             fig_topology, latency_bench)
     from repro.core import obs
@@ -136,6 +169,7 @@ def perf_smoke():
     narrow = batched.get("narrow2", {})
     streaming = res.get("streaming", {})
     sb = e2e_res.get("stream_batch", {})
+    dev = e2e_res.get("device_shard", {})
     e2e = e2e_res.get("e2e", {})
     bench = {
         "benchmark": "fig3_poolsize.quick",
@@ -178,6 +212,14 @@ def perf_smoke():
         "stream_batch_e2e_peak_shard_bytes": e2e.get("peak_shard_bytes"),
         "stream_batch_claims_pass": all(
             c["ok"] for c in e2e_res.get("claims", [])),
+        "device_n_devices": dev.get("n_devices"),
+        "device_skipped": dev.get("skipped"),
+        "device_stream_batch_ms": dev.get("device_ms"),
+        "device_single_ms": dev.get("single_ms"),
+        "device_speedup_vs_single": dev.get("speedup_vs_single"),
+        "device_stream_batch_events_per_sec": dev.get("events_per_sec"),
+        "device_bit_exact": dev.get("bit_exact"),
+        "overlap_ratio": dev.get("overlap_ratio"),
         "policy_bench_wall_s": round(policy_wall, 3),
         "policy_n_vms": policy.get("n_vms"),
         "policy_vms_per_sec": policy.get("vms_per_sec"),
@@ -221,8 +263,25 @@ def perf_smoke():
     bench["device_kind"] = manifest["device_kind"]
     bench["timestamp"] = manifest["timestamp"]
     bench["manifest"] = manifest
+    bench["compilation_cache_dir"] = cache_dir
+    if cache_dir is not None:
+        bench["compilation_cache_entries"] = len(os.listdir(cache_dir))
     if rec.enabled:
         bench["obs"] = rec.metrics()
+        # cold-vs-warm lowering cost: with --compilation-cache, a warm
+        # rerun against the same dir drives this toward zero
+        bench["jit_lower_total_s"] = round(sum(
+            v for k, v in bench["obs"].items()
+            if k.startswith("span.jit.") and k.endswith(".lower.total_s")
+        ), 3)
+    if cache_dir is not None:
+        lower = bench.get("jit_lower_total_s")
+        print(f"  compilation cache: "
+              f"{bench['compilation_cache_entries']} entries at "
+              f"{cache_dir}"
+              + (f", jit lowering {lower}s this run" if lower is not None
+                 else "")
+              + " — rerun with the same dir to measure warm lowering")
     os.makedirs("experiments", exist_ok=True)
     with open("experiments/BENCH_replay.json", "w") as f:
         json.dump(bench, f, indent=1)
@@ -244,7 +303,11 @@ def perf_smoke():
           f"shards {bench['streaming_events_per_sec']} ev/s, stream "
           f"batch K={bench['stream_batch_k']} "
           f"{bench['stream_batch_speedup_vs_stream_loop']}x vs stream "
-          f"loop, policy {bench['policy_vms_per_sec']} VMs/s "
+          f"loop, device shard "
+          f"{bench['device_speedup_vs_single'] or 'skipped'}"
+          f"{'x' if bench['device_speedup_vs_single'] else ''} on "
+          f"{bench['device_n_devices'] or 1} devices, policy "
+          f"{bench['policy_vms_per_sec']} VMs/s "
           f"({bench['policy_speedup_vs_scalar']}x), latency grids "
           f"{bench['latency_min_speedup_vs_scalar']}x min, topology "
           f"grid {bench['topology_lanes']} lanes "
@@ -262,10 +325,16 @@ def main(argv=None):
     ap.add_argument("--perf-smoke", action="store_true",
                     help="time the fig3 quick replay path and emit "
                          "experiments/BENCH_replay.json")
+    ap.add_argument("--compilation-cache", default=None, metavar="DIR",
+                    help="persist jax-compiled executables under DIR "
+                         "(opt-in; a second --perf-smoke run with the "
+                         "same DIR skips XLA compilation)")
     args = ap.parse_args(argv)
     if args.perf_smoke:
-        perf_smoke()
+        perf_smoke(cache_dir=args.compilation_cache)
         return
+    if args.compilation_cache:
+        _enable_compilation_cache(args.compilation_cache)
     out = {}
     n_pass = n_fail = 0
     for name in MODULES:

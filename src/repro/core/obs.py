@@ -92,6 +92,9 @@ class _NullRecorder:
     def count(self, name, value=1):
         return None
 
+    def add_span(self, name, t0_ns, t1_ns, **attrs):
+        return None
+
     def metrics(self):
         return {}
 
@@ -157,6 +160,18 @@ class Recorder:
         """Add ``value`` to the named counter."""
         self._counters[name] = self._counters.get(name, 0) + value
 
+    def add_span(self, name: str, t0_ns: int, t1_ns: int, **attrs):
+        """Record an externally timed span (``perf_counter_ns``
+        endpoints) without touching the nesting stack.
+
+        For work measured OFF the recording thread — e.g. the
+        double-buffered shard uploads, timed on the upload worker and
+        emitted here by the engine thread once the future resolves.
+        The recorder itself stays single-threaded: only the engine
+        thread ever calls this.
+        """
+        self._emit(name, t0_ns, t1_ns, self._depth, attrs or None)
+
     def _emit(self, name, t0, t1, depth, args):
         agg = self._aggr.get(name)
         if agg is None:
@@ -196,6 +211,13 @@ class Recorder:
             u, p = out.get(used), out.get(padded)
             if u is not None and p is not None and (u + p) > 0:
                 out[ratio] = round(p / (u + p), 4)
+        # double-buffer pipeline efficiency: fraction of shard-upload
+        # time hidden behind device compute (1.0 = fully overlapped)
+        up_s = out.get("span.stream.upload.total_s")
+        wait_s = out.get("span.stream.upload_wait.total_s")
+        if up_s and wait_s is not None and up_s > 0:
+            out["stream.overlap_ratio"] = round(
+                max(0.0, 1.0 - wait_s / up_s), 4)
         if self._dropped:
             out["obs.dropped_events"] = self._dropped
         return out

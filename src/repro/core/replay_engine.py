@@ -88,17 +88,38 @@ each size's infinite-pool trajectory and warm-started from neighbors
   carry, so N shards replay exactly like one monolithic sweep (reject
   rates bit-exact vs ``CompiledReplay``).  Chunked construction from
   ``traces.iter_trace_chunks`` keeps ingestion memory bounded too.
-  Sweep state packs to int16 when server capacities permit (half the
-  CPU memory traffic), with an automatic int32 fallback — every
-  engine shares the ``sweep_core.pick_state_dtype`` overflow rules.
+  Shard uploads are DOUBLE-BUFFERED: a background worker packs and
+  ``device_put``s shard i+1 while shard i's scan runs (at most two
+  shards' event tensors exist transiently; the measured overlap lands
+  in ``stream.overlap_ratio``).  Divergence-window skipping
+  (``skip_windows=True``, the default) fast-forwards the carry past
+  shard prefixes where a cached infinite-capacity reference replay
+  proves no candidate's caps can bind — whole shards are never
+  scanned, bit-exactly.  Sweep state packs to int16 when server
+  capacities permit (half the CPU memory traffic), with an automatic
+  int32 fallback — every engine shares the
+  ``sweep_core.pick_state_dtype`` overflow rules.
 
 * **Streaming trace batch** — ``CompiledReplayStreamBatch`` composes
   the two axes: K streams replay through index-aligned padded shards,
   one vmapped ``lax.scan`` per shard with a PER-TRACE packed carry
   threaded shard-to-shard, so a K-seed Azure-scale study costs one
   pass over the shard axis instead of K — with peak event-tensor
-  memory bounded by ONE stacked shard batch.  Row ``k`` is bit-exact
-  vs running ``streams[k]`` alone.
+  memory bounded by ONE stacked shard batch (two in the double-buffer
+  window).  Row ``k`` is bit-exact vs running ``streams[k]`` alone.
+
+* **Multi-device sharding** — every sweep entry point takes
+  ``devices=`` (``"all"``, an int, a device list, or None): the
+  trace-batch axis (or, when K < n_devices and for single traces, the
+  candidate-lane axis) is partitioned across a 1-D
+  ``jax.sharding.Mesh`` with ``shard_map`` inside the same jitted
+  scans.  The partitioned axes are embarrassingly parallel — no
+  collectives — so sharded results are bit-exact (``==``) vs the
+  single-device path; fewer than two resolved devices degrades to the
+  unsharded sweep.  CPU-only hosts: export
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before the
+  first jax import.  See ``tests/test_device_shard.py`` and
+  ``docs/replay_engine.md``.
 
 The dtype-parametric event-step kernel, the keyed jit cache, the
 int16/int32 packing rules, the padding buckets and the carry
@@ -587,12 +608,15 @@ class CompiledReplay:
             affected_per_failure=dist, mitigation=mitigation)
 
     def _reject_rates_jax(self, server_gb, pool_gb,
-                          state_dtype: str | None = None) -> np.ndarray:
+                          state_dtype: str | None = None,
+                          devices=None) -> np.ndarray:
         """XLA sweep over the whole batch, in candidate chunks of 16/96.
 
         Carry state packs to int16 when capacities permit (half the
         sweep's memory traffic) and falls back to int32 otherwise;
-        ``state_dtype`` forces one packing (testing hook).
+        ``state_dtype`` forces one packing (testing hook).  ``devices``
+        shards the candidate-lane axis over a device mesh (events
+        replicated, per-lane state split), bit-exact vs single-device.
         """
         evs, group_of, n_slots, s_pad, g_pad = self._jax_events()
         n0 = len(server_gb)
@@ -600,20 +624,41 @@ class CompiledReplay:
         sgb_i, pgb_i = sweep_core.quantize_capacities(server_gb, pool_gb)
         dt_name = state_dtype or self._pick_state_dtype(sgb_i, pgb_i)
         np_dt = sweep_core.state_np_dtype(dt_name)
-        sweep = sweep_core.get_sweep(dt_name)
+        devs = sweep_core.resolve_devices(devices)
+        placed = {}                    # per-mesh replicated event tensors
         for lo, hi, width in sweep_core.candidate_chunks(n0):
+            mesh = sh_lane = sh_slot = None
+            evs_m, group_m = evs, group_of
+            if devs is not None:
+                n_lane = sweep_core.lane_shard_count(width, len(devs))
+                if n_lane >= 2:
+                    mesh = sweep_core.shard_mesh(devs[:n_lane])
+                    sh_lane = sweep_core.named_sharding(mesh, "shard")
+                    sh_slot = sweep_core.named_sharding(mesh, None,
+                                                        "shard")
+                    if mesh not in placed:
+                        rep = sweep_core.named_sharding(mesh)
+                        placed[mesh] = (
+                            tuple(sweep_core.device_put(np.asarray(a),
+                                                        rep)
+                                  for a in evs),
+                            sweep_core.device_put(np.asarray(group_of),
+                                                  rep))
+                    evs_m, group_m = placed[mesh]
+            sweep = sweep_core.get_sweep(dt_name, mesh=mesh,
+                                         shard_axis="lane")
             sgb, pgb = sweep_core.lane_capacities(sgb_i, pgb_i, lo, hi,
                                                   width, np_dt)
             fc0, um0, up0, slots0, _ = sweep_core.init_state(
                 width, self.n_servers, self.cores_per_server, s_pad,
                 g_pad, n_slots, np_dt)
-            out = sweep(evs, group_of,
-                        sweep_core.device_put(fc0),
-                        sweep_core.device_put(um0),
-                        sweep_core.device_put(up0),
-                        sweep_core.device_put(slots0),
-                        sweep_core.device_put(sgb),
-                        sweep_core.device_put(pgb))
+            out = sweep(evs_m, group_m,
+                        sweep_core.device_put(fc0, sh_lane),
+                        sweep_core.device_put(um0, sh_lane),
+                        sweep_core.device_put(up0, sh_lane),
+                        sweep_core.device_put(slots0, sh_slot),
+                        sweep_core.device_put(sgb, sh_lane),
+                        sweep_core.device_put(pgb, sh_lane))
             rejects[lo:hi] = np.asarray(out)[:hi - lo]
         return rejects / max(self.n_vms, 1)
 
@@ -747,8 +792,14 @@ class CompiledReplay:
     def reject_rates(self, server_gb, pool_gb,
                      reject_cap: int | None = None,
                      backend: str = "auto",
-                     state_dtype: str | None = None) -> np.ndarray:
+                     state_dtype: str | None = None,
+                     devices=None) -> np.ndarray:
         """Reject fraction for each (server_gb, pool_gb) candidate.
+
+        ``devices`` shards the XLA backend's candidate-lane axis over a
+        JAX device mesh (``"all"``, an int, or an explicit device
+        list — see :func:`sweep_core.resolve_devices`), bit-exact vs
+        single-device; the numpy backend ignores it.
 
         Accepts scalars or broadcastable 1-D arrays; one event sweep prices
         the whole batch.  ``backend="auto"`` uses the XLA integer sweep
@@ -783,7 +834,8 @@ class CompiledReplay:
             backend = "jax"
         if backend == "jax":
             rates = self._reject_rates_jax(server_gb, pool_gb,
-                                           state_dtype=state_dtype)
+                                           state_dtype=state_dtype,
+                                           devices=devices)
             _STATS.sweeps += 1
             _STATS.events += n_ev
             _STATS.candidate_events += n_ev * n0
@@ -1530,6 +1582,179 @@ class _CheckpointIO:
             os.remove(self.spec.path)
 
 
+# ------------------------------------------- double-buffered uploads --
+_UPLOAD_POOL = None
+
+
+def _upload_pool():
+    """Lazy single-worker executor for shard host-packing + uploads.
+
+    One worker is enough: the pipeline only ever has shard i+1 in
+    flight while shard i computes, and a single worker keeps uploads
+    ordered.  The worker must never touch the obs recorder (it is
+    single-threaded); jobs return wall timestamps and the main thread
+    emits the ``stream.upload`` span via ``Recorder.add_span``.
+    """
+    global _UPLOAD_POOL
+    if _UPLOAD_POOL is None:
+        from concurrent.futures import ThreadPoolExecutor
+        _UPLOAD_POOL = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="pond-upload")
+    return _UPLOAD_POOL
+
+
+def _upload_job(build, sharding=None):
+    """Worker-side job: pack one shard's host tensors and start the
+    device transfer.  Returns ``(device_arrays, t0_ns, t1_ns, nbytes)``
+    so the caller can report the span from the engine thread."""
+    import jax
+    t0 = time.perf_counter_ns()
+    arrs = build()
+    nbytes = sum(int(a.nbytes) for a in arrs)
+    if sharding is None:
+        out = tuple(jax.device_put(a) for a in arrs)
+    else:
+        out = tuple(jax.device_put(a, sharding) for a in arrs)
+    return out, t0, time.perf_counter_ns(), nbytes
+
+
+# --------------------------------------------- divergence windows --
+def _stream_reference(stream):
+    """Infinite-capacity reference replay over a stream's shards.
+
+    Replays the compiled event shards once with unbounded server/pool
+    capacities — exactly the XLA kernel's semantics at ``sgb = pgb =
+    inf`` (best-fit by free cores, first index on ties; cores-only
+    rejects).  Produces, per shard, the maximum server/pool demand any
+    admission or migration test could require (``max_srv`` /
+    ``max_pool``) plus the full packed state at every shard boundary.
+
+    A candidate lane whose capacities dominate a prefix of these maxima
+    provably takes the identical action at every event of that prefix,
+    so the sweep may start from the boundary snapshot instead — the
+    divergence-window skip.  Cached on the stream; returns ``None``
+    when the stream cannot support exact skipping (non-integral
+    decisions or cores).
+    """
+    ref = getattr(stream, "_ref", None)
+    if ref is not None:
+        return ref if ref != "unusable" else None
+    cps = float(stream.cores_per_server)
+    if not (stream._exact and cps.is_integer()):
+        stream._ref = "unusable"
+        return None
+    big = 1 << 60
+    n_srv = stream.n_servers
+    group_of = np.asarray(stream.group_of, np.int64)
+    fc = np.full(n_srv, int(cps), np.int64)
+    um = np.zeros(n_srv, np.int64)
+    up = np.zeros(stream.n_groups, np.int64)
+    slots = np.full(stream._n_slots, -1, np.int64)
+    rej = 0
+    n = stream.n_shards
+    max_srv = np.empty(n, np.int64)
+    max_pool = np.empty(n, np.int64)
+    snaps = [(fc.copy(), um.copy(), up.copy(), slots.copy(), rej)]
+    for si, shard in enumerate(stream._shards):
+        kinds = shard["kind"].tolist()
+        sls = shard["slot"].tolist()
+        cs = shard["c"].tolist()
+        ls = shard["l"].tolist()
+        ps = shard["p"].tolist()
+        ms_ = shard["m"].tolist()
+        ms = mp = -big                # event-free shards always skip
+        for e, kind in enumerate(kinds):
+            if kind == ARRIVE:
+                c = int(cs[e])
+                feas = fc >= c
+                if feas.any():
+                    b = int(np.argmin(np.where(feas, fc, big)))
+                    g = group_of[b]
+                    fc[b] -= c
+                    um[b] += int(ls[e])
+                    up[g] += int(ps[e])
+                    slots[sls[e]] = b * 2
+                    if um[b] > ms:
+                        ms = int(um[b])
+                    if up[g] > mp:
+                        mp = int(up[g])
+                else:
+                    rej += 1
+            elif kind == DEPART:
+                val = int(slots[sls[e]])
+                if val >= 0:
+                    b = val >> 1
+                    fc[b] += int(cs[e])
+                    if val & 1:
+                        um[b] -= int(ms_[e])
+                    else:
+                        um[b] -= int(ls[e])
+                        up[group_of[b]] -= int(ps[e])
+                    slots[sls[e]] = -1
+            elif kind == MIGRATE:
+                val = int(slots[sls[e]])
+                if val >= 0:
+                    b = val >> 1
+                    p = int(ps[e])
+                    um[b] += p
+                    up[group_of[b]] -= p
+                    slots[sls[e]] = val | 1
+                    if um[b] > ms:
+                        ms = int(um[b])
+            # PAD (and FAIL/RECOVER, which the plain kernel ignores)
+            # leave the state untouched
+        max_srv[si] = ms
+        max_pool[si] = mp
+        snaps.append((fc.copy(), um.copy(), up.copy(), slots.copy(),
+                      rej))
+    stream._ref = {"max_srv": max_srv, "max_pool": max_pool,
+                   "snaps": snaps}
+    return stream._ref
+
+
+def _skip_count(ref, min_sgb, min_pgb, n_shards):
+    """Leading shards a chunk may skip: the longest prefix whose
+    reference demand maxima every lane capacity in the chunk covers.
+    A stream whose entire trace is skippable extends to ``n_shards``
+    (trailing batch-alignment shards hold only no-op events)."""
+    viol = (ref["max_srv"] > min_sgb) | (ref["max_pool"] > min_pgb)
+    nz = np.flatnonzero(viol)
+    return int(nz[0]) if nz.size else n_shards
+
+
+def _carry_from_snap(snap, width, n_servers, n_groups, s_pad, g_pad,
+                     n_slots, np_dt, dt_name):
+    """Packed per-lane carry seeded from a reference boundary snapshot,
+    broadcast across ``width`` candidate lanes (every non-diverged lane
+    holds exactly the reference state).  Layout matches
+    ``sweep_core.init_state``: padded server columns at the negative
+    sentinel, padded slots at -1."""
+    fc_r, um_r, up_r, slots_r, rej = snap
+    fc0 = np.full((width, s_pad), -sweep_core.state_sentinel(dt_name),
+                  np_dt)
+    fc0[:, :n_servers] = fc_r
+    um0 = np.zeros((width, s_pad), np_dt)
+    um0[:, :n_servers] = um_r
+    up0 = np.zeros((width, g_pad), np_dt)
+    up0[:, :n_groups] = up_r
+    slots0 = np.full((n_slots, width), -1, np_dt)
+    slots0[:len(slots_r), :] = slots_r[:, None]
+    rej0 = np.full(width, rej, np.int32)
+    return fc0, um0, up0, slots0, rej0
+
+
+def _pad_carry_rows(carry, k_pad, init_full):
+    """Grow/shrink the leading (trace) axis of a resumed batched carry
+    to ``k_pad`` rows — rows past the checkpointed count start from the
+    plain init state (their events are all no-ops)."""
+    k_have = np.asarray(carry[0]).shape[0]
+    if k_have == k_pad:
+        return carry
+    return tuple(
+        np.concatenate([np.asarray(a)[:k_pad], b[min(k_have, k_pad):]])
+        for a, b in zip(carry, init_full))
+
+
 class CompiledReplayStream:
     """Out-of-core replay: time-windowed event shards, carried state.
 
@@ -1569,8 +1794,9 @@ class CompiledReplayStream:
     event), per-VM payload scalars (5 machine words per VM) and the
     pending-departure buffer; the heavyweight VM records (PMU vectors
     etc.) of a consumed chunk are dropped before the next chunk loads,
-    and only ONE shard's padded event tensor is ever materialized for
-    the sweep — that last quantity is what ``max_events_per_shard``
+    and at most TWO shards' padded event tensors are ever materialized
+    for the sweep (the one computing plus the one the double-buffer
+    worker uploads) — that quantity is what ``max_events_per_shard``
     bounds.  ``scripts/fetch_azure_trace.py`` emits arrival-sorted
     trace files that stream through this path unchanged.
     """
@@ -1821,20 +2047,38 @@ class CompiledReplayStream:
                      reject_cap: int | None = None,
                      backend: str = "auto",
                      state_dtype: str | None = None,
-                     checkpoint: "CheckpointSpec | None" = None
-                     ) -> np.ndarray:
+                     checkpoint: "CheckpointSpec | None" = None,
+                     devices=None,
+                     skip_windows: bool = True) -> np.ndarray:
         """Reject fraction per candidate, streamed shard by shard.
 
         Same contract and broadcasting as
         :meth:`CompiledReplay.reject_rates`; one pass over the shards
         prices the whole candidate batch, threading the packed state
         between shards, with peak event-tensor memory
-        ``peak_shard_bytes`` (bounded by ``max_events_per_shard``).
+        ``peak_shard_bytes`` (bounded by ``max_events_per_shard``; the
+        double-buffered upload pipeline keeps at most TWO shards in
+        flight, so transient peak is ``2 * peak_shard_bytes``).
         With ``reject_cap`` set the stream stops early once EVERY
         candidate exceeds the cap (each reported rate is then its exact
         count so far — a lower bound at or above
         ``(reject_cap + 1) / n_vms``, satisfying the same
         feasibility-test contract as the other backends).
+
+        The XLA backend pipelines host shard packing + ``device_put``
+        of shard i+1 with shard i's scan (obs spans ``stream.upload`` /
+        ``stream.compute``; ``stream.overlap_ratio`` in
+        ``obs.metrics()`` measures the overlap).  ``devices`` shards
+        the candidate-lane axis across JAX devices via
+        ``shard_map`` — ``"all"``, an int, or an explicit device list
+        (see :func:`sweep_core.resolve_devices`) — bit-exact vs
+        single-device.  ``skip_windows`` (default on) skips leading
+        event shards inside each candidate chunk's divergence window:
+        shards where no lane's capacity can bind start from a
+        precomputed boundary snapshot instead of scanning, bit-exact vs
+        the unskipped sweep (without ``reject_cap``; with a cap both
+        paths satisfy the same lower-bound contract but may stop at
+        different shards).
 
         ``checkpoint`` (a :class:`CheckpointSpec`) snapshots the packed
         carry + cursors to disk every N shard sweeps and, with
@@ -1863,7 +2107,8 @@ class CompiledReplayStream:
                 else "numpy"
         if backend == "jax":
             rejects, cand_events = self._sweep_jax(
-                server_gb, pool_gb, reject_cap, state_dtype, checkpoint)
+                server_gb, pool_gb, reject_cap, state_dtype, checkpoint,
+                devices=devices, skip_windows=skip_windows)
         else:
             rejects, cand_events = self._sweep_numpy(
                 server_gb, pool_gb, reject_cap, checkpoint)
@@ -1893,18 +2138,29 @@ class CompiledReplayStream:
             cores_per_server=self.cores_per_server, shard=si,
             up_slack=self._mig_pool_sum)
 
+    def _shard_host(self, si: int):
+        """Builder for one shard's six int32 event columns — runs on
+        the upload worker so host packing overlaps device compute."""
+        shard = self._shards[si]
+
+        def build():
+            return tuple(
+                a if a.dtype == np.int32 else a.astype(np.int32)
+                for a in (shard["kind"], shard["slot"], shard["c"],
+                          shard["l"], shard["p"], shard["m"]))
+
+        return build
+
     def _sweep_jax(self, server_gb, pool_gb, reject_cap, state_dtype,
-                   ckpt=None):
+                   ckpt=None, devices=None, skip_windows=True):
         rec = obs.get_recorder()
         n0 = len(server_gb)
         rejects = np.empty(n0, np.int64)
         sgb_i, pgb_i = sweep_core.quantize_capacities(server_gb, pool_gb)
         dt_name = state_dtype or self._pick_state_dtype(sgb_i, pgb_i)
         np_dt = sweep_core.state_np_dtype(dt_name)
-        # the carry variant donates the packed state back to the sweep:
-        # shard-to-shard state stays device-resident (GPU/TPU-ready)
-        sweep = sweep_core.get_sweep(dt_name, with_carry=True)
-        group_j = sweep_core.device_put(self._group_np)
+        devs = sweep_core.resolve_devices(devices)
+        ref = _stream_reference(self) if skip_windows else None
         cand_events = 0
         io, st = self._checkpoint_io("jax", dt_name, reject_cap,
                                      server_gb, pool_gb, ckpt)
@@ -1920,38 +2176,80 @@ class CompiledReplayStream:
         debug = sweep_core.invariants_enabled()
         if debug:
             self._debug_check_events()
+        pool = _upload_pool()
         for ci, (lo, hi, width) in enumerate(
                 sweep_core.candidate_chunks(n0)):
             if ci < start_chunk:
                 continue              # counts restored from checkpoint
             k = hi - lo
+            # candidate-lane sharding: split the lane axis over as many
+            # devices as divide this chunk's bucket width
+            mesh = sh_lane = sh_slot = sh_rep = None
+            if devs is not None:
+                n_lane = sweep_core.lane_shard_count(width, len(devs))
+                if n_lane >= 2:
+                    mesh = sweep_core.shard_mesh(devs[:n_lane])
+                    sh_lane = sweep_core.named_sharding(mesh, "shard")
+                    sh_slot = sweep_core.named_sharding(mesh, None,
+                                                        "shard")
+                    sh_rep = sweep_core.named_sharding(mesh)
+            # the carry variant donates the packed state back to the
+            # sweep: shard-to-shard state stays device-resident
+            sweep = sweep_core.get_sweep(dt_name, with_carry=True,
+                                         mesh=mesh, shard_axis="lane")
+            group_j = sweep_core.device_put(self._group_np, sh_rep)
             sgb, pgb = sweep_core.lane_capacities(sgb_i, pgb_i, lo, hi,
                                                   width, np_dt)
             if resumed is not None:
-                carry = tuple(sweep_core.device_put(a) for a in resumed)
+                carry0 = resumed
                 shard_from, resumed = start_shard, None
+            elif ref is not None:
+                # divergence window: every lane in the chunk provably
+                # replays the reference through these leading shards —
+                # start from the boundary snapshot instead of scanning
+                shard_from = _skip_count(ref, sgb_i[lo:hi].min(),
+                                         pgb_i[lo:hi].min(),
+                                         self.n_shards)
+                carry0 = _carry_from_snap(
+                    ref["snaps"][shard_from], width, self.n_servers,
+                    self.n_groups, self._s_pad, self._g_pad,
+                    self._n_slots, np_dt, dt_name)
+                if shard_from and rec.enabled:
+                    rec.count("stream.shards_skipped", shard_from)
+                    rec.count("stream.events_skipped",
+                              shard_from * self.shard_pad_events * width)
             else:
-                carry = tuple(sweep_core.device_put(a)
-                              for a in sweep_core.init_state(
-                                  width, self.n_servers,
-                                  self.cores_per_server, self._s_pad,
-                                  self._g_pad, self._n_slots, np_dt))
+                carry0 = sweep_core.init_state(
+                    width, self.n_servers, self.cores_per_server,
+                    self._s_pad, self._g_pad, self._n_slots, np_dt)
                 shard_from = 0
-            sgb_j = sweep_core.device_put(sgb)
-            pgb_j = sweep_core.device_put(pgb)
+            carry = tuple(sweep_core.device_put(a, s) for a, s in zip(
+                carry0, (sh_lane, sh_lane, sh_lane, sh_slot, sh_lane)))
+            sgb_j = sweep_core.device_put(sgb, sh_lane)
+            pgb_j = sweep_core.device_put(pgb, sh_lane)
+            # double buffering: shard i+1 packs + uploads on a worker
+            # thread while shard i's scan runs; at most TWO shard
+            # tensors are ever in flight (2 * peak_shard_bytes)
+            fut = None
+            if shard_from < self.n_shards:
+                fut = pool.submit(_upload_job, self._shard_host(shard_from),
+                                  sh_rep)
             for si in range(shard_from, self.n_shards):
-                shard = self._shards[si]
-                # ONE shard's padded tensor lives on device at a time
-                # (rebuilt per candidate chunk by design: caching every
-                # shard's device tensor would void the memory bound)
-                def _i32(a):
-                    return sweep_core.device_put(
-                        a if a.dtype == np.int32 else a.astype(np.int32))
-                evs = (_i32(shard["kind"]), _i32(shard["slot"]),
-                       _i32(shard["c"]), _i32(shard["l"]),
-                       _i32(shard["p"]), _i32(shard["m"]))
                 with rec.span("stream.shard", shard=si, chunk=ci):
-                    carry = sweep(evs, group_j, *carry, sgb_j, pgb_j)
+                    with rec.span("stream.upload_wait", shard=si):
+                        evs, up0, up1, nbytes = fut.result()
+                    if rec.enabled:
+                        rec.add_span("stream.upload", up0, up1, shard=si)
+                        rec.count("device_put.calls", 6)
+                        rec.count("device_put.bytes", nbytes)
+                    if si + 1 < self.n_shards:
+                        fut = pool.submit(_upload_job,
+                                          self._shard_host(si + 1),
+                                          sh_rep)
+                    with rec.span("stream.compute", shard=si):
+                        carry = sweep(evs, group_j, *carry, sgb_j, pgb_j)
+                        if rec.enabled:
+                            carry[0].block_until_ready()
                 cand_events += self.shard_pad_events * width
                 if debug:
                     self._debug_check_carry(carry[0], carry[1],
@@ -2097,17 +2395,23 @@ class CompiledReplayStream:
             inc_j = sweep_core.device_put(inc_w)
             sgb_j = sweep_core.device_put(sgb_w)
             pgb_j = sweep_core.device_put(pgb_w)
+            pool = _upload_pool()
+            fut = pool.submit(_upload_job, self._shard_host(0))
             for si in range(self.n_shards):
-                shard = self._shards[si]
-
-                def _i32(a):
-                    return sweep_core.device_put(
-                        a if a.dtype == np.int32 else a.astype(np.int32))
-                evs = (_i32(shard["kind"]), _i32(shard["slot"]),
-                       _i32(shard["c"]), _i32(shard["l"]),
-                       _i32(shard["p"]), _i32(shard["m"]))
                 with rec.span("stream.fleet.shard", shard=si):
-                    carry = sweep(evs, inc_j, *carry, sgb_j, pgb_j)
+                    with rec.span("stream.upload_wait", shard=si):
+                        evs, up0, up1, nbytes = fut.result()
+                    if rec.enabled:
+                        rec.add_span("stream.upload", up0, up1, shard=si)
+                        rec.count("device_put.calls", 6)
+                        rec.count("device_put.bytes", nbytes)
+                    if si + 1 < self.n_shards:
+                        fut = pool.submit(_upload_job,
+                                          self._shard_host(si + 1))
+                    with rec.span("stream.compute", shard=si):
+                        carry = sweep(evs, inc_j, *carry, sgb_j, pgb_j)
+                        if rec.enabled:
+                            carry[0].block_until_ready()
                 cand_events += self.shard_pad_events * width
                 if reject_cap is not None:
                     if (np.asarray(carry[5])[:kc] > reject_cap).all():
@@ -2215,25 +2519,64 @@ class CompiledReplayBatch:
         self._exact = all(e._exact for e in engines)
         self._jax_batch = None
         self._jax_batch_fail = None
+        self._jax_host = None
+        self._jax_placed = None
 
-    def _jax_batch_events(self):
-        """Stack per-trace padded event streams to one (K, E_max) tensor."""
-        if self._jax_batch is not None:
-            return self._jax_batch
+    def _jax_batch_host(self):
+        """Host-side (K, E_max) stacked int32 event columns + metadata;
+        built once, shared by every device placement."""
+        if self._jax_host is not None:
+            return self._jax_host
         per = [e._jax_events() for e in self.engines]
         e_max = max(p[0][0].shape[0] for p in per)
         n_slots = max(p[2] for p in per)
         s_pad, g_pad = per[0][3], per[0][4]
         fills = (PAD, 0, 0, 0, 0, 0)     # kind pads with no-op events
-        streams = []
+        cols = []
         for j, fill in enumerate(fills):
             col = np.full((self.k, e_max), fill, np.int32)
             for i, p in enumerate(per):
                 arr = np.asarray(p[0][j])
                 col[i, :arr.shape[0]] = arr
-            streams.append(sweep_core.device_put(col))
-        self._jax_batch = (tuple(streams), per[0][1], n_slots, s_pad, g_pad)
+            cols.append(col)
+        self._jax_host = (cols, np.asarray(per[0][1]), n_slots, s_pad,
+                          g_pad)
+        return self._jax_host
+
+    def _jax_batch_events(self):
+        """Stack per-trace padded event streams to one (K, E_max) tensor."""
+        if self._jax_batch is not None:
+            return self._jax_batch
+        cols, group, n_slots, s_pad, g_pad = self._jax_batch_host()
+        self._jax_batch = (tuple(sweep_core.device_put(c) for c in cols),
+                           sweep_core.device_put(group), n_slots, s_pad,
+                           g_pad)
         return self._jax_batch
+
+    def _jax_batch_placed(self, mesh, k_pad, row_sharded):
+        """Sharded placement of the stacked tensor: trace rows padded to
+        ``k_pad`` with no-op events and row-sharded over ``mesh``
+        (trace plan) or replicated (lane plan).  One placement is kept
+        at a time, keyed by mesh + layout."""
+        key = (mesh, k_pad, row_sharded)
+        if self._jax_placed is not None and self._jax_placed[0] == key:
+            return self._jax_placed[1]
+        cols, group, n_slots, s_pad, g_pad = self._jax_batch_host()
+        fills = (PAD, 0, 0, 0, 0, 0)
+        sh = (sweep_core.named_sharding(mesh, "shard") if row_sharded
+              else sweep_core.named_sharding(mesh))
+        streams = []
+        for col, fill in zip(cols, fills):
+            if k_pad > self.k:
+                col = np.concatenate([col, np.full(
+                    (k_pad - self.k, col.shape[1]), fill, np.int32)])
+            streams.append(sweep_core.device_put(col, sh))
+        data = (tuple(streams),
+                sweep_core.device_put(group,
+                                      sweep_core.named_sharding(mesh)),
+                n_slots, s_pad, g_pad)
+        self._jax_placed = (key, data)
+        return data
 
     def _pick_state_dtype(self, sgb_i: np.ndarray,
                           pgb_i: np.ndarray) -> str:
@@ -2243,8 +2586,15 @@ class CompiledReplayBatch:
     def reject_rates(self, server_gb, pool_gb,
                      reject_cap: int | None = None,
                      backend: str = "auto",
-                     state_dtype: str | None = None) -> np.ndarray:
+                     state_dtype: str | None = None,
+                     devices=None) -> np.ndarray:
         """Reject fraction per (trace, candidate): shape ``(K, n_cand)``.
+
+        ``devices`` shards the vmapped sweep over a JAX device mesh
+        (``"all"``, an int, or a device list): the K-trace axis when
+        ``K >= n_devices`` (rows pad to a multiple of the mesh size
+        with no-op traces), else the candidate-lane axis.  Bit-exact
+        (==) vs single-device; ignored by the numpy fallback.
 
         ``server_gb``/``pool_gb`` broadcast like the single-trace API and
         additionally accept ``(K, n_cand)`` per-trace candidate grids.
@@ -2276,29 +2626,71 @@ class CompiledReplayBatch:
                                  reject_cap=reject_cap, backend=backend)
                 for i, eng in enumerate(self.engines)])
         t0 = time.perf_counter()
-        evs, group_of, n_slots, s_pad, g_pad = self._jax_batch_events()
         rejects = np.empty((self.k, n0), np.int64)
         sgb_i, pgb_i = sweep_core.quantize_capacities(server_gb, pool_gb)
         dt_name = state_dtype or self._pick_state_dtype(sgb_i, pgb_i)
         np_dt = sweep_core.state_np_dtype(dt_name)
-        sweep = sweep_core.get_sweep(dt_name, batched=True)
+        devs = sweep_core.resolve_devices(devices)
+        # trace plan: split the K rows over the mesh (pad K up to a
+        # mesh-size multiple with no-op traces); a small batch on a big
+        # mesh splits the candidate-lane axis instead
+        plan = None
+        k_pad = self.k
+        tr_mesh = sh_row = None
+        if devs is not None:
+            plan = "trace" if self.k >= len(devs) else "lane"
+        if plan == "trace":
+            n_use = min(len(devs), self.k)
+            tr_mesh = sweep_core.shard_mesh(devs[:n_use])
+            sh_row = sweep_core.named_sharding(tr_mesh, "shard")
+            k_pad = -(-self.k // n_use) * n_use
+            evs, group_of, n_slots, s_pad, g_pad = \
+                self._jax_batch_placed(tr_mesh, k_pad, True)
+        else:
+            evs, group_of, n_slots, s_pad, g_pad = \
+                self._jax_batch_events()
         for lo, hi, width in sweep_core.candidate_chunks(n0):
             kc = hi - lo
+            mesh = sh_state = sh_slot = sh_cap = None
+            evs_m, group_m = evs, group_of
+            if plan == "trace":
+                mesh = tr_mesh
+                sh_state = sweep_core.named_sharding(mesh)
+                sh_slot = sh_state
+                sh_cap = sh_row
+            elif plan == "lane":
+                n_lane = sweep_core.lane_shard_count(width, len(devs))
+                if n_lane >= 2:
+                    mesh = sweep_core.shard_mesh(devs[:n_lane])
+                    sh_state = sweep_core.named_sharding(mesh, "shard")
+                    sh_slot = sweep_core.named_sharding(mesh, None,
+                                                        "shard")
+                    sh_cap = sh_slot
+                    evs_m, group_m = self._jax_batch_placed(
+                        mesh, self.k, False)[:2]
+            sweep = sweep_core.get_sweep(
+                dt_name, batched=True, mesh=mesh,
+                shard_axis="trace" if plan == "trace" else "lane")
             sgb, pgb = sweep_core.lane_capacities(sgb_i, pgb_i, lo, hi,
                                                   width, np_dt)
+            if k_pad > self.k:      # no-op rows reuse the last real grid
+                sgb = np.concatenate(
+                    [sgb, np.repeat(sgb[-1:], k_pad - self.k, 0)])
+                pgb = np.concatenate(
+                    [pgb, np.repeat(pgb[-1:], k_pad - self.k, 0)])
             # the all-free initial state is SHARED across traces
             # (broadcast by the vmap), so no leading trace axis here
             fc0, um0, up0, slots0, _ = sweep_core.init_state(
                 width, self.n_servers, self.cores_per_server, s_pad,
                 g_pad, n_slots, np_dt)
-            out = sweep(evs, group_of,
-                        sweep_core.device_put(fc0),
-                        sweep_core.device_put(um0),
-                        sweep_core.device_put(up0),
-                        sweep_core.device_put(slots0),
-                        sweep_core.device_put(sgb),
-                        sweep_core.device_put(pgb))
-            rejects[:, lo:hi] = np.asarray(out)[:, :kc]
+            out = sweep(evs_m, group_m,
+                        sweep_core.device_put(fc0, sh_state),
+                        sweep_core.device_put(um0, sh_state),
+                        sweep_core.device_put(up0, sh_state),
+                        sweep_core.device_put(slots0, sh_slot),
+                        sweep_core.device_put(sgb, sh_cap),
+                        sweep_core.device_put(pgb, sh_cap))
+            rejects[:, lo:hi] = np.asarray(out)[:self.k, :kc]
         rates = rejects / np.maximum(self.n_vms, 1)[:, None]
         _STATS.sweeps += 1
         _STATS.events += int(self.n_events.max(initial=0))
@@ -2310,7 +2702,8 @@ class CompiledReplayBatch:
     @obs.traced("batch.fleet")
     def reject_rates_fleet(self, server_gb, pod_gb, topology,
                            backend: str = "auto",
-                           state_dtype: str | None = None) -> np.ndarray:
+                           state_dtype: str | None = None,
+                           devices=None) -> np.ndarray:
         """Fleet reject rates per (trace, candidate): ``(K, n_cand)``.
 
         The candidate grid — ``(server_gb, pod capacities, topology)``
@@ -2318,6 +2711,8 @@ class CompiledReplayBatch:
         (one topology frontier, K traces), matching the batched pod
         sweep's shared incidence tensor.  Row ``k`` equals
         ``engines[k].reject_rates_fleet(...)`` bit-for-bit.
+        ``devices`` shards the K-trace axis over a device mesh (rows
+        pad with no-op traces), bit-exact vs single-device.
         """
         t0 = time.perf_counter()
         sgb, caps, topos = _fleet_candidates(server_gb, pod_gb, topology)
@@ -2336,7 +2731,22 @@ class CompiledReplayBatch:
                 eng.reject_rates_fleet(sgb, per_lane, topos,
                                        backend=backend)
                 for eng in self.engines])
-        evs, _group_of, n_slots, s_pad, _g_pad = self._jax_batch_events()
+        devs = sweep_core.resolve_devices(devices)
+        mesh = sh_row = sh_rep = None
+        k_pad = self.k
+        if devs is not None:
+            n_use = min(len(devs), self.k)
+            if n_use >= 2:
+                mesh = sweep_core.shard_mesh(devs[:n_use])
+                sh_row = sweep_core.named_sharding(mesh, "shard")
+                sh_rep = sweep_core.named_sharding(mesh)
+                k_pad = -(-self.k // n_use) * n_use
+        if mesh is not None:
+            evs, _group_of, n_slots, s_pad, _g_pad = \
+                self._jax_batch_placed(mesh, k_pad, True)
+        else:
+            evs, _group_of, n_slots, s_pad, _g_pad = \
+                self._jax_batch_events()
         rejects = np.empty((self.k, n0), np.int64)
         inc, p_max = _fleet_incidence(topos, self.n_servers, s_pad)
         sgb_i, _ = sweep_core.quantize_capacities(sgb, np.zeros(n0))
@@ -2355,7 +2765,8 @@ class CompiledReplayBatch:
         p_pad = sweep_core.pad_up(p_max, sweep_core.LANE_PAD)
         pgb_i = np.zeros((n0, p_pad))
         pgb_i[:, :caps_i.shape[1]] = caps_i
-        sweep = sweep_core.get_pod_sweep(dt_name, batched=True)
+        sweep = sweep_core.get_pod_sweep(dt_name, batched=True,
+                                         mesh=mesh)
         for lo, hi, width in sweep_core.candidate_chunks(n0):
             kc = hi - lo
             sgb_w, pgb_w, inc_w = sweep_core.pod_lane_arrays(
@@ -2366,19 +2777,19 @@ class CompiledReplayBatch:
                 width, self.n_servers, self.cores_per_server, s_pad,
                 p_pad, n_slots, np_dt)
             out = sweep(evs,
-                        sweep_core.device_put(inc_w),
-                        sweep_core.device_put(fc0),
-                        sweep_core.device_put(um0),
-                        sweep_core.device_put(up0),
-                        sweep_core.device_put(slots0),
-                        sweep_core.device_put(pods0),
+                        sweep_core.device_put(inc_w, sh_rep),
+                        sweep_core.device_put(fc0, sh_rep),
+                        sweep_core.device_put(um0, sh_rep),
+                        sweep_core.device_put(up0, sh_rep),
+                        sweep_core.device_put(slots0, sh_rep),
+                        sweep_core.device_put(pods0, sh_rep),
                         sweep_core.device_put(
-                            np.broadcast_to(sgb_w, (self.k,) + sgb_w.shape
-                                            ).copy()),
+                            np.broadcast_to(sgb_w, (k_pad,) + sgb_w.shape
+                                            ).copy(), sh_row),
                         sweep_core.device_put(
-                            np.broadcast_to(pgb_w, (self.k,) + pgb_w.shape
-                                            ).copy()))
-            rejects[:, lo:hi] = np.asarray(out)[:, :kc]
+                            np.broadcast_to(pgb_w, (k_pad,) + pgb_w.shape
+                                            ).copy(), sh_row))
+            rejects[:, lo:hi] = np.asarray(out)[:self.k, :kc]
         rates = rejects / np.maximum(self.n_vms, 1)[:, None]
         _STATS.sweeps += 1
         _STATS.events += int(self.n_events.max(initial=0))
@@ -2510,10 +2921,13 @@ class CompiledReplayStreamBatch:
     local/pool GB, slot array, reject counters, each with a leading
     trace axis — threads shard-to-shard through a single vmapped
     ``lax.scan``.  A K-seed Azure-scale sweep therefore costs one pass
-    over the shard axis instead of K, while only one stacked shard
-    batch is ever materialized: peak event-tensor memory is
-    ``peak_shard_bytes = K * 6 * 4 * shard_pad_events``, set by the
-    budget and trace count, independent of trace length.
+    over the shard axis instead of K, while at most two stacked shard
+    batches are ever materialized (shard i computing while shard i+1
+    stacks + uploads on the double-buffer worker): steady-state
+    event-tensor memory is
+    ``peak_shard_bytes = K * 6 * 4 * shard_pad_events`` (transiently
+    2x), set by the budget and trace count, independent of trace
+    length.
 
     Bit-exactness contract: row ``k`` of :meth:`reject_rates` equals
     ``streams[k].reject_rates(...)`` — and hence the monolithic
@@ -2568,34 +2982,61 @@ class CompiledReplayStreamBatch:
                           pgb_i: np.ndarray) -> str:
         return _batch_pick_state_dtype(self.engines, sgb_i, pgb_i)
 
-    def _stacked_shard(self, si: int):
-        """One ``(K, shard_pad_events)`` stacked int32 event tensor.
+    def _stacked_shard_host(self, si: int, k_pad: int):
+        """Builder for one ``(k_pad, shard_pad_events)`` stacked int32
+        event tensor — runs on the upload worker so host packing
+        overlaps device compute.
 
-        Built per sweep call per shard index — never cached — so only
-        one stacked shard batch exists (host + device) at a time; rows
-        of streams with fewer than ``si + 1`` shards are all no-ops.
+        Built per sweep call per shard index — never cached — so at
+        most two stacked shard batches (the one computing and the one
+        uploading) exist at a time; rows of streams with fewer than
+        ``si + 1`` shards, and device-padding rows past ``self.k``, are
+        all no-ops.
         """
         e = self.shard_pad_events
-        cols = {key: np.zeros((self.k, e), np.int32)
-                for key in ("slot", "c", "l", "p", "m")}
-        cols["kind"] = np.full((self.k, e), PAD, np.int32)
-        for i, s in enumerate(self.engines):
-            if si >= s.n_shards:
-                continue
-            sh = s._shards[si]
-            n = len(sh["kind"])
-            for key, dst in cols.items():
-                dst[i, :n] = sh[key]
-        return tuple(sweep_core.device_put(cols[key])
-                     for key in ("kind", "slot", "c", "l", "p", "m"))
+
+        def build():
+            cols = {key: np.zeros((k_pad, e), np.int32)
+                    for key in ("slot", "c", "l", "p", "m")}
+            cols["kind"] = np.full((k_pad, e), PAD, np.int32)
+            for i, s in enumerate(self.engines):
+                if si >= s.n_shards:
+                    continue
+                sh = s._shards[si]
+                n = len(sh["kind"])
+                for key, dst in cols.items():
+                    dst[i, :n] = sh[key]
+            return tuple(cols[key] for key in
+                         ("kind", "slot", "c", "l", "p", "m"))
+
+        return build
+
+    def _carry_from_snaps(self, refs, boundary, width, k_pad, np_dt,
+                          dt_name):
+        """Stacked per-trace carry at a shard boundary: each real row
+        holds its stream's reference snapshot (clamped to the stream's
+        own shard count — trailing alignment shards are no-ops), and
+        device-padding rows start from the plain init state."""
+        rows = [_carry_from_snap(
+            refs[i]["snaps"][min(boundary, s.n_shards)], width,
+            self.n_servers, self.n_groups, self._s_pad, self._g_pad,
+            self._n_slots, np_dt, dt_name)
+            for i, s in enumerate(self.engines)]
+        if k_pad > self.k:
+            pad_row = sweep_core.init_state(
+                width, self.n_servers, self.cores_per_server,
+                self._s_pad, self._g_pad, self._n_slots, np_dt)
+            rows.extend([pad_row] * (k_pad - self.k))
+        return tuple(np.stack([r[j] for r in rows]) for j in range(5))
 
     @obs.traced("stream_batch.reject_rates")
     def reject_rates(self, server_gb, pool_gb,
                      reject_cap: int | None = None,
                      backend: str = "auto",
                      state_dtype: str | None = None,
-                     checkpoint: "CheckpointSpec | None" = None
-                     ) -> np.ndarray:
+                     checkpoint: "CheckpointSpec | None" = None,
+                     devices=None,
+                     skip_windows: bool = True) -> np.ndarray:
         """Reject fraction per (trace, candidate): shape ``(K, n_cand)``.
 
         Candidates broadcast like :meth:`CompiledReplayBatch.reject_rates`
@@ -2610,11 +3051,23 @@ class CompiledReplayStreamBatch:
         non-integral decisions) loops the per-stream float64 shard
         sweeps instead — same bit-exact rates, K passes instead of one.
 
+        ``devices`` shards the K-trace axis over a JAX device mesh
+        (rows pad to a mesh-size multiple with no-op traces), bit-exact
+        vs single-device; shard i+1's host stacking + upload always
+        pipelines with shard i's scan (obs spans ``stream.upload`` /
+        ``stream.compute``), so transient peak event memory is
+        ``2 * peak_shard_bytes``.  ``skip_windows`` (default on) skips
+        leading shards no (trace, candidate) lane can diverge on,
+        seeding the carry from per-trace reference snapshots — bit-exact
+        vs the unskipped sweep (without ``reject_cap``; with a cap both
+        paths meet the same lower-bound contract).
+
         ``checkpoint`` snapshots the batched carry + cursors like the
-        single-stream engine (resume is bit-identical); the numpy
-        fallback derives one per-stream spec per row
-        (``<path>.k<i>``).  ``POND_DEBUG_INVARIANTS=1`` verifies the
-        per-trace carry after every shard.
+        single-stream engine (resume is bit-identical and adapts across
+        differing ``devices`` row padding); the numpy fallback derives
+        one per-stream spec per row (``<path>.k<i>``).
+        ``POND_DEBUG_INVARIANTS=1`` verifies the per-trace carry after
+        every shard.
         """
         t0 = time.perf_counter()
         rec = obs.get_recorder()
@@ -2638,9 +3091,25 @@ class CompiledReplayStreamBatch:
         sgb_i, pgb_i = sweep_core.quantize_capacities(server_gb, pool_gb)
         dt_name = state_dtype or self._pick_state_dtype(sgb_i, pgb_i)
         np_dt = sweep_core.state_np_dtype(dt_name)
+        devs = sweep_core.resolve_devices(devices)
+        mesh = sh_row = sh_rep = None
+        k_pad = self.k
+        if devs is not None:
+            n_use = min(len(devs), self.k)
+            if n_use >= 2:
+                mesh = sweep_core.shard_mesh(devs[:n_use])
+                sh_row = sweep_core.named_sharding(mesh, "shard")
+                sh_rep = sweep_core.named_sharding(mesh)
+                k_pad = -(-self.k // n_use) * n_use
         sweep = sweep_core.get_sweep(dt_name, with_carry=True,
-                                     batched=True)
-        group_j = sweep_core.device_put(self._group_np)
+                                     batched=True, mesh=mesh,
+                                     shard_axis="trace")
+        group_j = sweep_core.device_put(self._group_np, sh_rep)
+        refs = None
+        if skip_windows and self._exact:
+            refs = [_stream_reference(s) for s in self.engines]
+            if not all(r is not None for r in refs):
+                refs = None
         rejects = np.empty((self.k, n0), np.int64)
         cand_events = 0
         io = None
@@ -2661,6 +3130,7 @@ class CompiledReplayStreamBatch:
         if debug:
             for s in self.engines:
                 s._debug_check_events()
+        pool = _upload_pool()
         for ci, (lo, hi, width) in enumerate(
                 sweep_core.candidate_chunks(n0)):
             if ci < start_chunk:
@@ -2668,25 +3138,69 @@ class CompiledReplayStreamBatch:
             kc = hi - lo
             sgb, pgb = sweep_core.lane_capacities(sgb_i, pgb_i, lo, hi,
                                                   width, np_dt)
+            if k_pad > self.k:      # no-op rows reuse the last real grid
+                sgb = np.concatenate(
+                    [sgb, np.repeat(sgb[-1:], k_pad - self.k, 0)])
+                pgb = np.concatenate(
+                    [pgb, np.repeat(pgb[-1:], k_pad - self.k, 0)])
             if resumed is not None:
-                carry = tuple(sweep_core.device_put(a) for a in resumed)
+                carry0 = _pad_carry_rows(
+                    resumed, k_pad, sweep_core.init_state(
+                        width, self.n_servers, self.cores_per_server,
+                        self._s_pad, self._g_pad, self._n_slots, np_dt,
+                        k=k_pad))
                 shard_from, resumed = start_shard, None
+            elif refs is not None:
+                # divergence window: skip shards no (trace, lane) pair
+                # can diverge on, seeding per-trace boundary snapshots
+                shard_from = min(
+                    _skip_count(r, sgb_i[i, lo:hi].min(),
+                                pgb_i[i, lo:hi].min(), self.n_shards)
+                    for i, r in enumerate(refs))
+                carry0 = self._carry_from_snaps(refs, shard_from, width,
+                                                k_pad, np_dt, dt_name)
+                if shard_from and rec.enabled:
+                    rec.count("stream.shards_skipped", shard_from)
+                    rec.count(
+                        "stream.events_skipped",
+                        shard_from * self.k * self.shard_pad_events
+                        * width)
             else:
                 # PER-TRACE carry (leading K axis), donated
                 # shard-to-shard
-                carry = tuple(sweep_core.device_put(a)
-                              for a in sweep_core.init_state(
-                                  width, self.n_servers,
-                                  self.cores_per_server, self._s_pad,
-                                  self._g_pad, self._n_slots, np_dt,
-                                  k=self.k))
+                carry0 = sweep_core.init_state(
+                    width, self.n_servers, self.cores_per_server,
+                    self._s_pad, self._g_pad, self._n_slots, np_dt,
+                    k=k_pad)
                 shard_from = 0
-            sgb_j = sweep_core.device_put(sgb)
-            pgb_j = sweep_core.device_put(pgb)
+            carry = tuple(sweep_core.device_put(a, sh_row)
+                          for a in carry0)
+            sgb_j = sweep_core.device_put(sgb, sh_row)
+            pgb_j = sweep_core.device_put(pgb, sh_row)
+            fut = None
+            if shard_from < self.n_shards:
+                fut = pool.submit(
+                    _upload_job, self._stacked_shard_host(shard_from,
+                                                          k_pad), sh_row)
             for si in range(shard_from, self.n_shards):
-                evs = self._stacked_shard(si)
                 with rec.span("stream_batch.shard", shard=si, chunk=ci):
-                    carry = sweep(evs, group_j, *carry, sgb_j, pgb_j)
+                    with rec.span("stream.upload_wait", shard=si):
+                        evs, up0, up1, nbytes = fut.result()
+                    if rec.enabled:
+                        rec.add_span("stream.upload", up0, up1, shard=si)
+                        rec.count("device_put.calls", 6)
+                        rec.count("device_put.bytes", nbytes)
+                    if si + 1 < self.n_shards:
+                        # double buffering: stack + upload shard i+1
+                        # while shard i's scan runs
+                        fut = pool.submit(
+                            _upload_job,
+                            self._stacked_shard_host(si + 1, k_pad),
+                            sh_row)
+                    with rec.span("stream.compute", shard=si):
+                        carry = sweep(evs, group_j, *carry, sgb_j, pgb_j)
+                        if rec.enabled:
+                            carry[0].block_until_ready()
                 cand_events += self.k * self.shard_pad_events * width
                 if debug:
                     sweep_core.check_invariants(
@@ -2705,11 +3219,11 @@ class CompiledReplayStreamBatch:
                         **{f"carry{j}": np.asarray(c)
                            for j, c in enumerate(carry)}})
                 if reject_cap is not None:
-                    rej_now = np.asarray(carry[4])[:, :kc]
+                    rej_now = np.asarray(carry[4])[:self.k, :kc]
                     if (rej_now > reject_cap).all():
                         rec.count("stream.reject_cap_exits")
                         break               # every lane decided
-            rejects[:, lo:hi] = np.asarray(carry[4])[:, :kc]
+            rejects[:, lo:hi] = np.asarray(carry[4])[:self.k, :kc]
         if io is not None:
             io.done()
         rates = rejects / np.maximum(self.n_vms, 1)[:, None]
@@ -2724,7 +3238,8 @@ class CompiledReplayStreamBatch:
     def reject_rates_fleet(self, server_gb, pod_gb, topology,
                            reject_cap: int | None = None,
                            backend: str = "auto",
-                           state_dtype: str | None = None) -> np.ndarray:
+                           state_dtype: str | None = None,
+                           devices=None) -> np.ndarray:
         """Fleet reject rates per (trace, candidate): ``(K, n_cand)``,
         one vmapped pod scan per stacked shard.
 
@@ -2733,7 +3248,9 @@ class CompiledReplayStreamBatch:
         pod carry threads shard-to-shard.  Row ``k`` equals
         ``streams[k].reject_rates_fleet(...)`` bit-for-bit; with
         ``reject_cap`` the stream stops once every (trace, candidate)
-        lane exceeds the cap.
+        lane exceeds the cap.  ``devices`` shards the K-trace axis over
+        a device mesh (no-op padding rows), bit-exact vs single-device;
+        shard uploads double-buffer with the scan like the plain path.
         """
         t0 = time.perf_counter()
         sgb, caps, topos = _fleet_candidates(server_gb, pod_gb, topology)
@@ -2773,36 +3290,64 @@ class CompiledReplayStreamBatch:
         p_pad = sweep_core.pad_up(p_max, sweep_core.LANE_PAD)
         pgb_i = np.zeros((n0, p_pad))
         pgb_i[:, :caps_i.shape[1]] = caps_i
+        devs = sweep_core.resolve_devices(devices)
+        mesh = sh_row = sh_rep = None
+        k_pad = self.k
+        if devs is not None:
+            n_use = min(len(devs), self.k)
+            if n_use >= 2:
+                mesh = sweep_core.shard_mesh(devs[:n_use])
+                sh_row = sweep_core.named_sharding(mesh, "shard")
+                sh_rep = sweep_core.named_sharding(mesh)
+                k_pad = -(-self.k // n_use) * n_use
         sweep = sweep_core.get_pod_sweep(dt_name, with_carry=True,
-                                         batched=True)
+                                         batched=True, mesh=mesh)
         cand_events = 0
+        pool = _upload_pool()
         for lo, hi, width in sweep_core.candidate_chunks(n0):
             kc = hi - lo
             sgb_w, pgb_w, inc_w = sweep_core.pod_lane_arrays(
                 sgb_i, pgb_i, inc, lo, hi, width, np_dt)
             # PER-TRACE carry (leading K axis), donated shard-to-shard;
             # the incidence tensor stays shared across traces
-            carry = tuple(sweep_core.device_put(a)
+            carry = tuple(sweep_core.device_put(a, sh_row)
                           for a in sweep_core.init_pod_state(
                               width, self.n_servers,
                               self.cores_per_server, self._s_pad,
-                              p_pad, self._n_slots, np_dt, k=self.k))
-            inc_j = sweep_core.device_put(inc_w)
+                              p_pad, self._n_slots, np_dt, k=k_pad))
+            inc_j = sweep_core.device_put(inc_w, sh_rep)
             sgb_j = sweep_core.device_put(
-                np.broadcast_to(sgb_w, (self.k,) + sgb_w.shape).copy())
+                np.broadcast_to(sgb_w, (k_pad,) + sgb_w.shape).copy(),
+                sh_row)
             pgb_j = sweep_core.device_put(
-                np.broadcast_to(pgb_w, (self.k,) + pgb_w.shape).copy())
+                np.broadcast_to(pgb_w, (k_pad,) + pgb_w.shape).copy(),
+                sh_row)
+            fut = pool.submit(_upload_job,
+                              self._stacked_shard_host(0, k_pad), sh_row)
             for si in range(self.n_shards):
-                evs = self._stacked_shard(si)
                 with rec.span("stream_batch.fleet.shard", shard=si):
-                    carry = sweep(evs, inc_j, *carry, sgb_j, pgb_j)
+                    with rec.span("stream.upload_wait", shard=si):
+                        evs, up0, up1, nbytes = fut.result()
+                    if rec.enabled:
+                        rec.add_span("stream.upload", up0, up1, shard=si)
+                        rec.count("device_put.calls", 6)
+                        rec.count("device_put.bytes", nbytes)
+                    if si + 1 < self.n_shards:
+                        fut = pool.submit(
+                            _upload_job,
+                            self._stacked_shard_host(si + 1, k_pad),
+                            sh_row)
+                    with rec.span("stream.compute", shard=si):
+                        carry = sweep(evs, inc_j, *carry, sgb_j, pgb_j)
+                        if rec.enabled:
+                            carry[0].block_until_ready()
                 cand_events += self.k * self.shard_pad_events * width
                 if reject_cap is not None:
-                    rej_now = np.asarray(carry[5])[:, :kc]
+                    rej_now = np.asarray(carry[5])[:self.k, :kc]
                     if (rej_now > reject_cap).all():
                         rec.count("stream.reject_cap_exits")
                         break
-            rejects[:, lo:hi] = np.asarray(carry[5])[:, :kc]
+            rejects[:, lo:hi] = np.asarray(carry[5])[:self.k, :kc]
         rates = rejects / np.maximum(self.n_vms, 1)[:, None]
         _STATS.sweeps += 1
         _STATS.events += int(self.n_events.max(initial=0))

@@ -246,7 +246,8 @@ _CARRY_ARGNUMS = (2, 3, 4, 5, 6)
 
 
 def get_sweep(state_dtype: str = "int32", *, with_carry: bool = False,
-              batched: bool = False):
+              batched: bool = False, mesh=None,
+              shard_axis: str = "trace"):
     """Jitted sweep from the keyed cache, or None when jax is missing.
 
     ONE cache keyed by ``(state_dtype, with_carry, batched)`` serves
@@ -263,16 +264,33 @@ def get_sweep(state_dtype: str = "int32", *, with_carry: bool = False,
     * ``(dt, True, True)`` — vmapped shard sweep with a PER-TRACE carry
       (``CompiledReplayStreamBatch``): K streams thread one batched
       carry shard-to-shard; carry args donated.
+
+    With ``mesh`` set (a 1-D :func:`shard_mesh`), the (possibly
+    vmapped) sweep is additionally wrapped in ``shard_map`` over the
+    mesh's ``"shard"`` axis before jitting — partitioning either the
+    leading trace axis (``shard_axis="trace"``: per-device slices of
+    the K event rows, capacities and carry) or the candidate-lane axis
+    (``shard_axis="lane"``: events replicated, state lanes split).
+    Lanes and trace rows replay independently (the best-fit argmin
+    runs over the never-sharded server axis), so sharded sweeps are
+    bit-exact vs the single-device jit; sharded variants get their own
+    cache keys (``(..., device_ids, axis)``).
     """
     if not jax_importable():
         return None
-    key = (state_dtype, with_carry, batched)
+    if mesh is None:
+        key = (state_dtype, with_carry, batched)
+        flags = dict(carry=with_carry, batched=batched)
+    else:
+        key = (state_dtype, with_carry, batched, _mesh_key(mesh),
+               shard_axis)
+        flags = dict(carry=with_carry, batched=batched,
+                     mesh=f"{shard_axis}{mesh.size}")
     fn = _SWEEPS.get(key)
     rec = obs.get_recorder()
     if fn is None:
         import jax
-        stem = _jit_key_name("sweep", state_dtype, carry=with_carry,
-                             batched=batched)
+        stem = _jit_key_name("sweep", state_dtype, **flags)
         if rec.enabled:
             rec.count(stem + ".miss")
         with rec.span(stem + ".build"):
@@ -284,20 +302,26 @@ def get_sweep(state_dtype: str = "int32", *, with_carry: bool = False,
                 base = jax.vmap(base,
                                 in_axes=((0, 0, 0, 0, 0, 0), None,
                                          None, None, None, None, 0, 0))
+            if mesh is not None:
+                from jax.experimental.shard_map import shard_map
+                in_specs, out_specs = _plain_shard_specs(
+                    jax.sharding.PartitionSpec, with_carry, batched,
+                    shard_axis)
+                base = shard_map(base, mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
             fn = jax.jit(base, donate_argnums=_CARRY_ARGNUMS
                          if with_carry else ())
         if rec.enabled:
             fn = _FirstCallTimer(fn, stem + ".lower")
         _SWEEPS[key] = fn
     elif rec.enabled:
-        rec.count(_jit_key_name("sweep", state_dtype, carry=with_carry,
-                                batched=batched) + ".hit")
+        rec.count(_jit_key_name("sweep", state_dtype, **flags) + ".hit")
     return fn
 
 
 def jit_cache_keys() -> list:
     """Keys compiled so far (introspection for tests/benchmarks)."""
-    return sorted(_SWEEPS)
+    return sorted(_SWEEPS, key=repr)
 
 
 # ------------------------------------------------------------ failure sweep --
@@ -683,7 +707,8 @@ _POD_CARRY_ARGNUMS = (2, 3, 4, 5, 6, 7)
 
 
 def get_pod_sweep(state_dtype: str = "int32", *,
-                  with_carry: bool = False, batched: bool = False):
+                  with_carry: bool = False, batched: bool = False,
+                  mesh=None):
     """Jitted pod sweep from the keyed cache (None without jax).
 
     Same four variants as :func:`get_sweep` — monolithic, carry
@@ -692,16 +717,27 @@ def get_pod_sweep(state_dtype: str = "int32", *,
     batched)``.  The incidence tensor is shared across traces in the
     batched variants (one topology grid, K traces); candidate
     capacities stay per trace.
+
+    ``mesh`` (batched variants only) wraps the vmapped sweep in
+    ``shard_map`` over the leading trace axis, like
+    :func:`get_sweep` with ``shard_axis="trace"`` — the fleet engines
+    shard only the trace axis (the incidence tensor stays replicated).
     """
     if not jax_importable():
         return None
-    key = (state_dtype, with_carry, batched)
+    if mesh is None:
+        key = (state_dtype, with_carry, batched)
+        flags = dict(carry=with_carry, batched=batched)
+    else:
+        key = (state_dtype, with_carry, batched, _mesh_key(mesh),
+               "trace")
+        flags = dict(carry=with_carry, batched=batched,
+                     mesh=f"trace{mesh.size}")
     fn = _POD_SWEEPS.get(key)
     rec = obs.get_recorder()
     if fn is None:
         import jax
-        stem = _jit_key_name("pod", state_dtype, carry=with_carry,
-                             batched=batched)
+        stem = _jit_key_name("pod", state_dtype, **flags)
         if rec.enabled:
             rec.count(stem + ".miss")
         with rec.span(stem + ".build"):
@@ -713,20 +749,25 @@ def get_pod_sweep(state_dtype: str = "int32", *,
                 base = jax.vmap(base, in_axes=((0, 0, 0, 0, 0, 0), None,
                                                None, None, None, None,
                                                None, 0, 0))
+            if mesh is not None:
+                from jax.experimental.shard_map import shard_map
+                in_specs, out_specs = _pod_shard_specs(
+                    jax.sharding.PartitionSpec, with_carry)
+                base = shard_map(base, mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
             fn = jax.jit(base, donate_argnums=_POD_CARRY_ARGNUMS
                          if with_carry else ())
         if rec.enabled:
             fn = _FirstCallTimer(fn, stem + ".lower")
         _POD_SWEEPS[key] = fn
     elif rec.enabled:
-        rec.count(_jit_key_name("pod", state_dtype, carry=with_carry,
-                                batched=batched) + ".hit")
+        rec.count(_jit_key_name("pod", state_dtype, **flags) + ".hit")
     return fn
 
 
 def pod_jit_cache_keys() -> list:
     """Pod-sweep keys compiled so far (introspection for tests)."""
-    return sorted(_POD_SWEEPS)
+    return sorted(_POD_SWEEPS, key=repr)
 
 
 def pick_pod_state_dtype(cores_per_server: float, n_servers: int,
@@ -1049,7 +1090,7 @@ def assign_slots(ev_kind, ev_vm, n_vms: int) -> tuple:
 
 
 # -------------------------------------------------------------- placement --
-def device_put(x):
+def device_put(x, sharding=None):
     """Place a host array on jax's default device, explicitly.
 
     One shared entry point so every engine uploads event shards and
@@ -1059,6 +1100,11 @@ def device_put(x):
     device-resident across shards and peak device memory bounded by
     one shard (batch) plus the carry.
 
+    ``sharding`` (a :func:`named_sharding`) places the array across a
+    device mesh instead — sliced along the spec'd axis or replicated —
+    so sharded sweeps receive inputs already laid out the way their
+    ``shard_map`` expects (no resharding transfer inside the jit).
+
     With tracing on, the transfer volume feeds ``device_put.calls`` /
     ``device_put.bytes`` (host-side nbytes of the placed array).
     """
@@ -1067,4 +1113,131 @@ def device_put(x):
     if rec.enabled:
         rec.count("device_put.calls")
         rec.count("device_put.bytes", int(getattr(x, "nbytes", 0)))
-    return jax.device_put(x)
+    if sharding is None:
+        return jax.device_put(x)
+    return jax.device_put(x, sharding)
+
+
+# --------------------------------------------------------------- sharding --
+_MESHES: dict = {}     # device-id tuple -> cached 1-D "shard"-axis Mesh
+
+
+def make_mesh(shape, axes, devices=None):
+    """``jax.make_mesh`` across jax versions (the single mesh shim —
+    ``launch/mesh.py`` re-exports it): ``AxisType`` only exists on
+    jax >= 0.5 (where Auto is the default anyway).  ``devices`` narrows
+    the mesh to an explicit device list (default: all visible)."""
+    import jax
+    kw = {} if devices is None else {"devices": devices}
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes), **kw)
+    return jax.make_mesh(shape, axes, **kw)
+
+
+def resolve_devices(devices):
+    """Normalize an engine ``devices=`` argument to a device list.
+
+    ``None`` -> no sharding; ``"all"`` -> every visible jax device;
+    an int -> the first n visible devices; a sequence of jax devices
+    passes through.  Fewer than 2 resolved devices degrades to
+    ``None`` (the single-device path), so ``devices="all"`` is safe on
+    any host — on CPU-only machines, force a device pool with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    if devices is None or not jax_importable():
+        return None
+    import jax
+    if isinstance(devices, str):
+        if devices != "all":
+            raise ValueError(
+                f"devices={devices!r}: expected 'all', an int, a "
+                "device sequence, or None")
+        devs = list(jax.devices())
+    elif isinstance(devices, int):
+        devs = list(jax.devices())[:devices]
+    else:
+        devs = list(devices)
+    return devs if len(devs) >= 2 else None
+
+
+def shard_mesh(devs):
+    """Cached 1-D mesh over ``devs`` with a single ``"shard"`` axis —
+    the only mesh shape the sweep sharding uses (the batch axes being
+    partitioned are 1-D)."""
+    key = tuple(d.id for d in devs)
+    mesh = _MESHES.get(key)
+    if mesh is None:
+        mesh = make_mesh((len(devs),), ("shard",), devices=devs)
+        _MESHES[key] = mesh
+    return mesh
+
+
+def lane_shard_count(width: int, n_devices: int) -> int:
+    """Largest device count <= ``n_devices`` evenly dividing a lane
+    bucket — the lane axis must split evenly across the mesh."""
+    n = max(1, min(n_devices, width))
+    while width % n:
+        n -= 1
+    return n
+
+
+def named_sharding(mesh, *spec):
+    """``NamedSharding(mesh, PartitionSpec(*spec))`` — e.g.
+    ``named_sharding(mesh, "shard")`` slices dim 0 across the mesh,
+    ``named_sharding(mesh)`` replicates, ``named_sharding(mesh, None,
+    "shard")`` slices dim 1."""
+    import jax
+    return jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec(*spec))
+
+
+def _mesh_key(mesh):
+    return tuple(d.id for d in mesh.devices.flat)
+
+
+def _plain_shard_specs(P, with_carry: bool, batched: bool, axis: str):
+    """``shard_map`` (in_specs, out_specs) for the plain sweep family.
+
+    ``axis="trace"`` partitions the leading K axis of the event rows,
+    candidate capacities and (carry variants) every state array; the
+    shared-init batched variant keeps its trace-free initial state
+    replicated.  ``axis="lane"`` replicates the event stream and
+    splits the candidate-lane axis of the state — dim 0 of the lane
+    arrays (dim 1 after a leading trace axis), dim 1 of the
+    ``(n_slots, W)`` slot array (dim 2 batched).  Either way the
+    sharded rows/lanes replay independently (the best-fit argmin runs
+    over the never-sharded server axis), so results are bit-exact.
+    """
+    S, R = P("shard"), P()
+    if axis == "trace":
+        if not batched:
+            raise ValueError("trace sharding requires batched=True")
+        ev = (S,) * 6
+        if with_carry:
+            return (ev, R, S, S, S, S, S, S, S), (S, S, S, S, S)
+        return (ev, R, R, R, R, R, S, S), S
+    if axis != "lane":
+        raise ValueError(f"unknown shard axis {axis!r}")
+    ev = (R,) * 6
+    if not batched:
+        L, Ls = S, P(None, "shard")
+        if with_carry:
+            return (ev, R, L, L, L, Ls, L, L, L), (L, L, L, Ls, L)
+        return (ev, R, L, L, L, Ls, L, L), L
+    L, Ls = P(None, "shard"), P(None, None, "shard")
+    if with_carry:
+        return (ev, R, L, L, L, Ls, L, L, L), (L, L, L, Ls, L)
+    # shared-init batched: the initial state has NO trace axis
+    return (ev, R, S, S, S, P(None, "shard"), L, L), L
+
+
+def _pod_shard_specs(P, with_carry: bool):
+    """``shard_map`` specs for the batched pod sweeps, trace axis only
+    (the incidence tensor stays replicated across devices)."""
+    S, R = P("shard"), P()
+    ev = (S,) * 6
+    if with_carry:
+        return (ev, R, S, S, S, S, S, S, S, S), (S, S, S, S, S, S)
+    return (ev, R, R, R, R, R, R, S, S), S

@@ -3,34 +3,20 @@
 Single pod = 16x16 (256 chips, v5e-256 topology); multi-pod = 2 pods x 256.
 A function (not a module-level constant) so importing never touches jax
 device state — the dry-run must set XLA_FLAGS before first jax init.
+
+The version-portable ``make_mesh`` shim lives in ``core/sweep_core.py``
+(the sharded sweep engine needs it too); this module re-exports it so
+launch-side callers keep a single import point.
 """
 from __future__ import annotations
 
-import jax
-
-
-def make_mesh(shape, axes):
-    """jax.make_mesh across jax versions: AxisType only exists on
-    jax >= 0.5 (where Auto is the default anyway)."""
-    if hasattr(jax.sharding, "AxisType"):
-        return jax.make_mesh(
-            shape, axes,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-    return jax.make_mesh(shape, axes)
+from repro.core.sweep_core import make_mesh, resolve_devices  # noqa: F401
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return make_mesh(shape, axes)
-
-
-def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over however many (CPU) devices exist — tests/examples."""
-    n = len(jax.devices())
-    if data * model > n:
-        raise ValueError(f"need {data * model} devices, have {n}")
-    return make_mesh((data, model), ("data", "model"))
 
 
 # TPU v5e hardware constants (roofline targets; see EXPERIMENTS.md §Roofline)

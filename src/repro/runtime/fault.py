@@ -64,11 +64,12 @@ def largest_mesh_shape(n_devices: int, model_parallel: int,
 
 def elastic_mesh(devices, model_parallel: int, multi_pod: bool = False):
     """Build the largest healthy mesh from surviving devices."""
+    from repro.core.sweep_core import make_mesh
+
     shape = largest_mesh_shape(len(devices), model_parallel, multi_pod)
     n = math.prod(shape)
-    devs = np.asarray(devices[:n]).reshape(shape)
     names = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
-    return jax.sharding.Mesh(devs, names)
+    return make_mesh(shape, names, devices=list(devices[:n]))
 
 
 # -------------------------------------------------------------- stragglers -

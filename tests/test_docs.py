@@ -33,7 +33,13 @@ def test_readme_covers_streaming_scale_out():
                   "stream_batch_", "benchmarks/azure_e2e.py",
                   # robustness layer: chaos tests + resumable sweeps
                   "CheckpointSpec", "--resume", "max_bad_rows",
-                  "-m chaos"):
+                  "-m chaos",
+                  # multi-device scale-out: sharded sweeps + the
+                  # forced-device-pool recipe + perf keys
+                  "devices=", "shard_map",
+                  "--xla_force_host_platform_device_count",
+                  "overlap_ratio", "skip_windows", "--what device",
+                  "--compilation-cache"):
         assert topic in text, f"README misses {topic!r}"
     # measured streaming numbers stay cited (events/s at K seeds x
     # N shards come from the perf-smoke artifact)
@@ -58,7 +64,13 @@ def test_replay_engine_doc_exists_and_covers_architecture():
                   # checkpoint/resume + the invariant guard
                   "CheckpointSpec", "SweepInterrupted",
                   "kill_after_shards", "POND_DEBUG_INVARIANTS",
-                  "SweepInvariantError"):
+                  "SweepInvariantError",
+                  # multi-device scale-out + the streaming pipeline
+                  "devices=", "shard_map", "lane_shard_count",
+                  "xla_force_host_platform_device_count",
+                  "double-buffer", "stream.overlap_ratio",
+                  "skip_windows", "shards_skipped",
+                  "test_device_shard"):
         assert topic.lower() in text.lower(), \
             f"docs/replay_engine.md misses {topic!r}"
     # the layer diagram names each layer of the stack
